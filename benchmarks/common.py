@@ -1,0 +1,97 @@
+"""Shared benchmark helpers: cached workload profiling (instruction counts,
+mix, memory) via the ISS."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core.carbon import DeviceProfile
+from repro.flexibench.base import Workload, all_workloads, get
+from repro.flexibench.memory import profile_memory
+from repro.flexibits.pyiss import PyISS
+
+CACHE_PATH = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                          "profile_cache.json")
+_CACHE: Dict[str, dict] = {}
+
+
+def _load_cache():
+    global _CACHE
+    if not _CACHE and os.path.exists(CACHE_PATH):
+        with open(CACHE_PATH) as f:
+            _CACHE = json.load(f)
+    return _CACHE
+
+
+def _save_cache():
+    os.makedirs(os.path.dirname(CACHE_PATH), exist_ok=True)
+    with open(CACHE_PATH, "w") as f:
+        json.dump(_CACHE, f, indent=1)
+
+
+def profile_program(code, mem0, mem_words, max_steps, out_addr=None):
+    sim = PyISS(code, mem_words, mem0).run(max_steps)
+    assert sim.halted, "program did not halt"
+    return {
+        "n_instr": sim.n_instr,
+        "n_two_stage": sim.n_two_stage,
+        "mix": sim.mix,
+        "out": int(np.int32(sim.mem[out_addr])) if out_addr is not None
+        else None,
+    }
+
+
+def workload_profile(key: str, n_avg: int = 3) -> dict:
+    """Averaged dynamic-instruction profile + memory for one workload."""
+    cache = _load_cache()
+    if key in cache:
+        return cache[key]
+    w = get(key)
+    rng = np.random.default_rng(0)
+    xs = w.gen_inputs(rng, n_avg)
+    counts, twos = [], []
+    mix_total: Dict[str, int] = {}
+    for x in xs:
+        r = profile_program(w.program.code, w.initial_memory(x),
+                            w.total_mem_words, w.max_steps)
+        counts.append(r["n_instr"])
+        twos.append(r["n_two_stage"])
+        for k, v in r["mix"].items():
+            mix_total[k] = mix_total.get(k, 0) + v
+    mem = profile_memory(w)
+    prof = {
+        "n_instr": float(np.mean(counts)),
+        "n_two_stage": float(np.mean(twos)),
+        "mix": mix_total,
+        **mem,
+    }
+    _CACHE[key] = prof
+    _save_cache()
+    return prof
+
+
+def device_profile(key: str) -> DeviceProfile:
+    p = workload_profile(key)
+    return DeviceProfile(
+        n_one_stage=p["n_instr"] - p["n_two_stage"],
+        n_two_stage=p["n_two_stage"],
+        vm_kb=p["vm_kb"],
+        nvm_kb=p["nvm_kb"],
+    )
+
+
+def all_profiles() -> Dict[str, dict]:
+    return {w.key: workload_profile(w.key) for w in all_workloads()}
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6

@@ -1,0 +1,52 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline source).
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and emits
+per-cell terms + bottleneck + useful-flops ratio. No jax involvement — the
+numbers were extracted at compile time.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+_BASE = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+ART_OPT = os.path.join(_BASE, "dryrun_opt")
+ART = ART_OPT if os.path.isdir(ART_OPT) else os.path.join(_BASE, "dryrun")
+
+
+def load_cells(pod: str = "pod1", art: str = None):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(art or ART,
+                                              f"*__{pod}.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        cells[f"{d['arch']}__{d['shape']}"] = d
+    return cells
+
+
+def roofline_table():
+    cells = load_cells("pod1")
+    rows = []
+    n_ok = n_skip = 0
+    worst = (None, 1.0)
+    for key, d in cells.items():
+        if d["status"] == "skip":
+            n_skip += 1
+            rows.append((f"roofline/{key}", 0, "skip"))
+            continue
+        if d["status"] != "ok":
+            rows.append((f"roofline/{key}", 0, f"error:{d.get('error')}"))
+            continue
+        n_ok += 1
+        r = d["roofline"]
+        rows.append((
+            f"roofline/{key}",
+            r["bound_step_s"],
+            f"{r['bottleneck']}|frac={r['roofline_fraction']:.4f}"
+            f"|useful={r['useful_ratio']:.3f}"))
+        if r["roofline_fraction"] < worst[1] and d["shape"] == "train_4k":
+            worst = (key, r["roofline_fraction"])
+    return rows, {"cells_ok": n_ok, "cells_skip": n_skip,
+                  "worst_train_cell": worst[0],
+                  "worst_train_fraction": worst[1]}

@@ -1,0 +1,36 @@
+"""Beyond-paper benchmark: lifetime-aware LLM serving fleet planner grid
+(core/planner.py) for minitron-8b, with W16/W8/W4 bit-plane variants."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.planner import VARIANTS, plan_grid
+
+
+def planner_grid():
+    n_params = 8.0e9
+    # minitron-8b KV bytes/token: 32 layers x 8 kv x 128 x 2 (k+v) x 2B
+    kv = 32 * 8 * 128 * 2 * 2
+    lifetimes = np.array([7, 30, 90, 365, 3 * 365], float)
+    qps = np.logspace(2, 6, 9)
+    plan = plan_grid(n_params=n_params, kv_bytes_per_token=kv,
+                     lifetimes_days=lifetimes, qps_grid=qps)
+    rows = []
+    for li, days in enumerate(lifetimes):
+        for qi, q in enumerate(qps):
+            vi = plan["variant_idx"][li, qi]
+            rows.append((f"planner/L{int(days)}d_q{q:.0e}",
+                         plan["total_kg"][li, qi],
+                         f"{plan['variants'][vi]}x{plan['chips'][li, qi]}"
+                         if vi >= 0 else "infeasible"))
+    # derived: short deployments pick narrower bit-widths at lower chip
+    # counts (embodied-dominated), mirroring Fig. 5's SERV region
+    short = plan["variant_idx"][0]
+    long_ = plan["variant_idx"][-1]
+    return rows, {
+        "short_lifetime_w4_cells": int((short == 2).sum()),
+        "long_lifetime_w4_cells": int((long_ == 2).sum()),
+        "lifetime_changes_choice": bool(
+            (plan["variant_idx"][0] != plan["variant_idx"][-1]).any()
+            or (plan["chips"][0] != plan["chips"][-1]).any()),
+    }

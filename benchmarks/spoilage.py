@@ -1,0 +1,59 @@
+"""Fig. 6 support: carbon + accuracy per spoilage algorithm variant.
+
+Carbon is total (embodied + operational) over a 1-year deployment at the
+FS task frequency (hourly), evaluated at each variant's carbon-optimal
+core; accuracy on a held-out synthetic test set.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core import carbon as C
+from repro.core.carbon import DeviceProfile
+from repro.core.selection import optimal_core
+from repro.flexibench.spoilage_algos import all_algos, gen_dataset
+from repro.flexibits.pyiss import PyISS
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                     "spoilage_cache.json")
+LIFETIME_S = 365 * 86_400.0
+EXECS_PER_DAY = 24.0
+
+
+def _profile_algo(algo) -> dict:
+    rng = np.random.default_rng(3)
+    x, _ = gen_dataset(rng, 1)
+    mem_words = (algo.program.ro_base // 4 + len(algo.program.ro_words)
+                 + max(algo.mem_words, 64))
+    mem = algo.program.initial_memory(mem_words).copy()
+    mem[:x.shape[1]] = x[0]
+    sim = PyISS(algo.program.code, mem_words, mem).run(algo.max_steps)
+    assert sim.halted, algo.name
+    return {"n_instr": sim.n_instr, "n_two_stage": sim.n_two_stage,
+            "nvm_kb": algo.program.nvm_bytes / 1024.0,
+            "vm_kb": algo.vm_reserved_bytes / 1024.0}
+
+
+def algo_carbon_accuracy() -> Dict[str, Tuple[float, float, str]]:
+    if os.path.exists(CACHE):
+        with open(CACHE) as f:
+            return {k: tuple(v) for k, v in json.load(f).items()}
+    rng = np.random.default_rng(99)
+    xte, yte = gen_dataset(rng, 4000)
+    out = {}
+    for algo in all_algos():
+        acc = float((algo.ref(xte) == yte).mean())
+        p = _profile_algo(algo)
+        prof = DeviceProfile(p["n_instr"] - p["n_two_stage"],
+                             p["n_two_stage"], p["vm_kb"], p["nvm_kb"])
+        core, totals = optimal_core(prof, lifetime_s=LIFETIME_S,
+                                    execs_per_day=EXECS_PER_DAY)
+        out[algo.name] = (acc, float(min(totals.values())), core.name)
+    os.makedirs(os.path.dirname(CACHE), exist_ok=True)
+    with open(CACHE, "w") as f:
+        json.dump(out, f, indent=1)
+    return out

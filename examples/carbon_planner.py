@@ -1,0 +1,50 @@
+"""Lifetime-aware planning at both extremes of the compute spectrum.
+
+Left: the paper's Fig. 5 — carbon-optimal FlexIC core per (lifetime, task
+frequency) for a FlexiBench workload. Right: the beyond-paper analogue —
+carbon-optimal (weight bit-width, chip count) for serving minitron-8b at a
+(lifetime, QPS) point, where one-time quantization-training carbon plays
+the embodied role.
+
+Run:  PYTHONPATH=src python examples/carbon_planner.py
+"""
+import numpy as np
+
+from repro.core.planner import plan_grid
+from repro.core.selection import selection_map
+from repro.core.carbon import DeviceProfile
+from repro.flexibench.base import get
+from repro.flexibits.pyiss import PyISS
+
+# ---- paper side: CT selection map
+ct = get("CT")
+x = ct.gen_inputs(np.random.default_rng(0), 1)[0]
+sim = PyISS(ct.program.code, ct.total_mem_words,
+            ct.initial_memory(x)).run()
+prof = DeviceProfile(sim.n_instr - sim.n_two_stage, sim.n_two_stage,
+                     vm_kb=0.6, nvm_kb=ct.nvm_kb)
+lifetimes = np.logspace(np.log10(86400.0), np.log10(4 * 365 * 86400), 12)
+freqs = np.logspace(0, 4, 12)
+m = selection_map(prof, lifetimes, freqs)
+names = np.array(["S", "Q", "H"])
+print("[fig5-style] cardiotocography: rows=lifetime (1d..4y), "
+      "cols=freq (1..10k/day)")
+for row in names[m]:
+    print("   ", "".join(row))
+
+# ---- beyond-paper: serving planner
+kv = 32 * 8 * 128 * 2 * 2
+plan = plan_grid(n_params=8e9, kv_bytes_per_token=kv,
+                 lifetimes_days=np.array([7.0, 90.0, 3 * 365.0]),
+                 qps_grid=np.logspace(2, 6, 9))
+print("[planner] minitron-8b serving: rows=lifetime {7d, 90d, 3y}, "
+      "cols=qps 1e2..1e6")
+for li in range(3):
+    row = []
+    for qi in range(9):
+        vi = plan["variant_idx"][li, qi]
+        row.append("-" if vi < 0 else
+                   f"{plan['variants'][vi]}/{plan['chips'][li, qi]}")
+    print("   ", " ".join(f"{r:8s}" for r in row))
+print("(W4 needs QAT carbon up front -> only long/hot deployments pick it;"
+      " exactly the paper's embodied-vs-operational crossover.)")

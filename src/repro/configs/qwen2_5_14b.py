@@ -1,0 +1,20 @@
+"""qwen2.5-14b: dense GQA LM with QKV bias [hf:Qwen/Qwen2.5 family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b",
+    family="dense",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=13824,
+    vocab=152064,
+    qkv_bias=True,
+    rope_theta=1e6,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=80, n_heads=4, n_kv_heads=2,
+                          d_ff=160, vocab=256, head_dim=20)

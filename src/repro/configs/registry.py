@@ -1,0 +1,50 @@
+"""Registry of assigned architectures (``--arch <id>``) and smoke variants."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (SHAPES, SHAPES_BY_NAME, ModelConfig,
+                                ShapeConfig, shape_applicable)
+
+_MODULES = {
+    "minitron-8b": "repro.configs.minitron_8b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).smoke_config()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES_BY_NAME[name]
+
+
+def cells():
+    """Yield every (arch, shape, applicable, why) dry-run cell — 40 total."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = shape_applicable(cfg, shape)
+            yield arch, shape.name, ok, why

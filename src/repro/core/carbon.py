@@ -1,0 +1,94 @@
+"""FLEXIFLOW carbon model (paper §5.4).
+
+  C_op  = Power x Runtime x Freq x Lifetime x CarbonIntensity
+  C_emb = DieArea / (ActiveWaferArea x Yield) x WaferCO2e
+
+Pragmatic's per-wafer LCA is proprietary; WAFER_KG is calibrated so the
+fully-flexible food-spoilage system footprint reproduces Table 5's
+0.01086 kg CO2e (DESIGN.md §5). Everything else is the paper's own data
+(Tables 7/8 areas & powers, [109]/[118] energy intensities, [85] silicon
+TinyML footprint, [37]/[58] battery LCAs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.flexibits.cycles import (Core, sram_power_mw, system_area_mm2,
+                                    system_power_mw)
+
+# ---- energy sources, kg CO2e / kWh ([109] EIA 2023, [118] Wind Vision)
+ENERGY_SOURCES: Dict[str, float] = {
+    "coal": 1.048,
+    "petroleum": 1.116,
+    "us_grid": 0.367,
+    "solar": 0.028,
+    "wind": 0.012,
+}
+
+# ---- embodied-carbon calibration (DESIGN.md §5)
+ACTIVE_WAFER_AREA_MM2 = 27_000.0     # 200 mm FlexIC wafer, active fraction
+WAFER_YIELD = 0.9
+WAFER_KG = 33.4                      # calibrated: flexible FS system 0.01086
+KG_PER_MM2 = WAFER_KG / (ACTIVE_WAFER_AREA_MM2 * WAFER_YIELD)
+
+# ---- non-compute components (§6.4 system models)
+BATTERY_FLEX_KG = 0.0025             # Ilika solid-state [58] (est.)
+BATTERY_ALKALINE_KG = 0.055          # AA alkaline [37] (est.)
+SENSOR_SILICON_KG = 0.069            # silicon gas sensor (est., [85])
+SILICON_TINYML_SYSTEM_KG = 2.66      # full silicon TinyML system [85]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """Per-(workload, core) numbers the carbon model consumes."""
+    n_one_stage: float               # one-stage instructions / execution
+    n_two_stage: float
+    vm_kb: float
+    nvm_kb: float
+
+
+def embodied_kg(area_mm2: float) -> float:
+    return area_mm2 * KG_PER_MM2
+
+
+def soc_embodied_kg(core: Core, prof: DeviceProfile) -> float:
+    return embodied_kg(system_area_mm2(core, prof.nvm_kb, prof.vm_kb))
+
+
+def runtime_s(core: Core, prof: DeviceProfile, clock_hz=10_000.0) -> float:
+    return core.runtime_s(prof.n_one_stage, prof.n_two_stage, clock_hz)
+
+
+def energy_per_exec_j(core: Core, prof: DeviceProfile,
+                      clock_hz=10_000.0) -> float:
+    p_mw = system_power_mw(core, prof.vm_kb)
+    return p_mw * 1e-3 * runtime_s(core, prof, clock_hz)
+
+
+def operational_kg(core: Core, prof: DeviceProfile, *, lifetime_s: float,
+                   execs_per_day: float, intensity: float = 0.367,
+                   clock_hz: float = 10_000.0) -> float:
+    n_exec = execs_per_day * lifetime_s / 86_400.0
+    kwh = energy_per_exec_j(core, prof, clock_hz) * n_exec / 3.6e6
+    return kwh * intensity
+
+
+def total_kg(core: Core, prof: DeviceProfile, *, lifetime_s: float,
+             execs_per_day: float, intensity: float = 0.367,
+             clock_hz: float = 10_000.0) -> float:
+    return soc_embodied_kg(core, prof) + operational_kg(
+        core, prof, lifetime_s=lifetime_s, execs_per_day=execs_per_day,
+        intensity=intensity, clock_hz=clock_hz)
+
+
+def flexible_system_kg(core: Core, prof: DeviceProfile, **kw) -> float:
+    """Fully-flexible system: SoC + flexible sensor (~= SoC, §6.4 fn 2) +
+    solid-state battery."""
+    return (total_kg(core, prof, **kw) + soc_embodied_kg(core, prof)
+            + BATTERY_FLEX_KG)
+
+
+def hybrid_system_kg(core: Core, prof: DeviceProfile, **kw) -> float:
+    return (total_kg(core, prof, **kw) + SENSOR_SILICON_KG
+            + BATTERY_ALKALINE_KG)

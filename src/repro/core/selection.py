@@ -1,0 +1,65 @@
+"""Lifetime-aware carbon-optimal core selection (paper §5.5, Fig. 5).
+
+Vectorized over (lifetime x frequency) grids with numpy (the grids are
+tiny); the *fleet-scale* vectorized variant (jnp over items with different
+lifetimes) lives in flexibits/fleet.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.carbon import DeviceProfile, operational_kg, soc_embodied_kg
+from repro.flexibits.cycles import CORES, Core
+
+
+def total_grid(core: Core, prof: DeviceProfile, lifetimes_s: np.ndarray,
+               execs_per_day: np.ndarray, intensity: float = 0.367,
+               clock_hz: float = 10_000.0) -> np.ndarray:
+    """(len(lifetimes), len(freqs)) total carbon for one core."""
+    emb = soc_embodied_kg(core, prof)
+    # operational scales linearly in lifetime x freq
+    base = operational_kg(core, prof, lifetime_s=86_400.0, execs_per_day=1.0,
+                          intensity=intensity, clock_hz=clock_hz)
+    life_days = lifetimes_s[:, None] / 86_400.0
+    return emb + base * life_days * execs_per_day[None, :]
+
+
+def selection_map(prof: DeviceProfile, lifetimes_s: np.ndarray,
+                  execs_per_day: np.ndarray, intensity: float = 0.367,
+                  cores: Sequence[Core] = None) -> np.ndarray:
+    """argmin-core index grid (paper Fig. 5). 0=SERV, 1=QERV, 2=HERV."""
+    cores = list(cores or CORES.values())
+    totals = np.stack([total_grid(c, prof, lifetimes_s, execs_per_day,
+                                  intensity) for c in cores])
+    return np.argmin(totals, axis=0)
+
+
+def optimal_core(prof: DeviceProfile, *, lifetime_s: float,
+                 execs_per_day: float, intensity: float = 0.367,
+                 cores: Sequence[Core] = None) -> Tuple[Core, Dict]:
+    cores = list(cores or CORES.values())
+    totals = [
+        float(total_grid(c, prof, np.array([lifetime_s]),
+                         np.array([execs_per_day]), intensity)[0, 0])
+        for c in cores]
+    i = int(np.argmin(totals))
+    return cores[i], {c.name: t for c, t in zip(cores, totals)}
+
+
+def crossover_lifetime_s(prof: DeviceProfile, core_a: Core, core_b: Core,
+                         execs_per_day: float,
+                         intensity: float = 0.367) -> float:
+    """Lifetime where core_b (more efficient, larger) overtakes core_a.
+
+    Solves emb_a + op_a*L = emb_b + op_b*L. Returns +inf if never.
+    """
+    emb_a, emb_b = (soc_embodied_kg(c, prof) for c in (core_a, core_b))
+    op_a, op_b = (
+        operational_kg(c, prof, lifetime_s=86_400.0,
+                       execs_per_day=execs_per_day, intensity=intensity)
+        for c in (core_a, core_b))
+    if op_a <= op_b:
+        return float("inf")
+    return 86_400.0 * (emb_b - emb_a) / (op_a - op_b)

@@ -1,0 +1,31 @@
+"""Elastic restart: resume a checkpoint on a *different* mesh.
+
+The checkpoint stores host numpy arrays (mesh-agnostic); `resume_elastic`
+rebuilds shardings for the new mesh from the same name/shape rules and
+device_puts each leaf — so scaling from N to M pods (or degraded pods) is a
+restore, not a migration. The data pipeline's (step, host)-deterministic
+addressing keeps the global batch identical across topologies
+(data/pipeline.py), which tests assert bit-for-bit.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.sharding import opt_shardings, param_shardings
+
+
+def resume_elastic(ckpt_dir: str, model, opt_init, new_mesh, *,
+                   zero1: bool = False,
+                   step: Optional[int] = None) -> Tuple[Any, Any, int]:
+    """Returns (params, opt_state, step) resharded onto `new_mesh`."""
+    params_abs = model.abstract_params()
+    opt_abs = jax.eval_shape(opt_init, params_abs)
+    p_sh = param_shardings(params_abs, new_mesh)
+    o_sh = opt_shardings(opt_abs, new_mesh, zero1=zero1)
+    state, got_step = ckpt.restore(
+        ckpt_dir, {"params": params_abs, "opt": opt_abs}, step=step,
+        shardings={"params": p_sh, "opt": o_sh})
+    return state["params"], state["opt"], got_step

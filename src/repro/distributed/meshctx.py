@@ -1,0 +1,87 @@
+"""Mesh context: logical-axis activation sharding that no-ops off-mesh.
+
+Models call ``shard_act(x, 'batch', None, 'model')`` with *logical* axis
+names. When a mesh context is installed (by dryrun/train/serve), logical axes
+resolve to physical mesh axes and a ``with_sharding_constraint`` is applied;
+in single-device unit tests it is a no-op, so model code is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> dict:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    """Install `mesh` and a logical->physical axis mapping derived from it.
+
+    - 'batch'  -> ('pod','data') if the mesh has a pod axis, else ('data',)
+    - 'model'  -> ('model',)
+    - 'data'   -> ('data',)
+    """
+    axis_names = mesh.axis_names
+    rules = {"model": ("model",), "data": ("data",)}
+    rules["batch"] = (("pod", "data") if "pod" in axis_names else ("data",))
+    prev = (getattr(_state, "mesh", None), getattr(_state, "rules", None))
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def logical_to_spec(axes: Tuple[Optional[str], ...]) -> P:
+    rules = _rules()
+    out = []
+    for a in axes:
+        if a is None:
+            out.append(None)
+        else:
+            phys = rules[a]
+            out.append(phys[0] if len(phys) == 1 else phys)
+    return P(*out)
+
+
+def batch_axes() -> Tuple[str, ...]:
+    """Physical axis names the batch dimension shards over."""
+    rules = _rules()
+    return rules["batch"] if rules else ("data",)
+
+
+def shard_act(x, *axes):
+    """Constrain activation sharding by logical axes; no-op without a mesh.
+
+    Divisibility-aware: an axis whose dim doesn't divide by the mesh axes'
+    product is dropped (replicated) instead of forcing padded sharding,
+    which triggers XLA's 'involuntary full rematerialization' path.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = list(logical_to_spec(axes))
+    spec += [None] * (x.ndim - len(spec))
+    for i, a in enumerate(spec):
+        if a is None:
+            continue
+        names = a if isinstance(a, tuple) else (a,)
+        size = 1
+        for nm in names:
+            size *= mesh.shape[nm]
+        if x.shape[i] % size != 0 or x.shape[i] == 0:
+            spec[i] = None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

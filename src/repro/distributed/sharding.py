@@ -1,0 +1,201 @@
+"""Parameter/batch/cache sharding rules.
+
+Rules are *name + shape* driven and divisibility-aware: the preferred dim is
+sharded over `model` only when divisible by the mesh's model-axis size,
+otherwise fallbacks apply (e.g. GQA with 2 KV heads on a 16-way model axis
+shards the contracting d_model dim instead — Megatron row-parallel).
+
+Batch dims shard over ('pod','data') when the mesh has a pod axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _model_axis_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# Priority lists of (dim, description) per parameter name. Dims are python
+# indices into the *unstacked* trailing shape (negative = from the end).
+_RULES = {
+    # embeddings / heads
+    "embed": [-2],          # (V, D): shard vocab
+    "lm_head": [-1],        # (D, V): shard vocab
+    # attention
+    "wq": [-2, -3],         # (D, H, Dh): heads, else contracting D
+    "wk": [-2, -3],
+    "wv": [-2, -3],
+    "wo": [-3, -2],         # (H, Dh, D): heads, else Dh (both contracting)
+    "bq": [-2], "bk": [-2], "bv": [-2],
+    # dense mlp
+    "wi": [-1], "wg": [-1],     # (D, F): shard F
+    # MLA
+    "w_dq": [-1], "w_uq": [-2, -3], "w_dkv": [], "w_kr": [],
+    "w_uk": [-2, -3], "w_uv": [-2, -3],
+    # moe (E, D, F) handled specially by name prefix 'moe/'
+    "router": [],
+    # mamba
+    "wz": [-1], "wx": [-1], "wdt": [-1], "wB": [], "wC": [],
+    "conv_x": [-1], "conv_bx": [-1],
+    "conv_B": [], "conv_C": [], "conv_bB": [], "conv_bC": [],
+    "A_log": [-1], "dt_bias": [-1], "D": [-1], "norm_w": [-1],
+    "out_proj": [-2],       # (d_inner, D): contracting
+    # mtp
+    "proj": [],
+    # adafactor factored moments (see opt_shardings)
+    "r": [-2, -1], "c": [-2, -1],
+}
+
+# Names whose *parent* dict distinguishes semantics.
+_MLP_WO = {"wo"}
+
+
+def _leaf_name(path) -> Tuple[str, Tuple[str, ...]]:
+    keys = tuple(p.key for p in path if hasattr(p, "key"))
+    return keys[-1], keys
+
+
+def spec_for_param(path, shape, mesh: Mesh) -> P:
+    msize = _model_axis_size(mesh)
+    name, keys = _leaf_name(path)
+    ndim = len(shape)
+    spec = [None] * ndim
+
+    def try_dims(dims) -> Optional[int]:
+        for d in dims:
+            dd = d % ndim if d < 0 else d
+            if 0 <= dd < ndim and shape[dd] % msize == 0 and shape[dd] > 1:
+                return dd
+        return None
+
+    in_moe = any(k in ("moe", "wi_e", "wg_e", "wo_e") for k in keys) and \
+        name in ("wi", "wg", "wo")
+    in_mlp = "mlp" in keys or "shared" in keys
+
+    if in_moe:
+        # (L?, E, D, F) for wi/wg ; (L?, E, F, D) for wo — prefer EP on E
+        e_dim = ndim - 3
+        if shape[e_dim] % msize == 0:
+            spec[e_dim] = "model"
+            return P(*spec)
+        f_dim = ndim - 1 if name in ("wi", "wg") else ndim - 2
+        if shape[f_dim] % msize == 0:
+            spec[f_dim] = "model"
+        return P(*spec)
+
+    if name == "wo" and in_mlp:
+        # dense mlp wo: (F, D) — shard contracting F
+        d = try_dims([-2])
+        if d is not None:
+            spec[d] = "model"
+        return P(*spec)
+
+    dims = _RULES.get(name)
+    if dims is None:
+        return P(*spec)             # replicate unknown/small params
+    d = try_dims(dims)
+    if d is not None:
+        spec[d] = "model"
+    return P(*spec)
+
+
+def param_shardings(abstract_params, mesh: Mesh):
+    """Pytree of NamedShardings matching `abstract_params`."""
+    def one(path, leaf):
+        return NamedSharding(mesh, spec_for_param(path, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def opt_shardings(abstract_opt, mesh: Mesh, *, zero1: bool = False):
+    """Shardings for optimizer state.
+
+    m/v/master mirror their parameters (path-name rules apply since leaf
+    names match). Adafactor r/c shard their largest divisible dim. With
+    `zero1`, moment leaves additionally shard dim 0 (the stacked-layers dim)
+    over 'data' — ZeRO-1 style optimizer-state partitioning.
+    """
+    dsize = mesh.shape["data"]
+
+    def one(path, leaf):
+        spec = spec_for_param(path, leaf.shape, mesh)
+        keys = tuple(p.key for p in path if hasattr(p, "key"))
+        if zero1 and keys and keys[0] in ("m", "v", "vs", "master"):
+            lst = list(spec) + [None] * (len(leaf.shape) - len(spec))
+            if (leaf.shape and lst[0] is None and leaf.shape[0] > 1
+                    and leaf.shape[0] % dsize == 0):
+                lst[0] = "data"
+                spec = P(*lst)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, abstract_opt)
+
+
+def batch_shardings(batch_specs, mesh: Mesh):
+    """Shard dim 0 (batch) over ('pod','data'); replicate when indivisible
+    (e.g. long_500k batch=1); scalars replicated."""
+    baxes = batch_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in baxes]))
+
+    def one(leaf):
+        if not leaf.shape:
+            return NamedSharding(mesh, P())
+        if leaf.shape[0] % bsize == 0:
+            return NamedSharding(mesh,
+                                 P(baxes if len(baxes) > 1 else baxes[0],
+                                   *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+    return jax.tree.map(one, batch_specs)
+
+
+def cache_shardings(cache_specs, mesh: Mesh):
+    """Decode-state shardings, name-aware.
+
+    Attention KV caches (L?, B, S, H, Dh): batch over data axes; heads over
+    `model` when divisible, else the SEQUENCE dim (flash-decode style
+    partial-softmax sharding). Never the contracting head_dim — that was
+    the §Perf minitron-decode bug (35 GB of per-token all-gathers).
+    MLA latent caches (L, B, S, R): sequence over model (R contracts).
+    SSM states: heads/channels over model.
+    """
+    baxes = batch_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in baxes]))
+    msize = _model_axis_size(mesh)
+
+    def one(path, leaf):
+        name, _ = _leaf_name(path)
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        if nd < 3:
+            return NamedSharding(mesh, P(*spec))
+        bdim = 1  # all our cache leaves are stacked (L, B, ...)
+        if shape[bdim] % bsize == 0 and shape[bdim] > 1:
+            spec[bdim] = baxes if len(baxes) > 1 else baxes[0]
+
+        def try_model(dims):
+            for d in dims:
+                dd = d % nd
+                if (spec[dd] is None and shape[dd] > 1
+                        and shape[dd] % msize == 0):
+                    spec[dd] = "model"
+                    return True
+            return False
+
+        if name in ("c_kv", "k_rope"):
+            try_model([2])                       # MLA: sequence dim
+        elif name == "ssm":
+            try_model([-3])                      # (L,B,H,N,P): heads
+        elif name.startswith("conv"):
+            try_model([-1])                      # channels
+        else:                                    # attention k/v caches
+            try_model([-2, 2])                   # heads, else sequence
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache_specs)

@@ -1,0 +1,101 @@
+"""FLEXIBITS bit-serial cycle + energy model (paper §4.2/§4.4, Table 7).
+
+Timing: one-stage instructions take 32/w + a_w cycles, two-stage 64/w + b_w
+(w = datapath width). (a_1,b_1)=(6,6) reproduces the paper's SERV numbers
+exactly (38 / 70 cycles, §4.2 "70 cycles from initial fetch to retirement").
+(a_4,b_4) and (a_8,b_8) are calibration constants fitted so the suite
+geomean speedups land on the paper's 3.15x (QERV) and 4.93x (HERV)
+(DESIGN.md §5). Powers/areas are the paper's measured values (Table 7), so
+energy ratios 2.65x / 3.50x follow from the timing model.
+
+Memory (Table 8): LPROM ~ area-only (negligible power); SRAM power/area
+scale linearly with required KB, anchored to the paper's per-workload
+Table 3 <-> Table 8 pairs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+CLOCK_HZ = 10_000.0          # 10 kHz operating point (paper §4.4)
+
+
+@dataclasses.dataclass(frozen=True)
+class Core:
+    name: str
+    width: int               # datapath bits
+    area_mm2: float          # Table 7
+    power_mw: float          # Table 7
+    gates: int               # Table 4 (NAND2)
+    a: float                 # one-stage fetch/decode overhead cycles
+    b: float                 # two-stage overhead cycles
+
+    def cycles_one_stage(self) -> float:
+        return 32.0 / self.width + self.a
+
+    def cycles_two_stage(self) -> float:
+        return 64.0 / self.width + self.b
+
+    def cycles(self, n_one: float, n_two: float) -> float:
+        return (n_one * self.cycles_one_stage()
+                + n_two * self.cycles_two_stage())
+
+    def runtime_s(self, n_one: float, n_two: float,
+                  clock_hz: float = CLOCK_HZ) -> float:
+        return self.cycles(n_one, n_two) / clock_hz
+
+    def energy_j(self, n_one: float, n_two: float,
+                 extra_power_mw: float = 0.0,
+                 clock_hz: float = CLOCK_HZ) -> float:
+        """Energy per program execution (core + memory static power)."""
+        t = self.runtime_s(n_one, n_two, clock_hz)
+        return (self.power_mw + extra_power_mw) * 1e-3 * t
+
+
+SERV = Core("SERV", 1, area_mm2=2.93, power_mw=17.75, gates=2546,
+            a=6.0, b=6.0)
+QERV = Core("QERV", 4, area_mm2=3.68, power_mw=21.07, gates=3198,
+            a=4.0, b=6.0)
+HERV = Core("HERV", 8, area_mm2=4.50, power_mw=24.99, gates=3903,
+            a=3.65, b=6.2)
+
+CORES: Dict[str, Core] = {"SERV": SERV, "QERV": QERV, "HERV": HERV}
+
+
+# ------------------------------------------------------------------ memory
+# Table 8 anchors: SRAM area/power scale with VM KB; LPROM area scales with
+# NVM KB at negligible power. Linear coefficients fitted to the paper's
+# (Table 3 KB, Table 8 area/power) pairs:
+#   WQ: VM 0.01 KB -> SRAM 2.32 (area units), power 2.26 mW total
+#   GR: VM 40.0 KB -> SRAM 661.85, power 642.58 mW
+#   AP: NVM 63.38 KB -> LPROM 182.03 area units
+SRAM_AREA_PER_KB = (661.85 - 2.32) / (40.0 - 0.01)      # ~16.49 /KB
+SRAM_AREA_BASE = 2.32 - SRAM_AREA_PER_KB * 0.01
+SRAM_MW_PER_KB = (642.58 - 2.26) / (40.0 - 0.01)        # ~16.01 mW/KB
+SRAM_MW_BASE = 2.26 - SRAM_MW_PER_KB * 0.01
+LPROM_AREA_PER_KB = 182.03 / 63.38                      # ~2.872 /KB
+# Table-8 "area units" -> mm^2: Table 7 core areas are mm^2; Pragmatic's
+# LPROM/SRAM macros are characterized per-KB. We treat Table 8 units as
+# 0.01 mm^2 so a 40 KB SRAM ~ 6.6 mm^2 (consistent with FlexIC die sizes).
+AREA_UNIT_MM2 = 0.01
+
+
+def sram_power_mw(vm_kb: float) -> float:
+    return max(SRAM_MW_BASE + SRAM_MW_PER_KB * vm_kb, 0.05)
+
+
+def sram_area_mm2(vm_kb: float) -> float:
+    return max(SRAM_AREA_BASE + SRAM_AREA_PER_KB * vm_kb, 0.1) \
+        * AREA_UNIT_MM2
+
+
+def lprom_area_mm2(nvm_kb: float) -> float:
+    return LPROM_AREA_PER_KB * nvm_kb * AREA_UNIT_MM2
+
+
+def system_area_mm2(core: Core, nvm_kb: float, vm_kb: float) -> float:
+    return core.area_mm2 + sram_area_mm2(vm_kb) + lprom_area_mm2(nvm_kb)
+
+
+def system_power_mw(core: Core, vm_kb: float) -> float:
+    return core.power_mw + sram_power_mw(vm_kb)

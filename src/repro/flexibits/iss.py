@@ -1,0 +1,225 @@
+"""JAX RV32E instruction-set simulator — the paper's RTL characterization
+loop re-thought for TPU: one lax.while_loop interpreter, vmap-able over
+per-item memories (a *fleet* of devices with different sensor inputs), and
+shard_map-able over the production mesh (flexibits/fleet.py).
+
+State is a dict of jnp arrays; the step decodes with bit ops and dispatches
+on opcode via lax.switch. Cycle accounting implements the paper's bit-serial
+timing model (cycles.py): per retired instruction, one-stage or two-stage
+cost for the configured datapath width.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.flexibits import isa
+
+I32 = jnp.int32
+U32 = jnp.uint32
+
+# mix categories (Fig. 2a)
+MIX_CLASSES = ("loads", "stores", "branches", "jumps", "shifts", "I-type",
+               "R-type", "system")
+_MIX_IDX = {c: i for i, c in enumerate(MIX_CLASSES)}
+
+_OPCODES = (isa.OP_LUI, isa.OP_AUIPC, isa.OP_JAL, isa.OP_JALR,
+            isa.OP_BRANCH, isa.OP_LOAD, isa.OP_STORE, isa.OP_IMM,
+            isa.OP_REG, isa.OP_SYSTEM)
+
+
+class ISSState(NamedTuple):
+    regs: jax.Array        # (16,) int32
+    pc: jax.Array          # () int32 (byte address)
+    mem: jax.Array         # (M,) int32 word-addressed RAM
+    halted: jax.Array      # () bool
+    n_instr: jax.Array     # () int32
+    n_two_stage: jax.Array  # () int32
+    mix: jax.Array         # (8,) int32 per-category retired counts
+
+
+def init_state(mem: jax.Array) -> ISSState:
+    return ISSState(
+        regs=jnp.zeros(16, I32),
+        pc=jnp.zeros((), I32),
+        mem=mem.astype(I32),
+        halted=jnp.zeros((), bool),
+        n_instr=jnp.zeros((), I32),
+        n_two_stage=jnp.zeros((), I32),
+        mix=jnp.zeros(len(MIX_CLASSES), I32),
+    )
+
+
+def _sx(v, bits):
+    shift = 32 - bits
+    return (v.astype(I32) << shift) >> shift
+
+
+def _u(v):
+    return v.astype(U32)
+
+
+def step(code: jax.Array, s: ISSState) -> ISSState:
+    instr = code[(_u(s.pc) >> 2).astype(I32)].astype(U32)
+    ii = instr.astype(I32)
+    op = (ii & 0x7F)
+    rd = (ii >> 7) & 0xF
+    f3 = (ii >> 12) & 0x7
+    rs1 = (ii >> 15) & 0xF
+    rs2 = (ii >> 20) & 0xF
+    f7 = (ii >> 25) & 0x7F
+    sub_bit = (ii >> 30) & 1
+
+    imm_i = _sx(_u(instr) >> 20, 12)
+    imm_s = _sx(((_u(instr) >> 25) << 5).astype(I32)
+                | ((ii >> 7) & 0x1F), 12)
+    imm_b = _sx(((ii >> 31) & 1) << 12 | ((ii >> 7) & 1) << 11
+                | ((ii >> 25) & 0x3F) << 5 | ((ii >> 8) & 0xF) << 1, 13)
+    imm_u = ii & jnp.asarray(-4096, I32)  # 0xFFFFF000 as a signed mask
+    imm_j = _sx(((ii >> 31) & 1) << 20 | ((ii >> 12) & 0xFF) << 12
+                | ((ii >> 20) & 1) << 11 | ((ii >> 21) & 0x3FF) << 1, 21)
+
+    a = s.regs[rs1]
+    b = s.regs[rs2]
+    au = _u(a)
+    bu = _u(b)
+    pc4 = s.pc + 4
+
+    def alu(x, y, f3v, is_sub, is_sra):
+        sh = (y & 31).astype(U32)
+        return lax.switch(f3v, [
+            lambda: jnp.where(is_sub, x - y, x + y),
+            lambda: (x.astype(U32) << sh).astype(I32),
+            lambda: (x < y).astype(I32),
+            lambda: (_u(x) < _u(y)).astype(I32),
+            lambda: x ^ y,
+            lambda: jnp.where(is_sra, x >> (y & 31),
+                              (_u(x) >> sh).astype(I32)),
+            lambda: x | y,
+            lambda: x & y,
+        ])
+
+    # LOAD: word RMW for sub-word
+    def do_load():
+        addr = (a + imm_i).astype(I32)
+        word = s.mem[_u(addr).astype(I32) >> 2]
+        sh8 = ((addr & 3) * 8).astype(U32)
+        byte = (_u(word) >> sh8).astype(I32) & 0xFF
+        half_sh = ((addr & 2) * 8).astype(U32)
+        half = (_u(word) >> half_sh).astype(I32) & 0xFFFF
+        val = lax.switch(jnp.clip(f3, 0, 5), [
+            lambda: _sx(byte, 8),            # lb
+            lambda: _sx(half, 16),           # lh
+            lambda: word,                    # lw
+            lambda: word,                    # (unused f3=3)
+            lambda: byte,                    # lbu
+            lambda: half,                    # lhu
+        ])
+        return val, pc4, s.mem, False
+
+    def do_store():
+        addr = (a + imm_s).astype(I32)
+        widx = _u(addr).astype(I32) >> 2
+        word = s.mem[widx]
+        sh8 = ((addr & 3) * 8).astype(U32)
+        sh16 = ((addr & 2) * 8).astype(U32)
+        bmask = (jnp.asarray(0xFF, U32) << sh8).astype(I32)
+        hmask = (jnp.asarray(0xFFFF, U32) << sh16).astype(I32)
+        neww = lax.switch(jnp.clip(f3, 0, 2), [
+            lambda: (word & ~bmask) | (((b & 0xFF).astype(U32) << sh8
+                                        ).astype(I32) & bmask),
+            lambda: (word & ~hmask) | (((b & 0xFFFF).astype(U32) << sh16
+                                        ).astype(I32) & hmask),
+            lambda: b,
+        ])
+        return jnp.zeros((), I32), pc4, s.mem.at[widx].set(neww), False
+
+    def do_branch():
+        cond = lax.switch(f3, [
+            lambda: a == b, lambda: a != b,
+            lambda: jnp.zeros((), bool), lambda: jnp.zeros((), bool),
+            lambda: a < b, lambda: a >= b,
+            lambda: au < bu, lambda: au >= bu,
+        ])
+        return jnp.zeros((), I32), \
+            jnp.where(cond, s.pc + imm_b, pc4), s.mem, False
+
+    cases = [
+        lambda: (imm_u, pc4, s.mem, False),                       # LUI
+        lambda: (s.pc + imm_u, pc4, s.mem, False),                # AUIPC
+        lambda: (pc4, s.pc + imm_j, s.mem, False),                # JAL
+        lambda: (pc4, (a + imm_i) & ~1, s.mem, False),            # JALR
+        do_branch,                                                # BRANCH
+        do_load,                                                  # LOAD
+        do_store,                                                 # STORE
+        lambda: (alu(a, imm_i, f3,                                # OP-IMM
+                     jnp.zeros((), bool),
+                     (f3 == 5) & (sub_bit == 1)),
+                 pc4, s.mem, False),
+        lambda: (alu(a, b, f3, sub_bit == 1, sub_bit == 1),       # OP-REG
+                 pc4, s.mem, False),
+        lambda: (jnp.zeros((), I32), pc4, s.mem, True),           # SYSTEM
+    ]
+    case_idx = jnp.searchsorted(jnp.asarray(sorted(_OPCODES), I32), op)
+    # map sorted position back to case order
+    sorted_ops = sorted(_OPCODES)
+    perm = [sorted_ops.index(o) for o in _OPCODES]
+    inv = [0] * len(_OPCODES)
+    for ci, po in enumerate(perm):
+        inv[po] = ci
+    wr, next_pc, mem, halt = lax.switch(case_idx,
+                                        [cases[i] for i in inv])
+
+    writes_rd = (op != isa.OP_BRANCH) & (op != isa.OP_STORE) \
+        & (op != isa.OP_SYSTEM) & (rd != 0)
+    regs = s.regs.at[rd].set(jnp.where(writes_rd, wr, s.regs[rd]))
+
+    # ---- classification: two-stage + mix category
+    is_shift_imm = (op == isa.OP_IMM) & ((f3 == 1) | (f3 == 5))
+    is_shift_reg = (op == isa.OP_REG) & ((f3 == 1) | (f3 == 5))
+    is_slt = ((op == isa.OP_IMM) | (op == isa.OP_REG)) \
+        & ((f3 == 2) | (f3 == 3))
+    two_stage = ((op == isa.OP_LOAD) | (op == isa.OP_STORE)
+                 | (op == isa.OP_BRANCH) | (op == isa.OP_JAL)
+                 | (op == isa.OP_JALR) | is_shift_imm | is_shift_reg
+                 | is_slt)
+    mix_idx = jnp.select(
+        [op == isa.OP_LOAD, op == isa.OP_STORE, op == isa.OP_BRANCH,
+         (op == isa.OP_JAL) | (op == isa.OP_JALR),
+         is_shift_imm | is_shift_reg,
+         (op == isa.OP_IMM) | (op == isa.OP_LUI) | (op == isa.OP_AUIPC),
+         op == isa.OP_REG],
+        [_MIX_IDX["loads"], _MIX_IDX["stores"], _MIX_IDX["branches"],
+         _MIX_IDX["jumps"], _MIX_IDX["shifts"], _MIX_IDX["I-type"],
+         _MIX_IDX["R-type"]],
+        _MIX_IDX["system"])
+
+    return ISSState(
+        regs=regs,
+        pc=next_pc.astype(I32),
+        mem=mem,
+        halted=s.halted | halt,
+        n_instr=s.n_instr + 1,
+        n_two_stage=s.n_two_stage + two_stage.astype(I32),
+        mix=s.mix.at[mix_idx].add(1),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def run(code: jax.Array, mem: jax.Array, max_steps: int) -> ISSState:
+    """Run to ecall or max_steps. code: (P,) uint32; mem: (M,) int32."""
+    s0 = init_state(mem)
+
+    def cond(s):
+        return (~s.halted) & (s.n_instr < max_steps)
+
+    return lax.while_loop(cond, lambda s: step(code, s), s0)
+
+
+def run_fleet(code: jax.Array, mems: jax.Array, max_steps: int) -> ISSState:
+    """vmap over a fleet of items with different memory images."""
+    return jax.vmap(lambda m: run(code, m, max_steps))(mems)

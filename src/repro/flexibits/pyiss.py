@@ -1,0 +1,182 @@
+"""Pure-Python RV32E instruction-set simulator — the oracle for the JAX ISS
+property tests (spike-equivalent for our subset)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.flexibits import isa
+
+
+def _sx(v: int, bits: int) -> int:
+    v &= (1 << bits) - 1
+    return v - (1 << bits) if v >= (1 << (bits - 1)) else v
+
+
+def _u32(v: int) -> int:
+    return v & 0xFFFFFFFF
+
+
+def _s32(v: int) -> int:
+    return _sx(v, 32)
+
+
+class PyISS:
+    def __init__(self, code: np.ndarray, mem_words: int = 4096,
+                 init_mem: Optional[np.ndarray] = None):
+        self.code = np.asarray(code, np.uint32)
+        self.mem = np.zeros(mem_words, np.int64)
+        if init_mem is not None:
+            self.mem[:len(init_mem)] = np.asarray(init_mem, np.int64)
+        self.regs = [0] * 16
+        self.pc = 0
+        self.halted = False
+        self.n_instr = 0
+        self.mix: Dict[str, int] = {}
+        self.n_two_stage = 0
+        self.max_sp_used = None
+
+    def _load_word(self, addr: int) -> int:
+        return _s32(int(self.mem[addr >> 2]))
+
+    def _store_word(self, addr: int, val: int):
+        self.mem[addr >> 2] = _s32(val)
+
+    def _load_sub(self, addr: int, nbytes: int, signed: bool) -> int:
+        w = _u32(self._load_word(addr & ~3))
+        sh = (addr & 3) * 8
+        v = (w >> sh) & ((1 << (nbytes * 8)) - 1)
+        return _sx(v, nbytes * 8) if signed else v
+
+    def _store_sub(self, addr: int, nbytes: int, val: int):
+        w = _u32(self._load_word(addr & ~3))
+        sh = (addr & 3) * 8
+        mask = ((1 << (nbytes * 8)) - 1) << sh
+        w = (w & ~mask) | ((_u32(val) << sh) & mask)
+        self._store_word(addr & ~3, w)
+
+    def step(self):
+        instr = int(self.code[self.pc >> 2])
+        op = instr & 0x7F
+        rd = (instr >> 7) & 0x1F
+        f3 = (instr >> 12) & 0x7
+        rs1 = (instr >> 15) & 0x1F
+        rs2 = (instr >> 20) & 0x1F
+        f7 = (instr >> 25) & 0x7F
+        imm_i = _sx(instr >> 20, 12)
+        imm_s = _sx(((instr >> 25) << 5) | ((instr >> 7) & 0x1F), 12)
+        imm_b = _sx((((instr >> 31) & 1) << 12) | (((instr >> 7) & 1) << 11)
+                    | (((instr >> 25) & 0x3F) << 5)
+                    | (((instr >> 8) & 0xF) << 1), 13)
+        imm_u = _s32(instr & 0xFFFFF000)
+        imm_j = _sx((((instr >> 31) & 1) << 20)
+                    | (((instr >> 12) & 0xFF) << 12)
+                    | (((instr >> 20) & 1) << 11)
+                    | (((instr >> 21) & 0x3FF) << 1), 21)
+        a = _s32(self.regs[rs1 & 0xF])
+        b = _s32(self.regs[rs2 & 0xF])
+        next_pc = self.pc + 4
+        wr = None
+        name = "?"
+
+        if op == isa.OP_LUI:
+            wr, name = imm_u, "lui"
+        elif op == isa.OP_AUIPC:
+            wr, name = _s32(self.pc + imm_u), "auipc"
+        elif op == isa.OP_JAL:
+            wr, name = self.pc + 4, "jal"
+            next_pc = self.pc + imm_j
+        elif op == isa.OP_JALR:
+            wr, name = self.pc + 4, "jalr"
+            next_pc = _u32(a + imm_i) & ~1
+        elif op == isa.OP_BRANCH:
+            cond = {0: a == b, 1: a != b, 4: a < b, 5: a >= b,
+                    6: _u32(a) < _u32(b), 7: _u32(a) >= _u32(b)}[f3]
+            name = {0: "beq", 1: "bne", 4: "blt", 5: "bge", 6: "bltu",
+                    7: "bgeu"}[f3]
+            if cond:
+                next_pc = self.pc + imm_b
+        elif op == isa.OP_LOAD:
+            addr = _u32(a + imm_i)
+            if f3 == 0:
+                wr, name = self._load_sub(addr, 1, True), "lb"
+            elif f3 == 1:
+                wr, name = self._load_sub(addr, 2, True), "lh"
+            elif f3 == 2:
+                wr, name = self._load_word(addr), "lw"
+            elif f3 == 4:
+                wr, name = self._load_sub(addr, 1, False), "lbu"
+            elif f3 == 5:
+                wr, name = self._load_sub(addr, 2, False), "lhu"
+        elif op == isa.OP_STORE:
+            addr = _u32(a + imm_s)
+            if f3 == 0:
+                self._store_sub(addr, 1, b)
+                name = "sb"
+            elif f3 == 1:
+                self._store_sub(addr, 2, b)
+                name = "sh"
+            else:
+                self._store_word(addr, b)
+                name = "sw"
+        elif op == isa.OP_IMM:
+            if f3 == 0:
+                wr, name = _s32(a + imm_i), "addi"
+            elif f3 == 1:
+                wr, name = _s32(a << (imm_i & 31)), "slli"
+            elif f3 == 2:
+                wr, name = int(a < imm_i), "slti"
+            elif f3 == 3:
+                wr, name = int(_u32(a) < _u32(imm_i)), "sltiu"
+            elif f3 == 4:
+                wr, name = _s32(a ^ imm_i), "xori"
+            elif f3 == 5:
+                if f7 & 0x20:
+                    wr, name = a >> (imm_i & 31), "srai"
+                else:
+                    wr, name = _s32(_u32(a) >> (imm_i & 31)), "srli"
+            elif f3 == 6:
+                wr, name = _s32(a | imm_i), "ori"
+            elif f3 == 7:
+                wr, name = _s32(a & imm_i), "andi"
+        elif op == isa.OP_REG:
+            sub = bool(f7 & 0x20)
+            if f3 == 0:
+                wr, name = _s32(a - b if sub else a + b), \
+                    ("sub" if sub else "add")
+            elif f3 == 1:
+                wr, name = _s32(a << (b & 31)), "sll"
+            elif f3 == 2:
+                wr, name = int(a < b), "slt"
+            elif f3 == 3:
+                wr, name = int(_u32(a) < _u32(b)), "sltu"
+            elif f3 == 4:
+                wr, name = _s32(a ^ b), "xor"
+            elif f3 == 5:
+                if sub:
+                    wr, name = a >> (b & 31), "sra"
+                else:
+                    wr, name = _s32(_u32(a) >> (b & 31)), "srl"
+            elif f3 == 6:
+                wr, name = _s32(a | b), "or"
+            elif f3 == 7:
+                wr, name = _s32(a & b), "and"
+        elif op == isa.OP_SYSTEM:
+            name = "ecall"
+            self.halted = True
+        else:
+            raise ValueError(f"bad opcode {op:#x} at pc={self.pc}")
+
+        if wr is not None and (rd & 0xF) != 0:
+            self.regs[rd & 0xF] = _s32(wr)
+        self.pc = next_pc
+        self.n_instr += 1
+        self.mix[name] = self.mix.get(name, 0) + 1
+        if name in isa.TWO_STAGE:
+            self.n_two_stage += 1
+
+    def run(self, max_steps: int = 10_000_000):
+        while not self.halted and self.n_instr < max_steps:
+            self.step()
+        return self

@@ -1,0 +1,80 @@
+"""Bit-plane matmul Pallas kernel — FLEXIBITS' bit-serial datapath adapted
+to the TPU MXU (DESIGN.md §2.1).
+
+SERV processes one bit per cycle on a 1-bit ALU; the MXU has no bit-serial
+mode, so the TPU-native translation is *bit-plane decomposition*: weights
+quantized to B bits are stored as B binary planes and the matmul runs
+MXU-parallel within a plane, serial across planes:
+
+    W_q in [-2^(B-1), 2^(B-1)-1]; U = W_q + 2^(B-1) = sum_b 2^b u_b
+    x @ W = s * (sum_b 2^b (x @ u_b)  -  2^(B-1) * rowsum(x) * 1^T)
+
+HBM traffic scales with B exactly as FLEXIBITS' energy scales with datapath
+width — the knob the lifetime-aware planner selects on.
+
+Grid: (M/TM, N/TN, K/TK), K innermost with an accumulator scratch in VMEM;
+planes live in a (B, TK, TN) block. Tile defaults are MXU-aligned (128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, planes_ref, scales_ref, o_ref, acc_ref, *, bits: int,
+            n_k: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)              # (TM, TK)
+    acc = jnp.zeros(acc_ref.shape, jnp.float32)
+    for b in range(bits):
+        plane = planes_ref[b, :, :].astype(jnp.float32)   # (TK, TN)
+        acc += (2.0 ** b) * jax.lax.dot(
+            x, plane, precision=jax.lax.Precision.DEFAULT,
+            preferred_element_type=jnp.float32)
+    # unsigned-offset correction: -2^(B-1) * rowsum(x) broadcast over N
+    rowsum = jnp.sum(x, axis=1, keepdims=True)      # (TM, 1)
+    acc -= (2.0 ** (bits - 1)) * rowsum
+    acc_ref[...] += acc
+
+    @pl.when(k_idx == n_k - 1)
+    def _finish():
+        scales = scales_ref[...].astype(jnp.float32)      # (TN,)
+        o_ref[...] = (acc_ref[...] * scales[None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "tm", "tn", "tk", "interpret"))
+def bitplane_matmul(x, planes, scales, *, bits: int, tm: int = 128,
+                    tn: int = 128, tk: int = 128, interpret: bool = True):
+    """x: (M, K) float; planes: (B, K, N) int8 of {0,1}; scales: (N,).
+
+    Returns (M, N) in x.dtype. M/K/N must divide by the tile sizes.
+    """
+    m, k = x.shape
+    bts, kk, n = planes.shape
+    assert bts == bits and kk == k, (planes.shape, bits, k)
+    assert m % tm == 0 and n % tn == 0 and k % tk == 0, (m, n, k)
+    n_k = k // tk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, n_k=n_k),
+        grid=(m // tm, n // tn, n_k),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kq: (i, kq)),
+            pl.BlockSpec((bits, tk, tn), lambda i, j, kq: (0, kq, j)),
+            pl.BlockSpec((tn,), lambda i, j, kq: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kq: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=interpret,
+    )(x, planes, scales)

@@ -1,0 +1,83 @@
+"""Flash attention Pallas kernel (causal, online softmax).
+
+The jnp fallback (models/layers.chunked_attention) pays 2x FLOPs on the
+causal triangle to stay differentiable; this kernel skips fully-masked KV
+tiles via a dynamic fori bound — the §Perf "triangle skip" the roofline
+iteration measures. Grid: (B*H, Lq/TQ); KV tiles streamed in a fori_loop
+with VMEM-resident (m, l, acc) carry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, tq: int, tk: int, causal: bool,
+            scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # (TQ, D)
+    lk = k_ref.shape[1]
+    n_kv = lk // tk
+    d = q.shape[-1]
+
+    def body(ki, carry):
+        m, den, acc = carry
+        k = lax.dynamic_slice_in_dim(k_ref[0], ki * tk, tk, 0) \
+            .astype(jnp.float32)                      # (TK, D)
+        v = lax.dynamic_slice_in_dim(v_ref[0], ki * tk, tk, 0) \
+            .astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qi * tq + lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+            kpos = ki * tk + lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        corr = jnp.exp(m - m2)
+        p = jnp.exp(s - m2)
+        den = den * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jax.lax.dot(p, v,
+                                       preferred_element_type=jnp.float32)
+        return m2, den, acc
+
+    m0 = jnp.full((tq, 1), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((tq, 1), jnp.float32)
+    a0 = jnp.zeros((tq, d), jnp.float32)
+    upper = (qi + 1) * tq // tk if causal else n_kv
+    upper = jnp.minimum(jnp.maximum(upper, 1), n_kv) \
+        if causal else n_kv
+    m, den, acc = lax.fori_loop(0, upper, body, (m0, d0, a0))
+    o_ref[0] = (acc / jnp.maximum(den, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "tq", "tk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, tq: int = 128,
+                    tk: int = 128, interpret: bool = True):
+    """q, k, v: (BH, L, D) — heads pre-flattened into the batch dim.
+
+    Returns (BH, L, D). L must divide by tq/tk; MQA/GQA grouping is done by
+    the ops.py wrapper before flattening.
+    """
+    bh, l, d = q.shape
+    assert l % tq == 0 and l % tk == 0, (l, tq, tk)
+    scale = d ** -0.5
+    return pl.pallas_call(
+        functools.partial(_kernel, tq=tq, tk=tk, causal=causal,
+                          scale=scale),
+        grid=(bh, l // tq),
+        in_specs=[
+            pl.BlockSpec((1, tq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, l, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, l, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, l, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,62 @@
+"""jit'd public wrappers around the Pallas kernels (shape plumbing,
+GQA grouping, plane packing). interpret=True everywhere on CPU; on TPU the
+same calls lower to Mosaic."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+from repro.kernels.bitplane_matmul import bitplane_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def quantized_linear(x, w, *, bits: int = 8, tm: int = 128, tn: int = 128,
+                     tk: int = 128, interpret: bool = True):
+    """x: (..., K) @ w: (K, N) through the bit-plane kernel."""
+    planes, scales, _ = R.quantize_weights(w, bits)
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, x.shape[-1])
+    m = xm.shape[0]
+    pad = (-m) % tm
+    if pad:
+        xm = jnp.pad(xm, ((0, pad), (0, 0)))
+    out = bitplane_matmul(xm, planes, scales, bits=bits, tm=tm, tn=tn,
+                          tk=tk, interpret=interpret)
+    return out[:m].reshape(*lead, w.shape[1])
+
+
+def gqa_flash_attention(q, k, v, *, causal: bool = True, tq: int = 128,
+                        tk: int = 128, interpret: bool = True):
+    """q: (B, L, H, D); k/v: (B, L, Hkv, D) -> (B, L, H, D)."""
+    b, l, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    k = jnp.repeat(k, g, axis=2) if g > 1 else k
+    v = jnp.repeat(v, g, axis=2) if g > 1 else v
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, l, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, l, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, l, d)
+    o = flash_attention(qf, kf, vf, causal=causal, tq=min(tq, l),
+                        tk=min(tk, l), interpret=interpret)
+    return o.reshape(b, h, l, d).transpose(0, 2, 1, 3)
+
+
+def ssd(x, dt, A, B, C, *, q: int = 64, interpret: bool = True):
+    """x: (Bt, H, L, P); dt: (Bt, H, L); A: (H,); B/C: (Bt, G, L, N) with
+    G dividing H. Returns y: (Bt, H, L, P)."""
+    bt, h, l, p = x.shape
+    g = B.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1) if rep > 1 else B
+    Ch = jnp.repeat(C, rep, axis=1) if rep > 1 else C
+    n = Bh.shape[-1]
+    a_flat = jnp.tile(A, bt)
+    y = ssd_scan(a_flat,
+                 x.reshape(bt * h, l, p),
+                 dt.reshape(bt * h, l),
+                 Bh.reshape(bt * h, l, n),
+                 Ch.reshape(bt * h, l, n),
+                 q=min(q, l), interpret=interpret)
+    return y.reshape(bt, h, l, p)

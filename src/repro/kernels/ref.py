@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------- bitplane matmul
+
+def quantize_weights(w, bits: int):
+    """Symmetric per-output-channel quantization. w: (K, N) float.
+
+    Returns (planes (B, K, N) int8 of {0,1}, scales (N,), w_q (K, N) int)."""
+    amax = jnp.max(jnp.abs(w), axis=0)
+    qmax = max(2.0 ** (bits - 1) - 1, 1.0)   # bits=1: levels {-1, 0}
+    scales = jnp.where(amax > 0, amax / qmax, 1.0)
+    w_q = jnp.clip(jnp.round(w / scales), -(2 ** (bits - 1)),
+                   2 ** (bits - 1) - 1).astype(jnp.int32)
+    u = (w_q + 2 ** (bits - 1)).astype(jnp.uint32)
+    planes = jnp.stack([((u >> b) & 1).astype(jnp.int8)
+                        for b in range(bits)])
+    return planes, scales.astype(jnp.float32), w_q
+
+
+def bitplane_matmul_ref(x, planes, scales, *, bits: int):
+    """Oracle: reassemble W_q from planes, dense matmul, scale."""
+    weights = jnp.zeros(planes.shape[1:], jnp.float32)
+    for b in range(bits):
+        weights += (2.0 ** b) * planes[b].astype(jnp.float32)
+    weights -= 2.0 ** (bits - 1)
+    out = jnp.dot(x.astype(jnp.float32), weights) * scales[None, :]
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------- flash attention
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q,k,v: (B, H, L, D). fp32 softmax."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        lq, lk = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((lq, lk), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ------------------------------------------------------------- ssd scan
+
+def ssd_ref(x, dt, A, B, C, *, chunk: int = None):
+    """Sequential SSD recurrence oracle. x: (Bt, H, L, P); dt: (Bt, H, L);
+    A: (H,); B, C: (Bt, H, L, N). Returns (y, final_state (Bt,H,N,P))."""
+    del chunk
+    bt, h, l, p = x.shape
+    n = B.shape[-1]
+    # straightforward sequential loop (clarity over speed — it's an oracle)
+    s = jnp.zeros((bt, h, n, p), jnp.float32)
+    ys = []
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    for t in range(l):
+        da = jnp.exp(dtf[:, :, t] * A[None, :])
+        s = s * da[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhnp", dtf[:, :, t], Bf[:, :, t], xf[:, :, t])
+        ys.append(jnp.einsum("bhn,bhnp->bhp", Cf[:, :, t], s))
+    y = jnp.stack(ys, axis=2)                     # (bt,h,l,p)
+    return y.astype(x.dtype), s

@@ -1,0 +1,89 @@
+"""Mamba2 SSD chunked-scan Pallas kernel.
+
+Grid: (B*H_blocks, L/Q) with the chunk dim sequential; the inter-chunk SSM
+state lives in a VMEM scratch carried across grid steps (reset at chunk 0).
+Per chunk: intra-chunk quadratic term (decay-masked C B^T) + inter-chunk
+contribution from the carried state — the same math as
+models/mamba.ssd_chunked, tiled for VMEM.
+
+Layout: x (BH, L, P); dt (BH, L); B, C (BH, L, N) — heads pre-flattened and
+B/C pre-broadcast per head by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_ref, *,
+            q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _reset():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    a = a_ref[0]                                       # scalar A (negative)
+    x = x_ref[0].astype(jnp.float32)                   # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)                 # (Q,)
+    bm = b_ref[0].astype(jnp.float32)                  # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)                  # (Q, N)
+
+    da = dt * a                                        # (Q,)
+    cum = jnp.cumsum(da)                               # (Q,)
+    seg_end = cum[-1]
+
+    # intra-chunk
+    decay = cum[:, None] - cum[None, :]                # (Q, Q)
+    causal = lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lmat = jnp.exp(jnp.where(causal, decay, -jnp.inf))
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    w = cb * lmat * dt[None, :]
+    y = jax.lax.dot(w, x, preferred_element_type=jnp.float32)
+
+    # inter-chunk from carried state: y += exp(cum_i) C_i . S_prev
+    s_prev = state_ref[...]                            # (N, P)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot(
+        cm, s_prev, preferred_element_type=jnp.float32)
+
+    # state update: S = S * exp(seg_end) + sum_j exp(seg_end-cum_j) dt_j
+    #               B_j x_j^T
+    wstate = jnp.exp(seg_end - cum) * dt               # (Q,)
+    s_new = jax.lax.dot_general(bm * wstate[:, None], x,
+                                (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (N,P)
+    state_ref[...] = s_prev * jnp.exp(seg_end) + s_new
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "interpret"))
+def ssd_scan(a, x, dt, b, c, *, q: int = 64, interpret: bool = True):
+    """a: (BH,) per-head A; x: (BH, L, P); dt: (BH, L); b, c: (BH, L, N).
+
+    Returns y: (BH, L, P). The D-residual and gating stay outside.
+    """
+    bh, l, p = x.shape
+    n = b.shape[-1]
+    assert l % q == 0, (l, q)
+    return pl.pallas_call(
+        functools.partial(_kernel, q=q),
+        grid=(bh, l // q),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, ci: (i,)),
+            pl.BlockSpec((1, q, p), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, q), lambda i, ci: (i, ci)),
+            pl.BlockSpec((1, q, n), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, q, n), lambda i, ci: (i, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda i, ci: (i, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, l, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(a, x, dt, b, c)

@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# backend initialization. 512 placeholder host devices let jax.make_mesh
+# build the production meshes; nothing is ever allocated (AOT lower/compile
+# over ShapeDtypeStructs only).
+# Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+# cell, print memory/cost analysis, and dump roofline raw terms to JSON.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-8b \
+#       --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES_BY_NAME, shape_applicable
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.distributed.meshctx import mesh_context
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        opt_shardings, param_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.roofline import roofline_terms
+from repro.launch.steps import make_decode_step, make_prefill_step, \
+    make_train_step
+from repro.models.model import (build_model, count_params_abstract,
+                                input_specs, model_flops)
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               compile_: bool = True, config_overrides=None):
+    """Lower (and compile) one dry-run cell. Returns a result dict."""
+    cfg = get_config(arch)
+    if config_overrides:
+        cfg = cfg.replace(**config_overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skip",
+                "why": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    t0 = time.time()
+
+    with mesh_context(mesh):
+        params_abs = model.abstract_params()
+        p_sh = param_shardings(params_abs, mesh)
+        specs = input_specs(cfg, shape)
+        result = {"arch": arch, "shape": shape_name,
+                  "mesh": "x".join(str(s) for s in mesh.devices.shape),
+                  "multi_pod": multi_pod, "status": "ok",
+                  "n_params": count_params_abstract(model)}
+
+        if shape.kind == "train":
+            opt_init, train_step = make_train_step(model)
+            opt_abs = _abstract(opt_init, params_abs)
+            o_sh = opt_shardings(opt_abs, mesh, zero1=cfg.zero1)
+            b_sh = batch_shardings(specs, mesh)
+            step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(p_sh, o_sh, b_sh, None),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, specs, step_abs)
+        elif shape.kind == "prefill":
+            prefill_step = make_prefill_step(model, shape.seq_len)
+            b_sh = batch_shardings(specs, mesh)
+            cache_abs = _abstract(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            c_sh = cache_shardings(cache_abs, mesh)
+            jitted = jax.jit(prefill_step, in_shardings=(p_sh, b_sh),
+                             out_shardings=(None, c_sh))
+            lowered = jitted.lower(params_abs, specs)
+        else:  # decode
+            decode_step = make_decode_step(model)
+            cache_abs = _abstract(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            c_sh = cache_shardings(cache_abs, mesh)
+            tok_sh = batch_shardings(
+                {"tokens": specs["tokens"]}, mesh)["tokens"]
+            jitted = jax.jit(decode_step,
+                             in_shardings=(p_sh, c_sh, tok_sh, None),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, cache_abs, specs["tokens"],
+                                   specs["pos"])
+
+        result["lower_s"] = round(time.time() - t0, 1)
+        if not compile_:
+            return result
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 1)
+
+        # ---- memory analysis
+        try:
+            ma = compiled.memory_analysis()
+            result["memory"] = {
+                k: int(getattr(ma, k)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+        except Exception as e:  # CPU backend may not provide it
+            result["memory"] = {"error": str(e)}
+
+        # ---- cost analysis
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            result["cost"] = {k: float(v) for k, v in ca.items()
+                              if isinstance(v, (int, float))
+                              and k in ("flops", "bytes accessed",
+                                        "transcendentals")}
+        except Exception as e:
+            result["cost"] = {"error": str(e)}
+
+        # ---- loop-aware FLOPs/bytes/collectives from the post-SPMD HLO
+        try:
+            hlo = compiled.as_text()
+            result["hlo"] = analyze_hlo(hlo)
+        except Exception as e:
+            result["hlo"] = {"error": str(e)}
+
+        result["model_flops"] = model_flops(cfg, shape, result["n_params"])
+        # ideal-traffic floor (decode roofline): weights + decode state
+        param_bytes = sum(
+            int(jnp.dtype(l.dtype).itemsize) * int(jnp.prod(
+                jnp.asarray(l.shape))) if l.shape else
+            jnp.dtype(l.dtype).itemsize
+            for l in jax.tree.leaves(params_abs))
+        result["param_bytes"] = int(param_bytes)
+        if shape.kind == "decode":
+            cache_bytes = sum(
+                int(jnp.dtype(l.dtype).itemsize) * int(jnp.prod(
+                    jnp.asarray(l.shape))) if l.shape else 0
+                for l in jax.tree.leaves(cache_abs))
+            result["cache_bytes"] = int(cache_bytes)
+        result["kind"] = shape.kind
+        n_chips = int(mesh.devices.size)
+        result["roofline"] = roofline_terms(result, n_chips)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES_BY_NAME))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape_name in SHAPES_BY_NAME:
+                cells.append((arch, shape_name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape_name in cells:
+        tag = f"{arch}__{shape_name}__{'pod2' if args.multi_pod else 'pod1'}"
+        path = os.path.join(args.out, tag + ".json")
+        try:
+            res = lower_cell(arch, shape_name, multi_pod=args.multi_pod,
+                             compile_=not args.no_compile)
+        except Exception as e:
+            res = {"arch": arch, "shape": shape_name, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        status = res["status"]
+        extra = ""
+        if status == "ok":
+            rf = res.get("roofline", {})
+            extra = (f" flops/dev={res['hlo'].get('flops_per_device', 0):.3e}"
+                     f" bottleneck={rf.get('bottleneck')}"
+                     f" frac={rf.get('roofline_fraction', 0):.3f}"
+                     f" compile={res.get('compile_s')}s")
+        elif status == "error":
+            extra = " " + res["error"][:200]
+        print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

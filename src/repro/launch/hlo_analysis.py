@@ -1,0 +1,306 @@
+"""Loop-aware analysis of post-SPMD optimized HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (trip counts are
+not folded in), which under-counts scanned-layer models by ~n_layers x.
+This module parses the HLO text instead:
+
+  * builds the computation call graph (fusion `calls=`, `to_apply=`,
+    while `body=`/`condition=`, `branch_computations=`),
+  * multiplies while bodies by XLA's `known_trip_count` annotation,
+  * counts dot FLOPs as 2 * numel(result) * prod(lhs contracting dims),
+  * sums collective traffic bytes with ring-algorithm factors:
+      all-gather:          result_bytes            (receives N-1 shards)
+      all-reduce:        2*result_bytes            (reduce-scatter+gather)
+      reduce-scatter:      result_bytes * group    (full tensor traffic)
+      all-to-all:          sum(result bytes)
+      collective-permute:  result_bytes
+
+All numbers are PER DEVICE (post-SPMD shapes are shard shapes).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ARRAY_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
+
+
+def _array_shapes(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _ARRAY_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _numel(dims) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _bytes_of(type_str: str) -> int:
+    return sum(_numel(d) * _DTYPE_BYTES[dt]
+               for dt, d in _array_shapes(type_str))
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+_NO_BYTES_OPS = {"tuple", "get-tuple-element", "parameter", "constant",
+                 "bitcast", "after-all", "partition-id", "replica-id",
+                 "iota"}
+
+
+class HloStats:
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0                           # HBM traffic proxy
+        self.coll_bytes = {k: 0.0 for k in _COLLECTIVES}
+        self.coll_counts = {k: 0 for k in _COLLECTIVES}
+        # (callee, flop_multiplier, bytes_multiplier)
+        self.calls: List[Tuple[str, float, float]] = []
+        self.unknown_trip = 0
+
+
+def _parse(hlo: str):
+    comps: Dict[str, HloStats] = {}
+    shapes: Dict[str, Dict[str, List[int]]] = {}   # comp -> name -> dims
+    entry = None
+    cur = None
+
+    for raw in hlo.splitlines():
+        mc = _COMP_RE.match(raw)
+        if mc and not raw.startswith(" "):
+            cur = mc.group(2)
+            comps[cur] = HloStats()
+            shapes[cur] = {}
+            if mc.group(1):
+                entry = cur
+            # header params with simple array types
+            for pm in re.finditer(r"([\w\.\-]+):\s*([a-z0-9]+\[[\d,]*\])",
+                                  mc.group(3)):
+                arrs = _array_shapes(pm.group(2))
+                if arrs:
+                    shapes[cur][pm.group(1)] = arrs[0]
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(raw)
+        if not mi:
+            continue
+        name, rest = mi.group(1), mi.group(2)
+        st = comps[cur]
+
+        # result type = prefix of `rest` up to the opcode token. Tuple types
+        # contain '/*index=N*/' comments, so scan parens by depth instead of
+        # regexing.
+        if rest.startswith("("):
+            depth = 0
+            end = -1
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            if end < 0:
+                continue
+            type_str = rest[:end + 1]
+            tail = rest[end + 1:]
+        else:
+            mt_ = re.match(r"([a-z0-9]+\[[\d,]*\](?:\{[\d,*TS()]*\})?)", rest)
+            if not mt_:
+                continue
+            type_str = mt_.group(1)
+            tail = rest[mt_.end():]
+        mop = re.match(r"\s+([\w\-]+)\(", tail)
+        if not mop:
+            continue
+        opcode = mop.group(1)
+        arrs = _array_shapes(type_str)
+        if arrs:
+            shapes[cur][name] = arrs[0]
+
+        # HBM-bytes proxy with op-specific rules. In-place/slicing ops move
+        # only the slice, NOT the full buffer (XLA aliases the rest);
+        # counting their full operands would overcount carried scan stashes
+        # by ~n_layers x. Fused computations' internals never touch HBM
+        # (bytes edges skip `calls=`, see below).
+        def _operand_bytes_list():
+            mops2 = re.search(re.escape(opcode) + r"\(([^)]*)\)", rest)
+            if not mops2:
+                return []
+            out = []
+            for opnd in mops2.group(1).split(","):
+                ent = shapes[cur].get(opnd.strip().lstrip("%"))
+                if ent is not None:
+                    dt, dims = ent
+                    out.append(_numel(dims) * _DTYPE_BYTES[dt])
+            return out
+
+        def _operand_bytes(idx=None):
+            lst = _operand_bytes_list()
+            if idx is not None:
+                lst = lst[idx:idx + 1]
+            return sum(lst)
+
+        if opcode in _NO_BYTES_OPS or opcode in ("reshape",):
+            pass
+        elif opcode == "dynamic-update-slice":
+            st.bytes += 2.0 * _operand_bytes(1)     # r/w the updated window
+        elif opcode == "fusion" and "dynamic-update-slice" in name:
+            # XLA aliases the big buffer through DUS fusions (in-place);
+            # traffic = the non-aliased (small) operands, r/w
+            res = _bytes_of(type_str)
+            small = sum(b for b in _operand_bytes_list() if b != res)
+            st.bytes += 2.0 * small
+        elif opcode == "fusion" and "dynamic-slice" in name:
+            st.bytes += 2.0 * _bytes_of(type_str)   # read slice + write
+        elif opcode in ("dynamic-slice", "slice", "transpose", "copy",
+                        "concatenate", "convert", "reverse", "pad",
+                        "gather", "scatter"):
+            st.bytes += 2.0 * _bytes_of(type_str)   # read + write ~ result
+        elif opcode in ("broadcast",):
+            st.bytes += float(_bytes_of(type_str))  # write-only
+        else:
+            st.bytes += float(_bytes_of(type_str) + _operand_bytes())
+
+        if opcode == "dot":
+            operands = re.search(r"dot\(([^)]*)\)", rest)
+            lhs = operands.group(1).split(",")[0].strip().lstrip("%")
+            ent = shapes[cur].get(lhs)
+            lhs_shape = ent[1] if ent else None
+            cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+            contract = 1
+            if lhs_shape is not None and cdims:
+                for d in cdims.group(1).split(","):
+                    if d:
+                        contract *= lhs_shape[int(d)]
+            result_numel = sum(_numel(d) for _, d in arrs)
+            st.flops += 2.0 * result_numel * contract
+        elif opcode in ("convolution",):
+            # conservative: treat like a dot over the kernel volume
+            result_numel = sum(_numel(d) for _, d in arrs)
+            st.flops += 2.0 * result_numel
+        elif opcode.rstrip("-start").rstrip("-done") in _COLLECTIVES or \
+                opcode in _COLLECTIVES:
+            base = opcode.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not opcode.endswith("-done"):
+                nbytes = _bytes_of(type_str)
+                g = _group_size(rest)
+                if base == "all-reduce":
+                    traffic = 2.0 * nbytes
+                elif base == "reduce-scatter":
+                    traffic = float(nbytes) * g
+                else:
+                    traffic = float(nbytes)
+                st.coll_bytes[base] += traffic
+                st.coll_counts[base] += 1
+
+        # call edges: (callee, flop_mult, bytes_mult). Fusion bodies don't
+        # touch HBM (bytes_mult 0); while bodies run `trip` times for both.
+        if opcode == "fusion":
+            m = re.search(r"calls=%?([\w\.\-]+)", rest)
+            if m:
+                st.calls.append((m.group(1), 1.0, 0.0))
+        elif opcode == "call":
+            m = re.search(r"to_apply=%?([\w\.\-]+)", rest)
+            if m:
+                st.calls.append((m.group(1), 1.0, 1.0))
+        elif opcode == "while":
+            mw = re.search(r"body=%?([\w\.\-]+)", rest)
+            trip = 1.0
+            mt = re.search(r'known_trip_count["\']?:\s*\{"n":"(\d+)"', rest)
+            if not mt:
+                mt = re.search(r"trip_count=(\d+)", rest)
+            if mt:
+                trip = float(mt.group(1))
+            else:
+                st.unknown_trip += 1
+            if mw:
+                st.calls.append((mw.group(1), trip, trip))
+            mcnd = re.search(r"condition=%?([\w\.\-]+)", rest)
+            if mcnd:
+                st.calls.append((mcnd.group(1), trip, 0.0))
+        elif opcode == "conditional":
+            mb = re.search(r"branch_computations=\{([^}]*)\}", rest)
+            if mb:
+                for b in mb.group(1).split(","):
+                    st.calls.append((b.strip().lstrip("%"), 1.0, 1.0))
+        else:
+            # reduce/sort/map/scatter apply tiny computations; flops only
+            for m in re.finditer(r"to_apply=%?([\w\.\-]+)", rest):
+                st.calls.append((m.group(1), 1.0, 0.0))
+
+    return comps, entry
+
+
+def analyze_hlo(hlo: str) -> Dict:
+    """Loop-aware totals per device: flops, collective bytes, counts."""
+    comps, entry = _parse(hlo)
+    memo: Dict[str, Dict] = {}
+
+    def zero():
+        return {"flops": 0.0, "bytes": 0.0,
+                "coll": {k: 0.0 for k in _COLLECTIVES},
+                "counts": {k: 0 for k in _COLLECTIVES},
+                "unknown_trip": 0}
+
+    def visit(name: str) -> Dict:
+        if name in memo:
+            return memo[name]
+        st = comps.get(name)
+        if st is None:
+            return zero()
+        memo[name] = zero()  # break cycles defensively
+        total = {"flops": st.flops, "bytes": st.bytes,
+                 "coll": dict(st.coll_bytes),
+                 "counts": dict(st.coll_counts),
+                 "unknown_trip": st.unknown_trip}
+        for callee, fmult, bmult in st.calls:
+            sub = visit(callee)
+            total["flops"] += fmult * sub["flops"]
+            total["bytes"] += bmult * sub["bytes"]
+            for k in _COLLECTIVES:
+                total["coll"][k] += fmult * sub["coll"][k]
+                total["counts"][k] += sub["counts"][k]
+            total["unknown_trip"] += sub["unknown_trip"]
+        memo[name] = total
+        return total
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    t = visit(entry)
+    return {
+        "flops_per_device": t["flops"],
+        "bytes_per_device": t["bytes"],
+        "collective_bytes_per_device": sum(t["coll"].values()),
+        "collective_per_op": t["coll"],
+        "collective_counts": t["counts"],
+        "unknown_trip_counts": t["unknown_trip"],
+    }

@@ -1,0 +1,66 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (assignment spec).
+
+FLOPs / bytes / collective bytes come from `hlo_analysis.analyze_hlo` on the
+post-SPMD optimized HLO (loop-aware: while bodies x trip counts), because
+``compiled.cost_analysis()`` counts scan bodies once. The analyzer returns
+PER-DEVICE quantities; HLO_FLOPs(global) = per_device * chips, so the
+chips-normalized terms below use per-device values directly.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+# kept for backward compat in dryrun artifacts
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: F401,E402
+
+
+def roofline_terms(result: Dict, n_chips: int) -> Dict:
+    """Three terms (seconds) + bottleneck + usefulness ratio.
+
+    `result` must contain 'hlo' (analyze_hlo output) and 'model_flops'.
+    """
+    h = result.get("hlo", {})
+    flops_dev = float(h.get("flops_per_device", 0.0))
+    bytes_dev = float(h.get("bytes_per_device", 0.0))
+    coll_dev = float(h.get("collective_bytes_per_device", 0.0))
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = float(result.get("model_flops", 0.0))
+    flops_global = flops_dev * n_chips
+    bound = max(max(terms.values()), 1e-30)
+    # roofline fraction = the kind-appropriate *ideal* step time over the
+    # bound step time. Train/prefill are compute-ideal (MFU-style); decode
+    # is memory-ideal: every step must at least stream the weights + the
+    # batch's decode state from HBM.
+    ideal_compute_s = mf / (n_chips * PEAK_FLOPS)
+    ideal_s = ideal_compute_s
+    if result.get("kind") == "decode":
+        floor_bytes = (float(result.get("param_bytes", 0))
+                       + float(result.get("cache_bytes", 0))) / n_chips
+        ideal_s = max(ideal_compute_s, floor_bytes / HBM_BW)
+    return {
+        **terms,
+        "bottleneck": dom,
+        "model_flops": mf,
+        "hlo_flops": flops_global,
+        "useful_ratio": (mf / flops_global) if flops_global else 0.0,
+        "bound_step_s": bound,
+        "ideal_step_s": ideal_s,
+        "roofline_fraction": ideal_s / bound,
+    }

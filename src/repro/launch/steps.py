@@ -1,0 +1,72 @@
+"""jit-able train/prefill/decode step builders shared by train.py, serve.py
+and the dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.optim import (clip_by_norm, cosine_schedule, make_optimizer)
+
+
+def make_train_step(model: Model, *, grad_accum: int = 1,
+                    max_grad_norm: float = 1.0, lr_kwargs=None):
+    """Returns (init_opt_state, train_step).
+
+    train_step(params, opt_state, batch, step) ->
+        (params, opt_state, metrics)
+    """
+    cfg = model.cfg
+    opt_init, opt_update = make_optimizer(cfg.optimizer)
+    lr_kwargs = lr_kwargs or {}
+
+    def loss_for_grad(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_for_grad, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        if grad_accum > 1:
+            def micro(carry, mb):
+                gsum, msum = carry
+                (loss, metrics), grads = grad_fn(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / grad_accum,
+                    gsum, grads)
+                return (gsum, msum + loss / grad_accum), None
+
+            def split(x):
+                return x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = jax.lax.scan(micro, (g0, 0.0), mbs)
+            metrics = {"xent": loss}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        grads, gnorm = clip_by_norm(grads, max_grad_norm)
+        lr = cosine_schedule(step, **lr_kwargs)
+        params, opt_state = opt_update(params, grads, opt_state, lr)
+        metrics = dict(metrics, gnorm=gnorm, lr=lr,
+                       loss=metrics.get("xent", 0.0))
+        return params, opt_state, metrics
+
+    return opt_init, train_step
+
+
+def make_prefill_step(model: Model, seq_len: int):
+    def prefill_step(params, batch):
+        return model.prefill_fn(params, batch, seq_len)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_fn(params, cache, tokens, pos)
+    return decode_step

@@ -1,0 +1,195 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv-over-mel frontend is a STUB per the assignment: the encoder input
+is precomputed frame embeddings (B, n_frames, d_model). Positions are
+sinusoidal. Decoder layers: causal self-attn + cross-attn + MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import (embed_tokens, logits_fn, padded_vocab,
+                                      softmax_xent)
+
+
+def _attn_dims(cfg):
+    return L.AttnDims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                      cfg.resolved_head_dim, cfg.qkv_bias)
+
+
+def init_encdec(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    vp = padded_vocab(cfg.vocab)
+    ks = jax.random.split(key, 6)
+
+    def init_enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                "attn": L.init_attn(k1, _attn_dims(cfg), dtype),
+                "ln2": jnp.zeros((cfg.d_model,), dtype),
+                "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)}
+
+    def init_dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                "self_attn": L.init_attn(k1, _attn_dims(cfg), dtype),
+                "ln_x": jnp.zeros((cfg.d_model,), dtype),
+                "cross_attn": L.init_attn(k2, _attn_dims(cfg), dtype),
+                "ln2": jnp.zeros((cfg.d_model,), dtype),
+                "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, dtype)}
+
+    return {
+        "embed": (jax.random.normal(ks[0], (vp, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dtype),
+        "enc_layers": jax.vmap(init_enc_layer)(
+            jax.random.split(ks[1], cfg.n_enc_layers)),
+        "dec_layers": jax.vmap(init_dec_layer)(
+            jax.random.split(ks[2], cfg.n_layers)),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": (jax.random.normal(ks[3], (cfg.d_model, vp))
+                    * cfg.d_model ** -0.5).astype(dtype),
+    }
+
+
+def _qkv(p, x):
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+    k = jnp.einsum("bld,dhk->blhk", x, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", x, p["wv"])
+    return q, k, v
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, T, D) precomputed (conv frontend stub)."""
+    h = frames.astype(jnp.dtype(cfg.dtype))
+    h = h + L.sinusoidal_positions(h.shape[1], cfg.d_model
+                                   ).astype(h.dtype)[None]
+    remat = jax.checkpoint if cfg.remat else (lambda f: f)
+
+    def body(h, p):
+        def f(p, h):
+            x = L.rms_norm(h, p["ln1"], cfg.rms_eps)
+            q, k, v = _qkv(p["attn"], x)
+            o = L.plain_attention(q, k, v, bidirectional=True)
+            h = h + L.attn_out(p["attn"], o)
+            x = L.rms_norm(h, p["ln2"], cfg.rms_eps)
+            return h + L.mlp(p["mlp"], x)
+        return remat(f)(p, h), None
+
+    h, _ = lax.scan(body, h, params["enc_layers"])
+    return L.rms_norm(h, params["enc_norm"], cfg.rms_eps)
+
+
+def _dec_layer(p, cfg, h, enc_out, positions):
+    x = L.rms_norm(h, p["ln1"], cfg.rms_eps)
+    q, k, v = _qkv(p["self_attn"], x)
+    o = L.chunked_attention(q, k, v, causal=True,
+                            chunk=min(cfg.attn_chunk, q.shape[1]))
+    h = h + L.attn_out(p["self_attn"], o)
+    x = L.rms_norm(h, p["ln_x"], cfg.rms_eps)
+    q = jnp.einsum("bld,dhk->blhk", x, p["cross_attn"]["wq"])
+    ke = jnp.einsum("bld,dhk->blhk", enc_out, p["cross_attn"]["wk"])
+    ve = jnp.einsum("bld,dhk->blhk", enc_out, p["cross_attn"]["wv"])
+    o = L.plain_attention(q, ke, ve, bidirectional=True)
+    h = h + L.attn_out(p["cross_attn"], o)
+    x = L.rms_norm(h, p["ln2"], cfg.rms_eps)
+    return h + L.mlp(p["mlp"], x)
+
+
+def encdec_forward(params, cfg: ModelConfig, frames, tokens):
+    enc_out = encode(params, cfg, frames)
+    h = embed_tokens(params, cfg, tokens)
+    h = h + L.sinusoidal_positions(h.shape[1], cfg.d_model
+                                   ).astype(h.dtype)[None]
+    positions = jnp.arange(h.shape[1])[None, :]
+    remat = jax.checkpoint if cfg.remat else (lambda f: f)
+
+    def body(h, p):
+        f = remat(lambda pp, hh: _dec_layer(pp, cfg, hh, enc_out, positions))
+        return f(p, h), None
+
+    h, _ = lax.scan(body, h, params["dec_layers"])
+    return L.rms_norm(h, params["final_norm"], cfg.rms_eps)
+
+
+def encdec_loss(params, cfg: ModelConfig, batch):
+    h = encdec_forward(params, cfg, batch["frames"], batch["tokens"])
+    logits = logits_fn(params, cfg, h)
+    mask = batch.get("mask", jnp.ones_like(batch["targets"], jnp.float32))
+    loss = softmax_xent(logits, batch["targets"], mask)
+    return loss, {"xent": loss}
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    nl = cfg.n_layers
+    t = cfg.n_audio_frames
+    return {
+        "self_k": jnp.zeros((nl, batch, seq_len, cfg.n_kv_heads, hd), dtype),
+        "self_v": jnp.zeros((nl, batch, seq_len, cfg.n_kv_heads, hd), dtype),
+        "cross_k": jnp.zeros((nl, batch, t, cfg.n_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((nl, batch, t, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def encdec_prefill(params, cfg: ModelConfig, frames, tokens, seq_len: int):
+    """Encode audio + run decoder prefix; emit self/cross caches."""
+    enc_out = encode(params, cfg, frames)
+    h = embed_tokens(params, cfg, tokens)
+    h = h + L.sinusoidal_positions(h.shape[1], cfg.d_model
+                                   ).astype(h.dtype)[None]
+    positions = jnp.arange(h.shape[1])[None, :]
+    pad = seq_len - h.shape[1]
+
+    def body(h, p):
+        x = L.rms_norm(h, p["ln1"], cfg.rms_eps)
+        _, k, v = _qkv(p["self_attn"], x)
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        xk = jnp.einsum("bld,dhk->blhk", enc_out, p["cross_attn"]["wk"])
+        xv = jnp.einsum("bld,dhk->blhk", enc_out, p["cross_attn"]["wv"])
+        h = _dec_layer(p, cfg, h, enc_out, positions)
+        return h, (kc, vc, xk, xv)
+
+    h, (kc, vc, xk, xv) = lax.scan(body, h, params["dec_layers"])
+    h = L.rms_norm(h, params["final_norm"], cfg.rms_eps)
+    logits = logits_fn(params, cfg, h[:, -1:])
+    return logits, {"self_k": kc, "self_v": vc, "cross_k": xk,
+                    "cross_v": xv}
+
+
+def encdec_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    from repro.models.transformer import scan_layers_carry
+    h = embed_tokens(params, cfg, tokens)
+    pos_emb = L.sinusoidal_positions(cache["self_k"].shape[2] + 0,
+                                     cfg.d_model)
+    h = h + lax.dynamic_slice_in_dim(pos_emb, pos, 1, 0)[None].astype(h.dtype)
+
+    def body(h, p, st):
+        kc, vc, xk, xv = st["k"], st["v"], st["xk"], st["xv"]
+        x = L.rms_norm(h, p["ln1"], cfg.rms_eps)
+        q, k, v = _qkv(p["self_attn"], x)
+        kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, 1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, 1)
+        o = L.decode_attention(q, kc, vc, pos)
+        h = h + L.attn_out(p["self_attn"], o)
+        x = L.rms_norm(h, p["ln_x"], cfg.rms_eps)
+        q = jnp.einsum("bld,dhk->blhk", x, p["cross_attn"]["wq"])
+        o = L.plain_attention(q, xk, xv, bidirectional=True)
+        h = h + L.attn_out(p["cross_attn"], o)
+        x = L.rms_norm(h, p["ln2"], cfg.rms_eps)
+        h = h + L.mlp(p["mlp"], x)
+        return h, {"k": kc, "v": vc, "xk": xk, "xv": xv}
+
+    state0 = {"k": cache["self_k"], "v": cache["self_v"],
+              "xk": cache["cross_k"], "xv": cache["cross_v"]}
+    h, st = scan_layers_carry(body, h, params["dec_layers"], state0,
+                              cfg.n_layers)
+    h = L.rms_norm(h, params["final_norm"], cfg.rms_eps)
+    cache = dict(cache, self_k=st["k"], self_v=st["v"])
+    return logits_fn(params, cfg, h), cache

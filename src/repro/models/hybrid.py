@@ -1,0 +1,227 @@
+"""Zamba2-style hybrid: Mamba2 backbone + alternating *shared* attention
+blocks applied after every `shared_attn_period` mamba layers.
+
+Layer layout for n_layers=81, period=6:
+  13 groups of (6 mamba layers + shared attn block[i % 2]) + 3 tail mamba
+Shared attention blocks have their own KV cache per *invocation* (13 of
+them) even though weights are shared (2 unique blocks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models.transformer import (embed_tokens, logits_fn, padded_vocab,
+                                      softmax_xent)
+
+
+def split_counts(cfg: ModelConfig):
+    period = cfg.shared_attn_period
+    n_groups = cfg.n_layers // period
+    n_tail = cfg.n_layers - n_groups * period
+    return period, n_groups, n_tail
+
+
+def init_hybrid(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    period, n_groups, n_tail = split_counts(cfg)
+    ks = jax.random.split(key, 8)
+    vp = padded_vocab(cfg.vocab)
+
+    def init_mamba_layer(k):
+        return {"ln": jnp.zeros((cfg.d_model,), dtype),
+                "mamba": M.init_mamba(k, cfg.d_model, cfg.ssm, dtype)}
+
+    def init_shared_block(k):
+        from repro.models.transformer import init_dense_layer
+        return init_dense_layer(k, cfg, dtype)
+
+    group_keys = jax.random.split(ks[0], n_groups * period)
+    groups = jax.vmap(init_mamba_layer)(group_keys)
+    groups = jax.tree.map(
+        lambda x: x.reshape((n_groups, period) + x.shape[1:]), groups)
+    params = {
+        "embed": (jax.random.normal(ks[1], (vp, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dtype),
+        "mamba_groups": groups,
+        "shared": jax.vmap(init_shared_block)(
+            jax.random.split(ks[2], cfg.n_shared_blocks)),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": (jax.random.normal(ks[3], (cfg.d_model, vp))
+                    * cfg.d_model ** -0.5).astype(dtype),
+    }
+    if n_tail:
+        params["mamba_tail"] = jax.vmap(init_mamba_layer)(
+            jax.random.split(ks[4], n_tail))
+    return params
+
+
+def _mamba_layer(p, cfg, h, *, return_state=False):
+    x = L.rms_norm(h, p["ln"], cfg.rms_eps)
+    if return_state:
+        y, st = M.mamba_forward(p["mamba"], x, cfg.ssm, return_state=True)
+        return h + y, st
+    return h + M.mamba_forward(p["mamba"], x, cfg.ssm)
+
+
+def _shared_block_fwd(p, cfg, h, positions):
+    from repro.models.transformer import attn_block, ffn_block
+    h = attn_block(p, cfg, h, window=0, positions=positions)
+    h, _ = ffn_block(p, cfg, h)
+    return h
+
+
+def hybrid_hidden(params, cfg: ModelConfig, h, positions):
+    period, n_groups, n_tail = split_counts(cfg)
+    remat = jax.checkpoint if cfg.remat else (lambda f: f)
+
+    def group_body(carry, xs):
+        h = carry
+        gi, p_group = xs
+
+        def inner(h, p_l):
+            f = remat(lambda p, hh: _mamba_layer(p, cfg, hh))
+            return f(p_l, h), None
+
+        h, _ = lax.scan(inner, h, p_group)
+        shared_p = jax.tree.map(
+            lambda x: x[gi % cfg.n_shared_blocks], params["shared"])
+        f = remat(lambda p, hh: _shared_block_fwd(p, cfg, hh, positions))
+        h = f(shared_p, h)
+        return h, None
+
+    h, _ = lax.scan(group_body, h,
+                    (jnp.arange(n_groups), params["mamba_groups"]))
+    if n_tail:
+        def inner(h, p_l):
+            f = remat(lambda p, hh: _mamba_layer(p, cfg, hh))
+            return f(p_l, h), None
+        h, _ = lax.scan(inner, h, params["mamba_tail"])
+    return h
+
+
+def hybrid_forward(params, cfg: ModelConfig, tokens):
+    h = embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(h.shape[1])[None, :]
+    h = hybrid_hidden(params, cfg, h, positions)
+    h = L.rms_norm(h, params["final_norm"], cfg.rms_eps)
+    return h
+
+
+def hybrid_loss(params, cfg: ModelConfig, batch):
+    h = hybrid_forward(params, cfg, batch["tokens"])
+    logits = logits_fn(params, cfg, h)
+    mask = batch.get("mask", jnp.ones_like(batch["targets"], jnp.float32))
+    loss = softmax_xent(logits, batch["targets"], mask)
+    return loss, {"xent": loss}
+
+
+# --------------------------------------------------------------- serving
+
+def hybrid_init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    period, n_groups, n_tail = split_counts(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    st = M.mamba_init_state(batch, cfg.d_model, cfg.ssm, dtype)
+    stack = lambda x, n: jnp.broadcast_to(x[None], (n,) + x.shape)
+    cache = {
+        "group_states": jax.tree.map(
+            lambda x: stack(x, n_groups * period).reshape(
+                (n_groups, period) + x.shape), st),
+        "attn_k": jnp.zeros((n_groups, batch, seq_len, cfg.n_kv_heads, hd),
+                            dtype),
+        "attn_v": jnp.zeros((n_groups, batch, seq_len, cfg.n_kv_heads, hd),
+                            dtype),
+    }
+    if n_tail:
+        cache["tail_states"] = jax.tree.map(lambda x: stack(x, n_tail), st)
+    return cache
+
+
+def _mamba_layer_decode(p, cfg, h, state):
+    x = L.rms_norm(h, p["ln"], cfg.rms_eps)
+    y, state = M.mamba_decode_step(p["mamba"], x, state, cfg.ssm)
+    return h + y, state
+
+
+def hybrid_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    period, n_groups, n_tail = split_counts(cfg)
+    h = embed_tokens(params, cfg, tokens)
+    from repro.models.transformer import _gqa_layer_decode, \
+        scan_layers_carry
+
+    def group_body(h, xs, state):
+        gi, p_group = xs
+
+        def inner(h, p_l, st):
+            return _mamba_layer_decode(p_l, cfg, h, st)
+
+        h, mstates = scan_layers_carry(inner, h, p_group,
+                                       state["mamba"], period)
+        shared_p = jax.tree.map(
+            lambda x: x[gi % cfg.n_shared_blocks], params["shared"])
+        h, kc, vc = _gqa_layer_decode(shared_p, cfg, h, state["k"],
+                                      state["v"], pos, 0)
+        return h, {"mamba": mstates, "k": kc, "v": vc}
+
+    state0 = {"mamba": cache["group_states"], "k": cache["attn_k"],
+              "v": cache["attn_v"]}
+    h, state = scan_layers_carry(
+        lambda h, xs, st: group_body(h, xs, st), h,
+        (jnp.arange(n_groups), params["mamba_groups"]), state0, n_groups)
+    new_cache = {"group_states": state["mamba"], "attn_k": state["k"],
+                 "attn_v": state["v"]}
+
+    if n_tail:
+        def inner(h, p_l, st):
+            return _mamba_layer_decode(p_l, cfg, h, st)
+        h, tstates = scan_layers_carry(inner, h, params["mamba_tail"],
+                                       cache["tail_states"], n_tail)
+        new_cache["tail_states"] = tstates
+
+    h = L.rms_norm(h, params["final_norm"], cfg.rms_eps)
+    return logits_fn(params, cfg, h), new_cache
+
+
+def hybrid_prefill(params, cfg: ModelConfig, tokens, seq_len: int):
+    """Prefill: full forward that also emits decode-ready caches — the SSD
+    chunked scan's final carry is the SSM state; shared blocks emit K/V."""
+    period, n_groups, n_tail = split_counts(cfg)
+    h = embed_tokens(params, cfg, tokens)
+    b, l, _ = h.shape
+    positions = jnp.arange(l)[None, :]
+    pad = seq_len - l
+
+    def group_body(carry, xs):
+        h = carry
+        gi, p_group = xs
+
+        def inner(h, p_l):
+            return _mamba_layer(p_l, cfg, h, return_state=True)
+
+        h, states = lax.scan(inner, h, p_group)
+        shared_p = jax.tree.map(
+            lambda x: x[gi % cfg.n_shared_blocks], params["shared"])
+        x = L.rms_norm(h, shared_p["ln1"], cfg.rms_eps)
+        k = jnp.einsum("bld,dhk->blhk", x, shared_p["attn"]["wk"])
+        v = jnp.einsum("bld,dhk->blhk", x, shared_p["attn"]["wv"])
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        h = _shared_block_fwd(shared_p, cfg, h, positions)
+        return h, (states, k, v)
+
+    h, (gstates, kc, vc) = lax.scan(
+        group_body, h, (jnp.arange(n_groups), params["mamba_groups"]))
+    cache = {"group_states": gstates, "attn_k": kc, "attn_v": vc}
+    if n_tail:
+        def inner(h, p_l):
+            return _mamba_layer(p_l, cfg, h, return_state=True)
+        h, tstates = lax.scan(inner, h, params["mamba_tail"])
+        cache["tail_states"] = tstates
+    h = L.rms_norm(h, params["final_norm"], cfg.rms_eps)
+    return logits_fn(params, cfg, h[:, -1:]), cache

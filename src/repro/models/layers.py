@@ -1,0 +1,258 @@
+"""Core layers: norms, RoPE, GQA/chunked/local attention, SwiGLU MLP.
+
+All attention math accumulates in fp32; parameters and activations are bf16
+by default. Attention avoids materializing repeated KV heads by computing in
+grouped layout (B, Lq, Hkv, G, Dh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.meshctx import shard_act
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- norms/rope
+
+def rms_norm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., L, H, D); positions: (..., L) int32."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., L, d/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., L, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * i / dim))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------- attention
+
+def _grouped(q, n_kv: int):
+    """(B, L, H, D) -> (B, L, Hkv, G, D)."""
+    b, l, h, d = q.shape
+    return q.reshape(b, l, n_kv, h // n_kv, d)
+
+
+def attention_scores_mask(qpos, kpos, window: int, causal: bool):
+    """(Lq, Lk) additive mask."""
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def plain_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    bidirectional=False):
+    """Reference attention. q: (B,Lq,H,D), k/v: (B,Lk,Hkv,D)."""
+    b, lq, h, d = q.shape
+    n_kv = k.shape[2]
+    qg = _grouped(q, n_kv).astype(jnp.float32)
+    scale = d ** -0.5
+    scores = jnp.einsum("blhgd,bmhd->bhglm", qg * scale,
+                        k.astype(jnp.float32))
+    qpos = q_offset + jnp.arange(lq)
+    kpos = jnp.arange(k.shape[1])
+    if not bidirectional:
+        scores += attention_scores_mask(qpos, kpos, window, True)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhglm,bmhd->blhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, lq, h, d).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, chunk=1024,
+                      triangle_skip=False):
+    """Flash-style online-softmax attention, O(chunk*Lk) live memory.
+
+    Scans query chunks; for each, scans KV chunks with a running
+    (max, denom, acc).
+
+    - `window` (local attention): only the last ceil(window/chunk)+1 KV
+      chunks are read per query chunk (structural skip) -> O(L*window) FLOPs.
+      Differentiable.
+    - global causal, default: masked scan over *all* KV chunks. This is
+      differentiable but spends 2x the ideal causal FLOPs; the Pallas flash
+      kernel and the `triangle_skip` path below avoid that.
+    - `triangle_skip=True`: bound the KV scan at the query chunk's diagonal
+      via fori_loop (dynamic trip count). NOT differentiable -> prefill only.
+    """
+    b, lq, h, d = q.shape
+    n_kv = k.shape[2]
+    lk = k.shape[1]
+    chunk = min(chunk, lq)
+    assert lq % chunk == 0 and lk % chunk == 0, (lq, lk, chunk)
+    nq, nk = lq // chunk, lk // chunk
+    scale = d ** -0.5
+    g = h // n_kv
+    qg = (_grouped(q, n_kv).astype(jnp.float32) * scale
+          ).reshape(b, nq, chunk, n_kv, g, d)
+
+    def q_chunk_body(qi, qc):
+        """qc: (B,chunk,Hkv,G,D) fp32. Returns (B,chunk,Hkv,G,D)."""
+        qpos = qi * chunk + jnp.arange(chunk)
+
+        if window:
+            nwin = min(nk, window // chunk + 1)
+            first = jnp.maximum(qi - (nwin - 1), 0)
+            ks = lax.dynamic_slice_in_dim(k, first * chunk, nwin * chunk, 1)
+            vs = lax.dynamic_slice_in_dim(v, first * chunk, nwin * chunk, 1)
+            kpos = first * chunk + jnp.arange(nwin * chunk)
+            mask = attention_scores_mask(qpos, kpos, window, causal)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc,
+                           ks.astype(jnp.float32)) + mask
+            m = jnp.max(s, axis=-1, keepdims=True)
+            p = jnp.exp(s - m)
+            denom = jnp.sum(p, axis=-1, keepdims=True)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", p / jnp.maximum(denom, 1e-30),
+                           vs.astype(jnp.float32))
+            return o.astype(q.dtype)
+
+        def kv_step(carry, ki):
+            m, den, acc = carry
+            ks = lax.dynamic_slice_in_dim(k, ki * chunk, chunk, 1)
+            vs = lax.dynamic_slice_in_dim(v, ki * chunk, chunk, 1)
+            kpos = ki * chunk + jnp.arange(chunk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, ks.astype(jnp.float32))
+            if causal:
+                s += attention_scores_mask(qpos, kpos, 0, True)
+            m2 = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            corr = jnp.exp(m - m2)
+            p = jnp.exp(s - m2)
+            den = den * corr + jnp.sum(p, axis=-1, keepdims=True)
+            pv = jnp.einsum("bhgqk,bkhd->bqhgd", p, vs.astype(jnp.float32))
+            acc = acc * jnp.moveaxis(corr, (1, 2, 3), (2, 3, 1)) + pv
+            return (m2, den, acc)
+
+        m0 = jnp.full((b, n_kv, g, chunk, 1), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((b, n_kv, g, chunk, 1), jnp.float32)
+        a0 = jnp.zeros((b, chunk, n_kv, g, d), jnp.float32)
+        if causal and triangle_skip:
+            m, den, acc = lax.fori_loop(
+                0, qi + 1, lambda ki, c: kv_step(c, ki), (m0, d0, a0))
+        else:
+            (m, den, acc), _ = lax.scan(
+                lambda c, ki: (kv_step(c, ki), None), (m0, d0, a0),
+                jnp.arange(nk))
+        den = jnp.moveaxis(den, (1, 2, 3), (2, 3, 1))
+        return (acc / jnp.maximum(den, 1e-30)).astype(q.dtype)
+
+    out = lax.map(lambda args: q_chunk_body(*args),
+                  (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, lq, h, d)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0):
+    """Single-token attention against a cache.
+
+    q: (B,1,H,D); caches: (B,S,Hkv,D); pos: scalar int32 (index of the new
+    token). Entries at kpos > pos are masked out.
+    """
+    b, _, h, d = q.shape
+    n_kv = k_cache.shape[2]
+    qg = _grouped(q, n_kv).astype(jnp.float32) * (d ** -0.5)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache.astype(jnp.float32))
+    kpos = jnp.arange(k_cache.shape[1])
+    ok = kpos <= pos
+    if window:
+        ok &= kpos > pos - window
+    s = jnp.where(ok[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- blocks
+
+@dataclasses.dataclass
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+
+
+def init_attn(key, dims: AttnDims, dtype):
+    d, h, hkv, hd = dims.d_model, dims.n_heads, dims.n_kv_heads, dims.head_dim
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h, hd)) * std).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, hkv, hd)) * std).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, hkv, hd)) * std).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (h, hd, d)) * std).astype(dtype),
+    }
+    if dims.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((hkv, hd), dtype)
+        p["bv"] = jnp.zeros((hkv, hd), dtype)
+    return p
+
+
+def attn_qkv(p, x, positions, theta):
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+    k = jnp.einsum("bld,dhk->blhk", x, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    q = shard_act(q, "batch", None, "model", None)
+    k = shard_act(k, "batch", None, None, None)
+    return q, k, v
+
+
+def attn_out(p, o):
+    return jnp.einsum("blhk,hkd->bld", o, p["wo"])
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": (jax.random.normal(ks[0], (d_model, d_ff))
+               * d_model ** -0.5).astype(dtype),
+        "wg": (jax.random.normal(ks[1], (d_model, d_ff))
+               * d_model ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[2], (d_ff, d_model))
+               * d_ff ** -0.5).astype(dtype),
+    }
+
+
+def mlp(p, x):
+    h = jnp.einsum("bld,df->blf", x, p["wi"])
+    g = jnp.einsum("bld,df->blf", x, p["wg"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    h = shard_act(h, "batch", None, "model")
+    return jnp.einsum("blf,fd->bld", h, p["wo"])

@@ -1,0 +1,234 @@
+"""Mamba2 (SSD, state-space duality) block: chunked train scan + O(1) decode.
+
+Follows the minimal SSD formulation (Dao & Gu, arXiv:2405.21060):
+  h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t ;  y_t = C_t . h_t + D x_t
+computed chunk-parallel: intra-chunk quadratic attention-like term +
+inter-chunk state recurrence (lax.scan over chunks).
+
+Projections are kept *separate* (wz/wx/wB/wC/wdt) rather than packed so the
+x/z channels — and therefore the SSD heads — shard cleanly over the `model`
+mesh axis (Megatron column->row pattern with one all-reduce at out_proj).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import SSMConfig
+from repro.distributed.meshctx import shard_act
+from repro.models.layers import rms_norm
+
+
+def mamba_dims(d_model: int, s: SSMConfig):
+    d_inner = s.expand * d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def init_mamba(key, d_model: int, s: SSMConfig, dtype):
+    d_inner, n_heads = mamba_dims(d_model, s)
+    gn = s.n_groups * s.d_state
+    ks = jax.random.split(key, 8)
+    std = d_model ** -0.5
+
+    def mat(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(dtype)
+
+    return {
+        "wz": mat(ks[0], (d_model, d_inner), std),
+        "wx": mat(ks[1], (d_model, d_inner), std),
+        "wB": mat(ks[2], (d_model, gn), std),
+        "wC": mat(ks[3], (d_model, gn), std),
+        "wdt": mat(ks[4], (d_model, n_heads), std),
+        "conv_x": mat(ks[5], (s.d_conv, d_inner), 0.2),
+        "conv_B": mat(ks[6], (s.d_conv, gn), 0.2),
+        "conv_C": mat(ks[7], (s.d_conv, gn), 0.2),
+        "conv_bx": jnp.zeros((d_inner,), dtype),
+        "conv_bB": jnp.zeros((gn,), dtype),
+        "conv_bC": jnp.zeros((gn,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(
+            jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm_w": jnp.zeros((d_inner,), dtype),
+        "out_proj": mat(ks[0], (d_inner, d_model), d_inner ** -0.5),
+    }
+
+
+def _causal_conv(u, w, bias):
+    """Depthwise causal conv. u: (B, L, C); w: (K, C)."""
+    k = w.shape[0]
+    out = jnp.zeros(u.shape, jnp.float32)
+    for i in range(k):
+        shift = k - 1 - i
+        pad = jnp.pad(u, ((0, 0), (shift, 0), (0, 0)))[:, :u.shape[1]]
+        out = out + pad.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + bias.astype(jnp.float32)).astype(u.dtype)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, *, return_state=False):
+    """SSD scan. x: (Bt,L,H,P); dt:(Bt,L,H); A:(H,); B,C:(Bt,L,G,N); D:(H,).
+
+    Returns y: (Bt,L,H,P) (and the final SSM state (Bt,H,N,P) when
+    `return_state`). G divides H (B/C broadcast over H//G heads).
+    """
+    bt, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    rep = h // g
+
+    xf = x.astype(jnp.float32).reshape(bt, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bt, nc, chunk, h)
+    Bf = B.astype(jnp.float32).reshape(bt, nc, chunk, g, n)
+    Cf = C.astype(jnp.float32).reshape(bt, nc, chunk, g, n)
+    Bh = jnp.repeat(Bf, rep, axis=3)                    # (bt,nc,Q,h,n)
+    Ch = jnp.repeat(Cf, rep, axis=3)
+
+    dA = dtf * A                                        # (bt,nc,Q,h) negative
+    cum = jnp.cumsum(dA, axis=2)                        # within-chunk cumsum
+    seg_end = cum[:, :, -1:, :]                         # (bt,nc,1,h)
+
+    # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) dt_j (C_i.B_j) x_j
+    # NOTE: mask decay BEFORE exp — exp of the (positive) masked entries
+    # overflows and poisons the backward pass through jnp.where otherwise.
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (bt,nc,Qi,Qj,h)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, :, :, None], decay, -jnp.inf)
+    lmat = jnp.exp(decay)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh)       # (bt,nc,Qi,Qj,h)
+    w = cb * lmat * dtf[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xf)
+
+    # chunk summary states: S_c = sum_j exp(seg_end - cum_j) dt_j B_j x_j^T
+    wstate = jnp.exp(seg_end - cum) * dtf               # (bt,nc,Q,h)
+    s_chunk = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp", wstate, Bh, xf)
+
+    # inter-chunk recurrence over c: S <- S * exp(seg_end_c) + s_chunk_c
+    seg = jnp.exp(seg_end[:, :, 0, :])                  # (bt,nc,h)
+
+    def step(s, inp):
+        seg_c, sc = inp
+        y_state = s                                     # state BEFORE chunk c
+        s = s * seg_c[:, :, None, None] + sc
+        return s, y_state
+
+    s0 = jnp.zeros((bt, h, n, p), jnp.float32)
+    s_final, s_before = lax.scan(step, s0,
+                                 (jnp.moveaxis(seg, 1, 0),
+                                  jnp.moveaxis(s_chunk, 1, 0)))
+    s_before = jnp.moveaxis(s_before, 0, 1)             # (bt,nc,h,n,p)
+
+    # inter-chunk output: y_i += exp(cum_i) C_i . S_{before}
+    y_inter = jnp.einsum("bcih,bcihn,bchnp->bcihp",
+                         jnp.exp(cum), Ch, s_before)
+
+    y = (y_intra + y_inter).reshape(bt, l, h, p)
+    y = y + D[None, None, :, None] * x.astype(jnp.float32)
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, s_final
+    return y
+
+
+def mamba_forward(params, u, s: SSMConfig, *, return_state=False):
+    """Train/prefill forward. u: (B, L, D) -> (B, L, D).
+
+    With `return_state`, also returns the decode-ready state dict
+    ({'ssm','conv_x','conv_B','conv_C'}) after the last position.
+    """
+    d_model = u.shape[-1]
+    d_inner, n_heads = mamba_dims(d_model, s)
+    z = jnp.einsum("bld,de->ble", u, params["wz"])
+    x_raw = jnp.einsum("bld,de->ble", u, params["wx"])
+    B_raw = jnp.einsum("bld,de->ble", u, params["wB"])
+    C_raw = jnp.einsum("bld,de->ble", u, params["wC"])
+    dt = jnp.einsum("bld,de->ble", u, params["wdt"])
+    z = shard_act(z, "batch", None, "model")
+    x_raw = shard_act(x_raw, "batch", None, "model")
+
+    x = _causal_conv(x_raw, params["conv_x"], params["conv_bx"])
+    B = _causal_conv(B_raw, params["conv_B"], params["conv_bB"])
+    C = _causal_conv(C_raw, params["conv_C"], params["conv_bC"])
+
+    bt, l, _ = x.shape
+    xh = x.reshape(bt, l, n_heads, s.head_dim)
+    Bh = B.reshape(bt, l, s.n_groups, s.d_state)
+    Ch = C.reshape(bt, l, s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    out = ssd_chunked(xh, dtv, A, Bh, Ch, params["D"], s.chunk,
+                      return_state=return_state)
+    y, s_final = out if return_state else (out, None)
+    y = y.reshape(bt, l, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm_w"])
+    y = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    if return_state:
+        state = {"ssm": s_final,
+                 "conv_x": x_raw[:, -(s.d_conv - 1):],
+                 "conv_B": B_raw[:, -(s.d_conv - 1):],
+                 "conv_C": C_raw[:, -(s.d_conv - 1):]}
+        return y, state
+    return y
+
+
+def mamba_init_state(batch: int, d_model: int, s: SSMConfig, dtype):
+    d_inner, n_heads = mamba_dims(d_model, s)
+    gn = s.n_groups * s.d_state
+    return {
+        "ssm": jnp.zeros((batch, n_heads, s.d_state, s.head_dim),
+                         jnp.float32),
+        "conv_x": jnp.zeros((batch, s.d_conv - 1, d_inner), dtype),
+        "conv_B": jnp.zeros((batch, s.d_conv - 1, gn), dtype),
+        "conv_C": jnp.zeros((batch, s.d_conv - 1, gn), dtype),
+    }
+
+
+def _conv_step(window, w, bias):
+    """window: (B, K, C) raw inputs incl. current; returns (B, C)."""
+    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return jax.nn.silu(out + bias.astype(jnp.float32))
+
+
+def mamba_decode_step(params, u, state, s: SSMConfig):
+    """u: (B, 1, D); returns (y (B,1,D), new state)."""
+    d_model = u.shape[-1]
+    d_inner, n_heads = mamba_dims(d_model, s)
+    z = jnp.einsum("bld,de->ble", u, params["wz"])[:, 0]
+    x_new = jnp.einsum("bld,de->ble", u, params["wx"])[:, 0]
+    B_new = jnp.einsum("bld,de->ble", u, params["wB"])[:, 0]
+    C_new = jnp.einsum("bld,de->ble", u, params["wC"])[:, 0]
+    dt = jnp.einsum("bld,de->ble", u, params["wdt"])[:, 0]
+
+    wx = jnp.concatenate([state["conv_x"], x_new[:, None]], 1)
+    wB = jnp.concatenate([state["conv_B"], B_new[:, None]], 1)
+    wC = jnp.concatenate([state["conv_C"], C_new[:, None]], 1)
+    x = _conv_step(wx, params["conv_x"], params["conv_bx"])
+    B = _conv_step(wB, params["conv_B"], params["conv_bB"])
+    C = _conv_step(wC, params["conv_C"], params["conv_bC"])
+
+    b = u.shape[0]
+    xh = x.reshape(b, n_heads, s.head_dim)
+    rep = n_heads // s.n_groups
+    Bh = jnp.repeat(B.reshape(b, s.n_groups, s.d_state), rep, 1)
+    Ch = jnp.repeat(C.reshape(b, s.n_groups, s.d_state), rep, 1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    da = jnp.exp(dtv * A)                               # (B,H)
+    h = state["ssm"] * da[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dtv, Bh.astype(jnp.float32), xh)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), h)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)
+                                 ).astype(y.dtype)[:, None],
+                 params["norm_w"])
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    new_state = {"ssm": h,
+                 "conv_x": wx[:, 1:], "conv_B": wB[:, 1:],
+                 "conv_C": wC[:, 1:]}
+    return out, new_state

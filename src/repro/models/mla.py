@@ -1,0 +1,137 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries are low-rank projected (q_lora_rank); keys/values are compressed to a
+`kv_lora_rank` latent plus a single shared rope key. The decode cache stores
+only (c_kv, k_rope) — `kv_lora_rank + rope_dim` floats/token instead of
+2*H*Dh — and the decode path *absorbs* W_uk / W_uv so attention runs in
+latent space (the memory-roofline win that motivates MLA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.distributed.meshctx import shard_act
+from repro.models.layers import (NEG_INF, apply_rope, chunked_attention,
+                                 plain_attention, rms_norm)
+
+
+def init_mla(key, d_model: int, n_heads: int, m: MLAConfig, dtype):
+    ks = jax.random.split(key, 8)
+    std = d_model ** -0.5
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    p = {
+        "w_dq": (jax.random.normal(ks[0], (d_model, m.q_lora_rank)) * std
+                 ).astype(dtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), dtype),
+        "w_uq": (jax.random.normal(ks[1], (m.q_lora_rank, n_heads, qk_dim))
+                 * m.q_lora_rank ** -0.5).astype(dtype),
+        "w_dkv": (jax.random.normal(ks[2], (d_model, m.kv_lora_rank)) * std
+                  ).astype(dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "w_kr": (jax.random.normal(ks[3], (d_model, m.qk_rope_head_dim))
+                 * std).astype(dtype),
+        "w_uk": (jax.random.normal(
+            ks[4], (m.kv_lora_rank, n_heads, m.qk_nope_head_dim))
+            * m.kv_lora_rank ** -0.5).astype(dtype),
+        "w_uv": (jax.random.normal(
+            ks[5], (m.kv_lora_rank, n_heads, m.v_head_dim))
+            * m.kv_lora_rank ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[6], (n_heads, m.v_head_dim, d_model))
+               * (n_heads * m.v_head_dim) ** -0.5).astype(dtype),
+    }
+    return p
+
+
+def _latents(p, x, m: MLAConfig, theta, positions):
+    """Compute (c_kv normalized, k_rope roped) from x: (B,L,D)."""
+    c_kv = rms_norm(jnp.einsum("bld,dr->blr", x, p["w_dkv"]), p["kv_norm"])
+    k_r = jnp.einsum("bld,dr->blr", x, p["w_kr"])[:, :, None, :]  # (B,L,1,R)
+    k_r = apply_rope(k_r, positions, theta)[:, :, 0, :]
+    return c_kv, k_r
+
+
+def _queries(p, x, m: MLAConfig, theta, positions):
+    cq = rms_norm(jnp.einsum("bld,dr->blr", x, p["w_dq"]), p["q_norm"])
+    q = jnp.einsum("blr,rhk->blhk", cq, p["w_uq"])
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, theta)
+    return q_nope, q_rope
+
+
+def mla_forward(p, x, m: MLAConfig, theta, *, chunk=1024,
+                triangle_skip=False):
+    """Training/prefill forward (naive materialized K/V; differentiable
+    unless triangle_skip — prefill-only causal-diagonal bound)."""
+    b, l, _ = x.shape
+    positions = jnp.arange(l)[None, :]
+    q_nope, q_rope = _queries(p, x, m, theta, positions)
+    c_kv, k_r = _latents(p, x, m, theta, positions)
+    k_nope = jnp.einsum("blr,rhk->blhk", c_kv, p["w_uk"])
+    v = jnp.einsum("blr,rhk->blhk", c_kv, p["w_uv"])
+    h = q_nope.shape[2]
+    k_rope = jnp.broadcast_to(k_r[:, :, None, :],
+                              (b, l, h, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, k_rope], -1)
+    q = shard_act(q, "batch", None, "model", None)
+    k = shard_act(k, "batch", None, "model", None)
+    # pad v to qk dim so we can reuse the attention primitive, then slice
+    pad = q.shape[-1] - m.v_head_dim
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    o = chunked_attention(q, k, vp, causal=True, chunk=min(chunk, l),
+                          triangle_skip=triangle_skip)
+    o = o[..., :m.v_head_dim]
+    return jnp.einsum("blhk,hkd->bld", o, p["wo"])
+
+
+def mla_init_cache(batch: int, seq_len: int, m: MLAConfig, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, seq_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, seq_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_prefill_cache(p, x, m: MLAConfig, theta, seq_len: int):
+    b, l, _ = x.shape
+    positions = jnp.arange(l)[None, :]
+    c_kv, k_r = _latents(p, x, m, theta, positions)
+    pad = seq_len - l
+    return {
+        "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+        "k_rope": jnp.pad(k_r, ((0, 0), (0, pad), (0, 0))),
+    }
+
+
+def mla_decode_step(p, x, cache, pos, m: MLAConfig, theta):
+    """x: (B,1,D). Absorbed attention in latent space.
+
+    scores = q_nope^T W_uk c_kv  +  q_rope^T k_rope
+    out    = softmax(scores) c_kv W_uv
+    """
+    b = x.shape[0]
+    positions = pos[None, None] if pos.ndim == 0 else pos[:, None]
+    q_nope, q_rope = _queries(p, x, m, theta, positions)   # (B,1,H,*)
+    c_new, kr_new = _latents(p, x, m, theta, positions)    # (B,1,R),(B,1,Rr)
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos,
+            axis=1),
+    }
+    # absorb W_uk into q: (B,1,H,R)
+    q_lat = jnp.einsum("blhk,rhk->blhr", q_nope, p["w_uk"])
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (jnp.einsum("blhr,bmr->bhlm", q_lat.astype(jnp.float32),
+                    cache["c_kv"].astype(jnp.float32))
+         + jnp.einsum("blhk,bmk->bhlm", q_rope.astype(jnp.float32),
+                      cache["k_rope"].astype(jnp.float32))) * scale
+    kpos = jnp.arange(cache["c_kv"].shape[1])
+    s = jnp.where(kpos[None, None, None, :] <= pos, s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhlm,bmr->blhr", prob,
+                       cache["c_kv"].astype(jnp.float32))   # (B,1,H,R)
+    o = jnp.einsum("blhr,rhk->blhk", o_lat.astype(x.dtype), p["w_uv"])
+    return jnp.einsum("blhk,hkd->bld", o, p["wo"]), cache

@@ -1,0 +1,185 @@
+"""Unified model API: build_model(config) -> Model with init/loss/serve fns.
+
+All functions are pure; params/caches are pytrees of jnp arrays so they can
+be created abstractly via jax.eval_shape for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import ssm as SM
+from repro.models import transformer as TF
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable[[jax.Array], Any]
+    loss_fn: Callable[[Any, Dict[str, jax.Array]], Any]
+    init_cache: Callable[[int, int], Any]
+    prefill_fn: Callable[..., Any]
+    decode_fn: Callable[..., Any]
+
+    def abstract_params(self, seed: int = 0):
+        return jax.eval_shape(self.init_params,
+                              jax.random.key(seed))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def init_params(key):
+            return TF.init_decoder(key, cfg)
+
+        def loss_fn(params, batch):
+            return TF.decoder_loss(params, cfg, batch)
+
+        def init_cache(batch, seq_len):
+            return TF.init_cache(cfg, batch, seq_len)
+
+        def prefill_fn(params, batch, seq_len):
+            return TF.prefill(params, cfg, batch["tokens"], seq_len,
+                              patches=batch.get("patches"))
+
+        def decode_fn(params, cache, tokens, pos):
+            return TF.decode_step(params, cfg, cache, tokens, pos)
+
+    elif fam == "hybrid":
+        def init_params(key):
+            return HY.init_hybrid(key, cfg)
+
+        def loss_fn(params, batch):
+            return HY.hybrid_loss(params, cfg, batch)
+
+        def init_cache(batch, seq_len):
+            return HY.hybrid_init_cache(cfg, batch, seq_len)
+
+        def prefill_fn(params, batch, seq_len):
+            return HY.hybrid_prefill(params, cfg, batch["tokens"], seq_len)
+
+        def decode_fn(params, cache, tokens, pos):
+            return HY.hybrid_decode_step(params, cfg, cache, tokens, pos)
+
+    elif fam == "ssm":
+        def init_params(key):
+            return SM.init_ssm_lm(key, cfg)
+
+        def loss_fn(params, batch):
+            return SM.ssm_loss(params, cfg, batch)
+
+        def init_cache(batch, seq_len):
+            return SM.ssm_init_cache(cfg, batch, seq_len)
+
+        def prefill_fn(params, batch, seq_len):
+            return SM.ssm_prefill(params, cfg, batch["tokens"], seq_len)
+
+        def decode_fn(params, cache, tokens, pos):
+            return SM.ssm_decode_step(params, cfg, cache, tokens, pos)
+
+    elif fam == "audio":
+        def init_params(key):
+            return ED.init_encdec(key, cfg)
+
+        def loss_fn(params, batch):
+            return ED.encdec_loss(params, cfg, batch)
+
+        def init_cache(batch, seq_len):
+            return ED.encdec_init_cache(cfg, batch, seq_len)
+
+        def prefill_fn(params, batch, seq_len):
+            return ED.encdec_prefill(params, cfg, batch["frames"],
+                                     batch["tokens"], seq_len)
+
+        def decode_fn(params, cache, tokens, pos):
+            return ED.encdec_decode_step(params, cfg, cache, tokens, pos)
+
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    return Model(cfg, init_params, loss_fn, init_cache, prefill_fn,
+                 decode_fn)
+
+
+# -------------------------------------------------------- input specs
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                prompt_frac: float = 0.5) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell.
+
+    train: token/target batch. prefill: prompt of seq_len. decode: one new
+    token + the positions scalar (cache specs come from init_cache).
+    """
+    b, l = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": sds((b, l), i32), "targets": sds((b, l), i32),
+                 "mask": sds((b, l), jnp.float32)}
+        if cfg.family == "vlm":
+            lt = l - cfg.n_patches
+            specs["tokens"] = sds((b, lt), i32)
+            specs["targets"] = sds((b, lt), i32)
+            specs["mask"] = sds((b, lt), jnp.float32)
+            specs["patches"] = sds((b, cfg.n_patches, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+        if cfg.family == "audio":
+            specs["frames"] = sds((b, cfg.n_audio_frames, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((b, l), i32)}
+        if cfg.family == "vlm":
+            specs["tokens"] = sds((b, l - cfg.n_patches), i32)
+            specs["patches"] = sds((b, cfg.n_patches, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+        if cfg.family == "audio":
+            specs["frames"] = sds((b, cfg.n_audio_frames, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+        return specs
+    # decode: one token against a cache of capacity seq_len
+    return {"tokens": sds((b, 1), i32), "pos": sds((), i32)}
+
+
+# -------------------------------------------------------- flops accounting
+
+def count_params(params) -> int:
+    return sum(int(jnp.size(x)) if hasattr(x, "size") else 0
+               for x in jax.tree.leaves(params))
+
+
+def count_params_abstract(model: Model) -> int:
+    shapes = model.abstract_params()
+    total = 0
+    for leaf in jax.tree.leaves(shapes):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+    return total
+
+
+def active_params(cfg: ModelConfig, n_total: int) -> int:
+    """Active params per token (MoE discounts inactive experts)."""
+    if cfg.moe is None:
+        return n_total
+    m = cfg.moe
+    n_moe_layers = cfg.n_layers - m.n_dense_layers
+    per_expert = 3 * cfg.d_model * m.d_ff_expert
+    inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    return n_total - inactive
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, n_params: int) -> float:
+    """MODEL_FLOPS: 6*N*D (train) / 2*N*D (fwd) with N = active params."""
+    n_act = active_params(cfg, n_params)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_act * tokens

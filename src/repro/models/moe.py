@@ -1,0 +1,175 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based sorted dispatch.
+
+Two dispatch modes (§Perf levers A/B — see EXPERIMENTS.md):
+
+* ``dense_capacity`` — flat global sort/scatter into an (E, C, D) buffer.
+  Simple, but on a sharded mesh XLA must gather all tokens to build the
+  expert buffer (and when E doesn't divide the model axis the buffer is
+  replicated and all-reduced: 13 TB/device/step on qwen2-moe train).
+* ``hierarchical`` — per-data-shard dispatch with an explicit leading shard
+  axis: each shard sorts and scatters only its local tokens into an
+  (S, E, C_local, D) buffer sharded (S->data, E->model). The only cross-
+  device movement is the buffer's data->expert resharding (an all-to-all of
+  the actual token payloads), which is the textbook EP pattern.
+
+Expert padding (``n_experts_padded``) rounds E up so EP divides the mesh;
+padded experts are masked to -inf in the router.
+
+FLOPs are `capacity_factor` x the ideal active FLOPs; slots over capacity
+drop (standard capacity semantics).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.distributed.meshctx import (batch_axes, current_mesh, shard_act)
+
+
+def init_moe(key, d_model: int, mcfg: MoEConfig, dtype):
+    ks = jax.random.split(key, 5)
+    e, f = mcfg.e_padded, mcfg.d_ff_expert
+    std_in = d_model ** -0.5
+    std_out = f ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, e)) * std_in
+                   ).astype(jnp.float32),
+        "wi": (jax.random.normal(ks[1], (e, d_model, f)) * std_in
+               ).astype(dtype),
+        "wg": (jax.random.normal(ks[2], (e, d_model, f)) * std_in
+               ).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (e, f, d_model)) * std_out
+               ).astype(dtype),
+    }
+    if mcfg.n_shared:
+        from repro.models.layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d_model, mcfg.n_shared * f, dtype)
+    return p
+
+
+def router_topk(logits, mcfg: MoEConfig):
+    """logits: (..., E_pad) fp32 -> (probs, idx, aux). Padded experts are
+    masked out before softmax."""
+    e, ep = mcfg.n_experts, mcfg.e_padded
+    if ep != e:
+        mask = jnp.arange(ep) < e
+        logits = jnp.where(mask, logits, -1e30)
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    probs, idx = jax.lax.top_k(probs_full, mcfg.top_k)
+    probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)
+    density = jnp.mean(jax.nn.one_hot(idx[..., 0], ep),
+                       axis=tuple(range(idx.ndim - 1)))
+    mean_probs = probs_full.reshape(-1, ep).mean(0)
+    aux = e * jnp.sum(density * mean_probs)
+    return probs, idx, aux
+
+
+def _capacity(t: int, mcfg: MoEConfig) -> int:
+    c = int(-(-t * mcfg.top_k * mcfg.capacity_factor // mcfg.e_padded))
+    return max(8, -(-c // 8) * 8)
+
+
+def _dispatch_flat(xf, probs, idx, p, mcfg: MoEConfig, c: int):
+    """One dispatch group: xf (T, D); returns combined output (T, D)."""
+    t, d = xf.shape
+    e, k = mcfg.e_padded, mcfg.top_k
+    flat_e = idx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    pos_in_e = jnp.arange(t * k) - seg_start[sorted_e]
+    keep = pos_in_e < c
+    tok_of_slot = order // k
+    e_idx = jnp.where(keep, sorted_e, e)
+    p_idx = jnp.where(keep, pos_in_e, 0)
+    buf = jnp.zeros((e + 1, c, d), xf.dtype)
+    buf = buf.at[e_idx, p_idx].set(xf[tok_of_slot], mode="drop")
+    buf = buf[:e]
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+    slot_out = out_buf[e_idx.clip(0, e - 1), p_idx]
+    slot_probs = probs.reshape(-1)[order]
+    slot_out = slot_out * (slot_probs * keep).astype(slot_out.dtype)[:, None]
+    out = jnp.zeros((t, d), jnp.float32).at[tok_of_slot].add(
+        slot_out.astype(jnp.float32))
+    return out
+
+
+def moe_ffn(p, x, mcfg: MoEConfig, *, capacity: int | None = None):
+    """x: (B, L, D) -> (B, L, D), aux_loss."""
+    b, l, d = x.shape
+    t = b * l
+    mesh = current_mesh()
+    hier = (mcfg.dispatch == "hierarchical" and mesh is not None)
+
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs, idx, aux = router_topk(logits, mcfg)
+
+    if not hier:
+        c = capacity or _capacity(t, mcfg)
+        out = _dispatch_flat(xf, probs, idx, p, mcfg, c)
+        out = out.reshape(b, l, d).astype(x.dtype)
+    else:
+        baxes = batch_axes()
+        s = int(np.prod([mesh.shape[a] for a in baxes]))
+        if t % s or b % s:
+            s = 1
+        t_loc = t // s
+        c = capacity or _capacity(t_loc, mcfg)
+        e, k = mcfg.e_padded, mcfg.top_k
+        x3 = xf.reshape(s, t_loc, d)
+        x3 = shard_act(x3, "batch", None, None)
+        probs3 = probs.reshape(s, t_loc, k)
+        idx3 = idx.reshape(s, t_loc, k)
+
+        # per-shard local sort/scatter (vmapped over the shard axis)
+        def local_dispatch(xs, ps, ix):
+            flat_e = ix.reshape(-1)
+            order = jnp.argsort(flat_e, stable=True)
+            sorted_e = flat_e[order]
+            seg = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+            pos = jnp.arange(t_loc * k) - seg[sorted_e]
+            keep = pos < c
+            tok = order // k
+            e_i = jnp.where(keep, sorted_e, e)
+            p_i = jnp.where(keep, pos, 0)
+            buf = jnp.zeros((e + 1, c, d), xs.dtype)
+            buf = buf.at[e_i, p_i].set(xs[tok], mode="drop")[:e]
+            return buf, (e_i, p_i, tok, keep, order)
+
+        buf, meta = jax.vmap(local_dispatch)(x3, probs3, idx3)
+        # (S, E, C, D): S->data shards, E->experts; the constraint below
+        # makes XLA materialize the data->expert all-to-all exactly once
+        buf = shard_act(buf, "batch", "model", None, None)
+
+        h = jnp.einsum("secd,edf->secf", buf, p["wi"])
+        g = jnp.einsum("secd,edf->secf", buf, p["wg"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+        out_buf = jnp.einsum("secf,efd->secd", h, p["wo"])
+        out_buf = shard_act(out_buf, "batch", "model", None, None)
+
+        def local_combine(ob, xs, ps, m):
+            e_i, p_i, tok, keep, order = m
+            slot_out = ob[e_i.clip(0, e - 1), p_i]
+            slot_probs = ps.reshape(-1)[order]
+            slot_out = slot_out * (slot_probs * keep
+                                   ).astype(slot_out.dtype)[:, None]
+            return jnp.zeros((t_loc, d), jnp.float32).at[tok].add(
+                slot_out.astype(jnp.float32))
+
+        out = jax.vmap(local_combine)(out_buf, x3, probs3, meta)
+        out = out.reshape(b, l, d).astype(x.dtype)
+        out = shard_act(out, "batch", None, None)
+
+    if mcfg.n_shared:
+        from repro.models.layers import mlp
+        out = out + mlp(p["shared"], x)
+    return out, aux

@@ -1,0 +1,98 @@
+"""Pure Mamba2 LM (attention-free): scan over SSD layers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models.transformer import (embed_tokens, logits_fn, padded_vocab,
+                                      softmax_xent)
+
+
+def init_ssm_lm(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    vp = padded_vocab(cfg.vocab)
+    ks = jax.random.split(key, 4)
+
+    def init_layer(k):
+        return {"ln": jnp.zeros((cfg.d_model,), dtype),
+                "mamba": M.init_mamba(k, cfg.d_model, cfg.ssm, dtype)}
+
+    params = {
+        "embed": (jax.random.normal(ks[0], (vp, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dtype),
+        "layers": jax.vmap(init_layer)(jax.random.split(ks[1],
+                                                        cfg.n_layers)),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(ks[2], (cfg.d_model, vp))
+                             * cfg.d_model ** -0.5).astype(dtype)
+    return params
+
+
+def _layer(p, cfg, h, *, return_state=False):
+    x = L.rms_norm(h, p["ln"], cfg.rms_eps)
+    if return_state:
+        y, st = M.mamba_forward(p["mamba"], x, cfg.ssm, return_state=True)
+        return h + y, st
+    return h + M.mamba_forward(p["mamba"], x, cfg.ssm)
+
+
+def ssm_forward(params, cfg: ModelConfig, tokens):
+    h = embed_tokens(params, cfg, tokens)
+    remat = jax.checkpoint if cfg.remat else (lambda f: f)
+
+    def body(h, p):
+        f = remat(lambda pp, hh: _layer(pp, cfg, hh))
+        return f(p, h), None
+
+    h, _ = lax.scan(body, h, params["layers"])
+    return L.rms_norm(h, params["final_norm"], cfg.rms_eps)
+
+
+def ssm_loss(params, cfg: ModelConfig, batch):
+    h = ssm_forward(params, cfg, batch["tokens"])
+    logits = logits_fn(params, cfg, h)
+    mask = batch.get("mask", jnp.ones_like(batch["targets"], jnp.float32))
+    loss = softmax_xent(logits, batch["targets"], mask)
+    return loss, {"xent": loss}
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    del seq_len  # O(1) decode state — the long-context win of SSMs
+    st = M.mamba_init_state(batch, cfg.d_model, cfg.ssm,
+                            jnp.dtype(cfg.dtype))
+    return {"states": jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), st)}
+
+
+def ssm_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    del pos  # stateful recurrence; position-free
+    from repro.models.transformer import scan_layers_carry
+    h = embed_tokens(params, cfg, tokens)
+
+    def body(h, p, st):
+        x = L.rms_norm(h, p["ln"], cfg.rms_eps)
+        y, st = M.mamba_decode_step(p["mamba"], x, st, cfg.ssm)
+        return h + y, st
+
+    h, states = scan_layers_carry(body, h, params["layers"],
+                                  cache["states"], cfg.n_layers)
+    h = L.rms_norm(h, params["final_norm"], cfg.rms_eps)
+    return logits_fn(params, cfg, h), {"states": states}
+
+
+def ssm_prefill(params, cfg: ModelConfig, tokens, seq_len: int):
+    del seq_len
+    h = embed_tokens(params, cfg, tokens)
+
+    def body(h, p):
+        return _layer(p, cfg, h, return_state=True)
+
+    h, states = lax.scan(body, h, params["layers"])
+    h = L.rms_norm(h, params["final_norm"], cfg.rms_eps)
+    return logits_fn(params, cfg, h[:, -1:]), {"states": states}

@@ -1,0 +1,529 @@
+"""Decoder-only LM assembly: dense / MoE / local:global / VLM families.
+
+Layers are *scanned* (params stacked on a leading layer axis) with optional
+per-layer remat — this keeps HLO size O(1) in depth (fast multi-arch
+compiles) and activation memory flat. Local:global archs (gemma3) stack
+params as (n_groups, group, ...) and scan over groups with the intra-group
+pattern unrolled, so window layers use the O(L*window) attention path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.meshctx import shard_act
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(v: int) -> int:
+    return -(-v // VOCAB_PAD) * VOCAB_PAD
+
+
+# ------------------------------------------------------------------- init
+
+def _attn_dims(cfg: ModelConfig) -> L.AttnDims:
+    return L.AttnDims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                      cfg.resolved_head_dim, cfg.qkv_bias)
+
+
+def init_dense_layer(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": (MLA.init_mla(k1, cfg.d_model, cfg.n_heads, cfg.mla, dtype)
+                 if cfg.mla else L.init_attn(k1, _attn_dims(cfg), dtype)),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_moe_layer(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": (MLA.init_mla(k1, cfg.d_model, cfg.n_heads, cfg.mla, dtype)
+                 if cfg.mla else L.init_attn(k1, _attn_dims(cfg), dtype)),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "moe": MOE.init_moe(k2, cfg.d_model, cfg.moe, dtype),
+    }
+
+
+def _stack_layers(init_one, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_one)(keys)
+
+
+def init_decoder(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    vp = padded_vocab(cfg.vocab)
+    ks = jax.random.split(key, 6)
+    params = {
+        "embed": (jax.random.normal(ks[0], (vp, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(ks[1], (cfg.d_model, vp))
+                             * cfg.d_model ** -0.5).astype(dtype)
+
+    n_moe = 0
+    n_dense = cfg.n_layers
+    if cfg.moe is not None:
+        n_dense = cfg.moe.n_dense_layers
+        n_moe = cfg.n_layers - n_dense
+    if n_dense:
+        stacked = _stack_layers(
+            lambda k: init_dense_layer(k, cfg, dtype), ks[2], n_dense)
+        g = cfg.global_every or 1
+        if g > 1:
+            assert n_dense % g == 0, (n_dense, g)
+            stacked = jax.tree.map(
+                lambda x: x.reshape((n_dense // g, g) + x.shape[1:]), stacked)
+        params["dense_layers"] = stacked
+    if n_moe:
+        params["moe_layers"] = _stack_layers(
+            lambda k: init_moe_layer(k, cfg, dtype), ks[3], n_moe)
+    if cfg.use_mtp:
+        k1, k2 = jax.random.split(ks[4])
+        params["mtp"] = {
+            "proj": (jax.random.normal(k1, (2 * cfg.d_model, cfg.d_model))
+                     * (2 * cfg.d_model) ** -0.5).astype(dtype),
+            "layer": init_dense_layer(
+                k2, cfg.replace(moe=None, d_ff=cfg.d_ff), dtype),
+            "norm": jnp.zeros((cfg.d_model,), dtype),
+        }
+    return params
+
+
+# ------------------------------------------------------------------- blocks
+
+def attn_block(p, cfg: ModelConfig, h, *, window: int, positions,
+               triangle_skip: bool = False):
+    """triangle_skip: bound the KV scan at the causal diagonal (dynamic
+    trip count, NOT differentiable) — prefill-only §Perf lever E that
+    halves global-attention FLOPs vs the masked-scan train path."""
+    x = L.rms_norm(h, p["ln1"], cfg.rms_eps)
+    if cfg.mla:
+        o = MLA.mla_forward(p["attn"], x, cfg.mla, cfg.rope_theta,
+                            chunk=cfg.attn_chunk,
+                            triangle_skip=triangle_skip)
+    else:
+        q, k, v = L.attn_qkv(p["attn"], x, positions, cfg.rope_theta)
+        if cfg.attn_impl == "plain":
+            o = L.plain_attention(q, k, v, causal=True, window=window)
+        else:
+            o = L.chunked_attention(q, k, v, causal=True, window=window,
+                                    chunk=cfg.attn_chunk,
+                                    triangle_skip=triangle_skip)
+        o = L.attn_out(p["attn"], o)
+    return h + o
+
+
+def ffn_block(p, cfg: ModelConfig, h):
+    x = L.rms_norm(h, p["ln2"], cfg.rms_eps)
+    if "moe" in p:
+        o, aux = MOE.moe_ffn(p["moe"], x, cfg.moe)
+    else:
+        o, aux = L.mlp(p["mlp"], x), 0.0
+    return h + o, aux
+
+
+def layer_fwd(p, cfg: ModelConfig, h, *, window: int, positions):
+    h = shard_act(h, "batch", None, None)
+    h = attn_block(p, cfg, h, window=window, positions=positions)
+    h, aux = ffn_block(p, cfg, h)
+    return h, aux
+
+
+def _maybe_remat(f, cfg: ModelConfig):
+    return jax.checkpoint(f) if cfg.remat else f
+
+
+def _window_for(cfg: ModelConfig, idx_in_group: int) -> int:
+    """gemma3 pattern: positions 0..g-2 local, g-1 global."""
+    g = cfg.global_every or 1
+    if g == 1 or cfg.window == 0:
+        return 0
+    return cfg.window if idx_in_group < g - 1 else 0
+
+
+# ------------------------------------------------------------------- forward
+
+def decoder_hidden(params, cfg: ModelConfig, h, positions):
+    """Run all layers over h: (B, L, D). Returns (h, aux_loss_sum)."""
+    aux_total = 0.0
+
+    if "dense_layers" in params:
+        g = cfg.global_every or 1
+
+        def group_body(h, p_group):
+            aux = 0.0
+            for i in range(g):
+                p_i = jax.tree.map(lambda x: x[i], p_group) if g > 1 \
+                    else p_group
+                w = _window_for(cfg, i)
+                body = _maybe_remat(
+                    lambda p, hh, _w=w: layer_fwd(p, cfg, hh, window=_w,
+                                                  positions=positions), cfg)
+                h, a = body(p_i, h)
+                aux = aux + a
+            return h, aux
+
+        h, auxs = lax.scan(lambda c, p: group_body(c, p), h,
+                           params["dense_layers"])
+        aux_total = aux_total + jnp.sum(jnp.asarray(auxs))
+
+    if "moe_layers" in params:
+        def moe_body(h, p):
+            body = _maybe_remat(
+                lambda pp, hh: layer_fwd(pp, cfg, hh, window=0,
+                                         positions=positions), cfg)
+            return body(p, h)
+
+        h, auxs = lax.scan(moe_body, h, params["moe_layers"])
+        aux_total = aux_total + jnp.sum(jnp.asarray(auxs))
+
+    return h, aux_total
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    return shard_act(h, "batch", None, None)
+
+
+def logits_fn(params, cfg: ModelConfig, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bld,dv->blv", h, w)
+    logits = shard_act(logits, "batch", None, "model")
+    vp = padded_vocab(cfg.vocab)
+    if vp != cfg.vocab:
+        mask = (jnp.arange(vp) < cfg.vocab)
+        logits = jnp.where(mask[None, None, :], logits, L.NEG_INF)
+    return logits
+
+
+def decoder_forward(params, cfg: ModelConfig, tokens, patches=None):
+    """tokens: (B, Lt); patches: (B, P, D) prepended (VLM stub)."""
+    h = embed_tokens(params, cfg, tokens)
+    if patches is not None:
+        h = jnp.concatenate([patches.astype(h.dtype), h], axis=1)
+    b, l, _ = h.shape
+    positions = jnp.arange(l)[None, :]
+    h, aux = decoder_hidden(params, cfg, h, positions)
+    h = L.rms_norm(h, params["final_norm"], cfg.rms_eps)
+    return h, aux
+
+
+def softmax_xent(logits, targets, mask):
+    """logits (B,L,V) fp32-accumulated xent; mask (B,L) weights."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def decoder_loss(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    targets = batch["targets"]
+    patches = batch.get("patches")
+    h, aux = decoder_forward(params, cfg, tokens, patches)
+    if patches is not None:
+        h = h[:, patches.shape[1]:]                      # text positions only
+    logits = logits_fn(params, cfg, h)
+    mask = batch.get("mask", jnp.ones_like(targets, jnp.float32))
+    loss = softmax_xent(logits, targets, mask)
+    metrics = {"xent": loss}
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+        metrics["aux"] = aux
+    if cfg.use_mtp:
+        mtp_loss = _mtp_loss(params, cfg, h, tokens, targets, mask)
+        loss = loss + cfg.mtp_weight * mtp_loss
+        metrics["mtp"] = mtp_loss
+    return loss, metrics
+
+
+def _mtp_loss(params, cfg: ModelConfig, h, tokens, targets, mask):
+    """DeepSeek-style depth-1 multi-token prediction: predict t+2 from
+    (h_t, emb(y_{t+1})) through one extra transformer layer."""
+    p = params["mtp"]
+    emb_next = embed_tokens(params, cfg, targets)        # y_{t+1} embeddings
+    x = jnp.concatenate([L.rms_norm(h, p["norm"], cfg.rms_eps),
+                         emb_next], axis=-1)
+    x = jnp.einsum("ble,ed->bld", x, p["proj"])
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, _ = layer_fwd(p["layer"], cfg.replace(moe=None), x, window=0,
+                     positions=positions)
+    logits = logits_fn(params, cfg, x[:, :-1])
+    # target at position t is y_{t+2} = targets shifted left by one
+    t2 = targets[:, 1:]
+    m2 = mask[:, 1:]
+    return softmax_xent(logits, t2, m2)
+
+
+# ------------------------------------------------------------------- decode
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    caches = {}
+    n_moe = 0
+    n_dense = cfg.n_layers
+    if cfg.moe is not None:
+        n_dense = cfg.moe.n_dense_layers
+        n_moe = cfg.n_layers - n_dense
+
+    def kv(n):
+        return jnp.zeros((n, batch, seq_len, cfg.n_kv_heads, hd), dtype)
+
+    if cfg.mla:
+        m = cfg.mla
+        if n_dense:
+            caches["dense"] = {
+                "c_kv": jnp.zeros((n_dense, batch, seq_len, m.kv_lora_rank),
+                                  dtype),
+                "k_rope": jnp.zeros(
+                    (n_dense, batch, seq_len, m.qk_rope_head_dim), dtype)}
+        if n_moe:
+            caches["moe"] = {
+                "c_kv": jnp.zeros((n_moe, batch, seq_len, m.kv_lora_rank),
+                                  dtype),
+                "k_rope": jnp.zeros(
+                    (n_moe, batch, seq_len, m.qk_rope_head_dim), dtype)}
+    else:
+        if n_dense:
+            g = cfg.global_every or 1
+            shape = ((n_dense // g, g, batch, seq_len, cfg.n_kv_heads, hd)
+                     if g > 1 else (n_dense, batch, seq_len, cfg.n_kv_heads,
+                                    hd))
+            caches["dense"] = {"k": jnp.zeros(shape, dtype),
+                               "v": jnp.zeros(shape, dtype)}
+        if n_moe:
+            caches["moe"] = {"k": kv(n_moe), "v": kv(n_moe)}
+    return caches
+
+
+def _gqa_layer_decode(p, cfg, h, k_cache, v_cache, pos, window):
+    x = L.rms_norm(h, p["ln1"], cfg.rms_eps)
+    positions = pos[None, None]
+    q = jnp.einsum("bld,dhk->blhk", x, p["attn"]["wq"])
+    k = jnp.einsum("bld,dhk->blhk", x, p["attn"]["wk"])
+    v = jnp.einsum("bld,dhk->blhk", x, p["attn"]["wv"])
+    if "bq" in p["attn"]:
+        q, k, v = (q + p["attn"]["bq"], k + p["attn"]["bk"],
+                   v + p["attn"]["bv"])
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    k_cache = lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    o = L.decode_attention(q, k_cache, v_cache, pos, window=window)
+    h = h + L.attn_out(p["attn"], o)
+    h, _ = ffn_block(p, cfg, h)
+    return h, k_cache, v_cache
+
+
+def _mla_layer_decode(p, cfg, h, cache_l, pos):
+    x = L.rms_norm(h, p["ln1"], cfg.rms_eps)
+    o, cache_l = MLA.mla_decode_step(p["attn"], x, cache_l, pos, cfg.mla,
+                                     cfg.rope_theta)
+    h = h + o
+    h, _ = ffn_block(p, cfg, h)
+    return h, cache_l
+
+
+def scan_layers_carry(body, h, params_stacked, state, n: int,
+                      unroll: bool = False):
+    """Iterate layers with the decode state carried so XLA updates the
+    stacked buffers in place. Passing caches as scan xs/ys makes XLA copy
+    the full stacked cache every layer (§Perf lever C2: 20 GB/layer of
+    copies on minitron decode); `unroll=True` additionally uses *static*
+    layer indices so copy-insertion can prove slice disjointness (§Perf C3).
+
+    body(h, p_l, state_l) -> (h, new_state_l)
+    """
+    if unroll:
+        for li in range(n):
+            p_l = jax.tree.map(lambda x: x[li], params_stacked)
+            state_l = jax.tree.map(lambda s: s[li], state)
+            h, new_l = body(h, p_l, state_l)
+            state = jax.tree.map(
+                lambda s, ns: lax.dynamic_update_index_in_dim(
+                    s, ns.astype(s.dtype), li, 0), state, new_l)
+        return h, state
+
+    def step(carry, xs):
+        h, state = carry
+        p_l, li = xs
+        state_l = jax.tree.map(
+            lambda s: lax.dynamic_index_in_dim(s, li, 0, keepdims=False),
+            state)
+        h, new_l = body(h, p_l, state_l)
+        state = jax.tree.map(
+            lambda s, ns: lax.dynamic_update_index_in_dim(
+                s, ns.astype(s.dtype), li, 0), state, new_l)
+        return (h, state), None
+
+    (h, state), _ = lax.scan(step, (h, state),
+                             (params_stacked, jnp.arange(n)))
+    return h, state
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """tokens: (B, 1); pos: scalar int32. Returns (logits (B,1,V), cache)."""
+    h = embed_tokens(params, cfg, tokens)
+    new_cache = {}
+
+    if "dense_layers" in params:
+        g = cfg.global_every or 1
+        n_dense = jax.tree.leaves(params["dense_layers"])[0].shape[0]
+        if cfg.mla:
+            def body(h, p, c):
+                return _mla_layer_decode(p, cfg, h, c, pos)
+            h, c = scan_layers_carry(body, h, params["dense_layers"],
+                                     cache["dense"], n_dense,
+                                     unroll=cfg.decode_unroll)
+            new_cache["dense"] = c
+        else:
+            def body(h, p_group, c):
+                kc, vc = c["k"], c["v"]
+                if g > 1:
+                    kcs, vcs = [], []
+                    for i in range(g):
+                        p_i = jax.tree.map(lambda x: x[i], p_group)
+                        h, k2, v2 = _gqa_layer_decode(
+                            p_i, cfg, h, kc[i], vc[i], pos,
+                            _window_for(cfg, i))
+                        kcs.append(k2)
+                        vcs.append(v2)
+                    return h, {"k": jnp.stack(kcs), "v": jnp.stack(vcs)}
+                h, k2, v2 = _gqa_layer_decode(p_group, cfg, h, kc, vc,
+                                              pos, 0)
+                return h, {"k": k2, "v": v2}
+            h, c = scan_layers_carry(body, h, params["dense_layers"],
+                                     cache["dense"], n_dense,
+                                     unroll=cfg.decode_unroll)
+            new_cache["dense"] = c
+
+    if "moe_layers" in params:
+        n_moe = jax.tree.leaves(params["moe_layers"])[0].shape[0]
+        if cfg.mla:
+            def body(h, p, c):
+                return _mla_layer_decode(p, cfg, h, c, pos)
+            h, c = scan_layers_carry(body, h, params["moe_layers"],
+                                     cache["moe"], n_moe,
+                                     unroll=cfg.decode_unroll)
+            new_cache["moe"] = c
+        else:
+            def body(h, p, c):
+                h, k2, v2 = _gqa_layer_decode(p, cfg, h, c["k"], c["v"],
+                                              pos, 0)
+                return h, {"k": k2, "v": v2}
+            h, c = scan_layers_carry(body, h, params["moe_layers"],
+                                     cache["moe"], n_moe,
+                                     unroll=cfg.decode_unroll)
+            new_cache["moe"] = c
+
+    h = L.rms_norm(h, params["final_norm"], cfg.rms_eps)
+    return logits_fn(params, cfg, h), new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, seq_len: int, patches=None):
+    """Forward the prompt, build a cache of capacity `seq_len`.
+
+    Returns (last-position logits (B,1,V), cache). For simplicity the cache
+    is rebuilt by a forward pass that also emits K/V (scan ys).
+    """
+    h = embed_tokens(params, cfg, tokens)
+    if patches is not None:
+        h = jnp.concatenate([patches.astype(h.dtype), h], axis=1)
+    b, l, _ = h.shape
+    positions = jnp.arange(l)[None, :]
+    pad = seq_len - l
+    cache = {}
+
+    def gqa_kv(p, x):
+        k = jnp.einsum("bld,dhk->blhk", x, p["wk"])
+        v = jnp.einsum("bld,dhk->blhk", x, p["wv"])
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        return k, v
+
+    if "dense_layers" in params:
+        g = cfg.global_every or 1
+        if cfg.mla:
+            def body(h, p):
+                x = L.rms_norm(h, p["ln1"], cfg.rms_eps)
+                c = MLA.mla_prefill_cache(p["attn"], x, cfg.mla,
+                                          cfg.rope_theta, seq_len)
+                o = MLA.mla_forward(p["attn"], x, cfg.mla, cfg.rope_theta,
+                                    chunk=cfg.attn_chunk,
+                                    triangle_skip=cfg.prefill_triangle_skip)
+                h = h + o
+                h, _ = ffn_block(p, cfg, h)
+                return h, c
+            h, c = lax.scan(body, h, params["dense_layers"])
+            cache["dense"] = c
+        else:
+            def body(h, p_group):
+                ks, vs = [], []
+                for i in range(g):
+                    p_i = jax.tree.map(lambda x: x[i], p_group) if g > 1 \
+                        else p_group
+                    x = L.rms_norm(h, p_i["ln1"], cfg.rms_eps)
+                    k, v = gqa_kv(p_i["attn"], x)
+                    ks.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))))
+                    vs.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+                    h = attn_block(p_i, cfg, h,
+                                   window=_window_for(cfg, i),
+                                   positions=positions,
+                                   triangle_skip=cfg.prefill_triangle_skip)
+                    h, _ = ffn_block(p_i, cfg, h)
+                if g > 1:
+                    return h, (jnp.stack(ks), jnp.stack(vs))
+                return h, (ks[0], vs[0])
+            h, (kc, vc) = lax.scan(body, h, params["dense_layers"])
+            cache["dense"] = {"k": kc, "v": vc}
+
+    if "moe_layers" in params:
+        if cfg.mla:
+            def body(h, p):
+                x = L.rms_norm(h, p["ln1"], cfg.rms_eps)
+                c = MLA.mla_prefill_cache(p["attn"], x, cfg.mla,
+                                          cfg.rope_theta, seq_len)
+                o = MLA.mla_forward(p["attn"], x, cfg.mla, cfg.rope_theta,
+                                    chunk=cfg.attn_chunk,
+                                    triangle_skip=cfg.prefill_triangle_skip)
+                h = h + o
+                h, _ = ffn_block(p, cfg, h)
+                return h, c
+            h, c = lax.scan(body, h, params["moe_layers"])
+            cache["moe"] = c
+        else:
+            def body(h, p):
+                x = L.rms_norm(h, p["ln1"], cfg.rms_eps)
+                k, v = gqa_kv(p["attn"], x)
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                h = attn_block(p, cfg, h, window=0, positions=positions,
+                               triangle_skip=cfg.prefill_triangle_skip)
+                h, _ = ffn_block(p, cfg, h)
+                return h, (k, v)
+            h, (kc, vc) = lax.scan(body, h, params["moe_layers"])
+            cache["moe"] = {"k": kc, "v": vc}
+
+    h = L.rms_norm(h, params["final_norm"], cfg.rms_eps)
+    logits = logits_fn(params, cfg, h[:, -1:])
+    return logits, cache

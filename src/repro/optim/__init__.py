@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (adafactor_init, adafactor_update,
+                                    adamw_init, adamw_update, clip_by_norm,
+                                    make_optimizer)
+from repro.optim.schedule import cosine_schedule

@@ -1,0 +1,125 @@
+"""Optimizers as pure pytree functions: AdamW and Adafactor.
+
+AdamW keeps fp32 m/v (and updates the bf16 params directly — master weights
+in fp32 are the `master=True` option). Adafactor stores factored second
+moments (row/col) for matrices — the memory-viable choice for the 671B MoE
+(see configs/deepseek_v3_671b.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_norm(grads, max_norm: float):
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gnorm
+
+
+# ----------------------------------------------------------------- adamw
+
+def adamw_init(params, master: bool = False):
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+    if master:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 wd=0.1):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / (1 - b1 ** t)
+        vhat = v2 / (1 - b2 ** t)
+        delta = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"step": step, "m": new_m, "v": new_v}
+
+
+# -------------------------------------------------------------- adafactor
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def one(p):
+        if _factored(p.shape):
+            return {
+                "r": jnp.zeros(p.shape[:-1], jnp.float32),        # row
+                "c": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                               jnp.float32),                      # col
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"step": jnp.zeros((), jnp.int32),
+            "vs": jax.tree.map(one, params,
+                               is_leaf=lambda x: hasattr(x, "shape"))}
+
+
+def adafactor_update(params, grads, state, lr, *, decay=0.8, eps=1e-30,
+                     clip_thresh=1.0, wd=0.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** -decay
+
+    def upd(p, g, v):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p.shape):
+            r = beta * v["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            c = beta * v["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            rmean = jnp.mean(r, axis=-1, keepdims=True)
+            vhat = (r / jnp.maximum(rmean, eps))[..., None] * c[..., None, :]
+            newv = {"r": r, "c": c}
+        else:
+            vhat = beta * v["v"] + (1 - beta) * g2
+            newv = {"v": vhat}
+        u = g * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+        # update clipping (Adafactor's RMS clip)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_thresh)
+        newp = (p.astype(jnp.float32) - lr * (u + wd * p.astype(jnp.float32))
+                ).astype(p.dtype)
+        return newp, newv
+
+    leaves_p, tdef = jax.tree.flatten(params)
+    leaves_g = jax.tree.leaves(grads)
+    vs_leaves = tdef.flatten_up_to(state["vs"])
+    out = [upd(p, g, v) for p, g, v in zip(leaves_p, leaves_g, vs_leaves)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_vs = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return new_p, {"step": step, "vs": new_vs}
+
+
+# ----------------------------------------------------------------- facade
+
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(name)

@@ -1,0 +1,12 @@
+"""LR schedules (pure functions of step)."""
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr=3e-4, warmup=100, total=10000,
+                    min_frac=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = peak_lr * (min_frac + (1 - min_frac) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,81 @@
+"""Carbon-model property tests: monotonicity, crossovers, paper anchors."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from repro.core import carbon as C
+from repro.core.scale import (breakeven_effectiveness, savings_kg, table5)
+from repro.core.selection import (crossover_lifetime_s, optimal_core,
+                                  selection_map)
+from repro.flexibits.cycles import CORES, HERV, QERV, SERV
+
+PROF = C.DeviceProfile(n_one_stage=30_000, n_two_stage=20_000, vm_kb=0.6,
+                       nvm_kb=3.3)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(st.floats(1, 2000), st.floats(0.1, 1e4))
+def test_total_carbon_monotone_in_lifetime(days, freq):
+    for core in CORES.values():
+        a = C.total_kg(core, PROF, lifetime_s=days * 86400,
+                       execs_per_day=freq)
+        b = C.total_kg(core, PROF, lifetime_s=2 * days * 86400,
+                       execs_per_day=freq)
+        assert b > a
+
+
+def test_short_lifetime_prefers_serv_long_prefers_herv():
+    short, _ = optimal_core(PROF, lifetime_s=86400.0, execs_per_day=1)
+    long_, _ = optimal_core(PROF, lifetime_s=20 * 365 * 86400.0,
+                            execs_per_day=10_000)
+    assert short.name == "SERV"
+    assert long_.name == "HERV"
+
+
+def test_selection_map_monotone_boundaries():
+    """Once the map switches away from SERV along increasing lifetime it
+    never switches back (operational carbon accumulates monotonically)."""
+    lifetimes = np.logspace(np.log10(86400.0), np.log10(20 * 365 * 86400),
+                            60)
+    freqs = np.logspace(0, 5, 20)
+    m = selection_map(PROF, lifetimes, freqs)
+    for col in m.T:
+        assert np.all(np.diff(col) >= 0), col
+
+
+def test_crossover_formula_agrees_with_grid():
+    x = crossover_lifetime_s(PROF, SERV, HERV, execs_per_day=100)
+    assert np.isfinite(x) and x > 0
+    before, _ = optimal_core(PROF, lifetime_s=x * 0.5, execs_per_day=100,
+                             cores=[SERV, HERV])
+    after, _ = optimal_core(PROF, lifetime_s=x * 2.0, execs_per_day=100,
+                            cores=[SERV, HERV])
+    assert before.name == "SERV" and after.name == "HERV"
+
+
+def test_energy_source_scaling():
+    hi = C.operational_kg(SERV, PROF, lifetime_s=1e7, execs_per_day=10,
+                          intensity=C.ENERGY_SOURCES["coal"])
+    lo = C.operational_kg(SERV, PROF, lifetime_s=1e7, execs_per_day=10,
+                          intensity=C.ENERGY_SOURCES["wind"])
+    assert hi / lo == C.ENERGY_SOURCES["coal"] / C.ENERGY_SOURCES["wind"]
+
+
+def test_table5_anchors():
+    t = table5()
+    assert abs(1 / t["flexible"]["breakeven"] - 417) < 10     # paper 1/417
+    assert abs(1 / t["hybrid"]["breakeven"] - 35) < 1.5       # paper 1/35
+    assert abs(100 * t["silicon"]["breakeven"] - 59.18) < 0.5
+    # savings at 100% effectiveness ~ 5.3e10 kg
+    assert abs(t["flexible"]["savings_kg"][1.0] - 5.3e10) < 2e9
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(st.floats(0.001, 3.0), st.floats(0.0, 1.0))
+def test_savings_linear_and_breakeven_consistent(fp, eff):
+    be = breakeven_effectiveness(fp)
+    s = savings_kg(fp, eff)
+    if eff > be * 1.01:
+        assert s > 0
+    if eff < be * 0.99:
+        assert s < 0

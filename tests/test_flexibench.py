@@ -1,0 +1,62 @@
+"""FlexiBench: every workload's assembly (on the oracle ISS) must equal its
+functional reference on random inputs; memory profiles sane; Fig-6 algo
+variants equivalent."""
+import numpy as np
+import pytest
+
+from repro.flexibench.base import all_workloads, get
+from repro.flexibench.memory import profile_memory
+from repro.flexibits.pyiss import PyISS
+
+WKEYS = [w.key for w in all_workloads()]
+
+
+@pytest.mark.parametrize("key", WKEYS)
+def test_asm_matches_reference(key):
+    w = get(key)
+    rng = np.random.default_rng(42)
+    xs = w.gen_inputs(rng, 4)
+    want = w.ref(xs)
+    for x, exp in zip(xs, want):
+        sim = PyISS(w.program.code, w.total_mem_words,
+                    w.initial_memory(x)).run(w.max_steps)
+        assert sim.halted, (key, "did not halt")
+        assert int(np.int32(sim.mem[w.out_addr])) == int(exp), key
+
+
+def test_eleven_workloads_ten_sdgs():
+    ws = all_workloads()
+    assert len(ws) == 11
+    assert len({w.sdg for w in ws}) >= 10
+
+
+def test_lifetime_heterogeneity_three_orders():
+    ws = all_workloads()
+    lts = [w.lifetime_s for w in ws]
+    assert max(lts) / min(lts) >= 1000     # the paper's 1000x claim
+
+
+def test_memory_profile_sane():
+    w = get("HC")                           # NVM-heavy (tree tables)
+    m = profile_memory(w)
+    assert m["nvm_kb"] > 10
+    assert 0 < m["vm_kb"] < 2
+    wq = profile_memory(get("WQ"))
+    assert wq["nvm_kb"] < 0.2               # threshold check is tiny
+
+
+@pytest.mark.parametrize("name", ["LR", "DT-Small", "KNN-Small", "MLP"])
+def test_spoilage_algo_asm_equivalence(name):
+    from repro.flexibench.spoilage_algos import all_algos, gen_dataset
+    algo = next(a for a in all_algos() if a.name == name)
+    rng = np.random.default_rng(7)
+    xs, _ = gen_dataset(rng, 3)
+    mem_words = (algo.program.ro_base // 4 + len(algo.program.ro_words)
+                 + max(algo.mem_words, 64))
+    for x in xs:
+        mem = algo.program.initial_memory(mem_words).copy()
+        mem[:len(x)] = x
+        sim = PyISS(algo.program.code, mem_words, mem).run(algo.max_steps)
+        assert sim.halted
+        assert int(np.int32(sim.mem[algo.out_addr])) == \
+            int(algo.ref(x[None])[0])

@@ -1,0 +1,128 @@
+"""FlexiBits property tests: JAX ISS == Python oracle on random programs
+(hypothesis), assembler round-trips, cycle-model invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.flexibits import iss
+from repro.flexibits.asm import Asm
+from repro.flexibits.cycles import CORES, HERV, QERV, SERV
+from repro.flexibits.pyiss import PyISS
+
+R_OPS = ["add", "sub", "sll", "slt", "sltu", "xor", "srl", "sra", "or",
+         "and"]
+I_OPS = ["addi", "slti", "sltiu", "xori", "ori", "andi"]
+SH_OPS = ["slli", "srli", "srai"]
+
+
+@st.composite
+def random_program(draw):
+    """Straight-line arithmetic program + a store of every register."""
+    a = Asm(vm_reserved=128)
+    n = draw(st.integers(5, 40))
+    # seed registers
+    for r in range(5, 16):
+        a.li(r, draw(st.integers(-2048, 2047)))
+    for _ in range(n):
+        kind = draw(st.sampled_from(["r", "i", "sh"]))
+        rd = draw(st.integers(5, 15))
+        rs1 = draw(st.integers(0, 15))
+        if kind == "r":
+            op = draw(st.sampled_from(R_OPS))
+            rs2 = draw(st.integers(0, 15))
+            a.emit(op, rd, rs1, rs2)
+        elif kind == "i":
+            op = draw(st.sampled_from(I_OPS))
+            a.emit(op, rd, rs1, imm=draw(st.integers(-2048, 2047)))
+        else:
+            op = draw(st.sampled_from(SH_OPS))
+            a.emit(op, rd, rs1, imm=draw(st.integers(0, 31)))
+    for r in range(16):
+        a.sw(r, 0, 4 * r)
+    a.halt()
+    return a.assemble()
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(random_program())
+def test_iss_matches_oracle(prog):
+    mem0 = prog.initial_memory(128)
+    py = PyISS(prog.code, 128, mem0).run(100_000)
+    jx = iss.run(jnp.asarray(prog.code.view(np.int32)),
+                 jnp.asarray(mem0), 100_000)
+    assert py.halted and bool(jx.halted)
+    np.testing.assert_array_equal(np.asarray(jx.mem[:16], np.int64),
+                                  py.mem[:16])
+    assert int(jx.n_instr) == py.n_instr
+    assert int(jx.n_two_stage) == py.n_two_stage
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(st.integers(-2 ** 31, 2 ** 31 - 1),
+                  st.integers(-2 ** 31, 2 ** 31 - 1))
+def test_software_mul_wraps_like_int32(x, y):
+    a = Asm(vm_reserved=64)
+    a.li(a.a0, x)
+    a.li(a.a1, y)
+    a.call("__mul")
+    a.sw(a.a0, a.zero, 0)
+    a.halt()
+    a.emit_mul_routine()
+    prog = a.assemble()
+    py = PyISS(prog.code, 64, prog.initial_memory(64)).run(100_000)
+    want = np.asarray([(x * y) & 0xFFFFFFFF], np.int64).astype(np.uint32) \
+        .astype(np.int32)[0]
+    assert np.int32(py.mem[0]) == want
+
+
+def test_branch_and_memory_ops():
+    a = Asm(vm_reserved=64)
+    # sum 1..10 via loop; store bytes/halfwords too
+    a.li(a.t0, 0)
+    a.li(a.t1, 1)
+    a.label("loop")
+    a.add(a.t0, a.t0, a.t1)
+    a.addi(a.t1, a.t1, 1)
+    a.li(a.t2, 10)
+    a.bge(a.t2, a.t1, "loop")
+    a.sw(a.t0, a.zero, 0)
+    a.emit("sh", 0, 0, a.t0, 4)
+    a.emit("sb", 0, 0, a.t0, 8)
+    a.emit("lb", a.a0, 0, imm=8)
+    a.sw(a.a0, a.zero, 12)
+    a.halt()
+    prog = a.assemble()
+    mem0 = prog.initial_memory(64)
+    py = PyISS(prog.code, 64, mem0).run()
+    jx = iss.run(jnp.asarray(prog.code.view(np.int32)), jnp.asarray(mem0),
+                 10_000)
+    assert py.mem[0] == 55 and int(jx.mem[0]) == 55
+    assert py.mem[3] == 55 and int(jx.mem[3]) == 55
+    np.testing.assert_array_equal(np.asarray(jx.mem[:16], np.int64),
+                                  py.mem[:16])
+
+
+def test_cycle_model_matches_paper_anchors():
+    assert SERV.cycles_one_stage() == 38.0          # 32 + 6
+    assert SERV.cycles_two_stage() == 70.0          # 64 + 6 (paper §4.2)
+    # area/power straight from Table 7
+    assert SERV.area_mm2 == 2.93 and HERV.power_mw == 24.99
+    # wider datapaths strictly faster per instruction
+    for one in (True, False):
+        f = (lambda c: c.cycles_one_stage()) if one else \
+            (lambda c: c.cycles_two_stage())
+        assert f(SERV) > f(QERV) > f(HERV)
+
+
+def test_vmap_fleet_agrees_with_single_runs():
+    from repro.flexibench.base import get
+    w = get("WQ")
+    rng = np.random.default_rng(0)
+    xs = w.gen_inputs(rng, 8)
+    mems = np.stack([w.initial_memory(x) for x in xs])
+    state = iss.run_fleet(jnp.asarray(w.program.code.view(np.int32)),
+                          jnp.asarray(mems), w.max_steps)
+    outs = np.asarray(state.mem[:, w.out_addr])
+    np.testing.assert_array_equal(outs, w.ref(xs))

@@ -1,0 +1,106 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref as R
+from repro.kernels.bitplane_matmul import bitplane_matmul
+
+
+@pytest.mark.parametrize("bits", [1, 4, 8])
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 128, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bitplane_matmul(bits, shape, dtype):
+    m, k, n = shape
+    key = jax.random.key(bits + m)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (m, k), dtype)
+    w = jax.random.normal(kw, (k, n), jnp.float32) * 0.1
+    planes, scales, _ = R.quantize_weights(w, bits)
+    got = bitplane_matmul(x, planes, scales, bits=bits, interpret=True)
+    want = R.bitplane_matmul_ref(x, planes, scales, bits=bits)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_bitplane_quantization_error_shrinks_with_bits():
+    key = jax.random.key(0)
+    w = jax.random.normal(key, (128, 128)) * 0.2
+    x = jax.random.normal(jax.random.key(1), (128, 128))
+    exact = x @ w
+    errs = []
+    for bits in (2, 4, 8):
+        planes, scales, _ = R.quantize_weights(w, bits)
+        approx = R.bitplane_matmul_ref(x, planes, scales, bits=bits)
+        errs.append(float(jnp.abs(approx - exact).mean()))
+    assert errs[0] > errs[1] > errs[2], errs
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("shape", [(2, 256, 64), (1, 512, 128)])
+def test_flash_attention(causal, shape):
+    bh, l, d = shape
+    keys = jax.random.split(jax.random.key(l), 3)
+    q = jax.random.normal(keys[0], (bh, l, d), jnp.float32)
+    k = jax.random.normal(keys[1], (bh, l, d), jnp.float32)
+    v = jax.random.normal(keys[2], (bh, l, d), jnp.float32)
+    from repro.kernels.flash_attention import flash_attention
+    got = flash_attention(q, k, v, causal=causal, tq=128, tk=128,
+                          interpret=True)
+    want = R.attention_ref(q[:, None], k[:, None], v[:, None],
+                           causal=causal)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_gqa_flash_wrapper_matches_model_attention():
+    from repro.models.layers import chunked_attention
+    b, l, h, hkv, d = 2, 256, 8, 2, 32
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(ks[0], (b, l, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, l, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, l, hkv, d), jnp.float32)
+    got = ops.gqa_flash_attention(q, k, v, causal=True, tq=64, tk=64)
+    want = chunked_attention(q, k, v, causal=True, chunk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("shape", [(2, 4, 128, 32, 16), (1, 2, 256, 64, 32)])
+def test_ssd_scan(shape):
+    bt, h, l, p, n = shape
+    ks = jax.random.split(jax.random.key(l), 4)
+    x = jax.random.normal(ks[0], (bt, h, l, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, h, l)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (bt, 1, l, n), jnp.float32) * 0.5
+    C = jax.random.normal(jax.random.key(l + 1), (bt, 1, l, n),
+                          jnp.float32) * 0.5
+    got = ops.ssd(x, dt, A, B, C, q=64)
+    Bh = jnp.broadcast_to(B, (bt, h, l, n))
+    Ch = jnp.broadcast_to(C, (bt, h, l, n))
+    want, _ = R.ssd_ref(x, dt, A, Bh, Ch)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_kernel_matches_model_ssd_chunked():
+    """Kernel vs the model-side jnp implementation (different chunking)."""
+    from repro.models.mamba import ssd_chunked
+    bt, l, h, p, n = 2, 128, 4, 16, 8
+    ks = jax.random.split(jax.random.key(3), 4)
+    x = jax.random.normal(ks[0], (bt, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, l, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (bt, l, 1, n), jnp.float32) * 0.5
+    C = jax.random.normal(jax.random.key(9), (bt, l, 1, n),
+                          jnp.float32) * 0.5
+    want = ssd_chunked(x, dt, A, B, C, jnp.zeros(h), chunk=32)
+    got = ops.ssd(x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1),
+                  A, B.transpose(0, 2, 1, 3), C.transpose(0, 2, 1, 3),
+                  q=32).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,38 @@
+"""Serving-fleet planner: embodied-vs-operational crossover properties."""
+import numpy as np
+
+from repro.core.planner import VARIANTS, plan_grid, tokens_per_s_per_chip
+
+
+def _plan(lifetimes, qps):
+    kv = 32 * 8 * 128 * 2 * 2
+    return plan_grid(n_params=8e9, kv_bytes_per_token=kv,
+                     lifetimes_days=np.asarray(lifetimes, float),
+                     qps_grid=np.asarray(qps, float))
+
+
+def test_throughput_scales_with_fewer_bits():
+    kv = 32 * 8 * 128 * 2 * 2
+    t16 = tokens_per_s_per_chip(8e9, 16, kv, 16)
+    t8 = tokens_per_s_per_chip(8e9, 8, kv, 16)
+    t4 = tokens_per_s_per_chip(8e9, 4, kv, 16)
+    assert t4 > t8 > t16
+    assert t8 / t16 > 1.5          # weight-read-dominated regime
+
+
+def test_longer_lifetime_never_decreases_w4_adoption():
+    plan = _plan([7, 90, 3 * 365], np.logspace(2, 6, 9))
+    w4 = [(plan["variant_idx"][i] == 2).sum() for i in range(3)]
+    assert w4[0] <= w4[1] <= w4[2]
+    assert w4[2] > w4[0]           # the crossover exists
+
+
+def test_infeasible_qps_marked():
+    plan = _plan([365], [1e12])
+    assert plan["variant_idx"][0, 0] == -1
+
+
+def test_total_carbon_monotone_in_qps():
+    plan = _plan([365], np.logspace(2, 6, 9))
+    kg = plan["total_kg"][0]
+    assert np.all(np.diff(kg) > 0)
