@@ -1,0 +1,117 @@
+"""Streaming fleet engine vs the monolithic baseline (DESIGN.md §9).
+
+Measures, on a skewed halt-time distribution (the paper's regime: most
+items run short data-dependent paths, a tail runs long ones):
+
+- total simulated lane-steps: monolithic vmap(while_loop) occupies every
+  lane until the slowest item halts; the streaming engine compacts halted
+  items out between segments, so it should retire >=2X fewer.
+- items/sec wall-clock for both paths, with bit-exact final memories.
+
+Run:  PYTHONPATH=src python benchmarks/fleet.py [--items 1024]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.flexibits import iss
+from repro.flexibits.asm import Asm
+from repro.fleet import array_source, run_stream
+
+
+def skew_program():
+    """Counting loop: iterates mem[0] times, stores the count at mem[1]."""
+    a = Asm(vm_reserved=32)
+    a.lw(a.t0, a.zero, 0)
+    a.li(a.t1, 0)
+    a.label("loop")
+    a.addi(a.t1, a.t1, 1)
+    a.blt(a.t1, a.t0, "loop")
+    a.sw(a.t1, a.zero, 4)
+    a.halt()
+    return a.assemble()
+
+
+def skew_fleet(prog, n_items: int, *, short_iters: int = 64,
+               long_iters: int = 4096, long_frac: float = 0.1,
+               seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    iters = np.where(rng.random(n_items) < long_frac, long_iters,
+                     short_iters).astype(np.int32)
+    mems = np.tile(prog.initial_memory(32), (n_items, 1))
+    mems[:, 0] = iters
+    return mems
+
+
+def fleet_streaming_vs_monolithic(n_items: int = 1024, chunk: int = 128,
+                                  seg_steps: int = 512,
+                                  max_steps: int = 100_000):
+    prog = skew_program()
+    mems = skew_fleet(prog, n_items)
+    code = jnp.asarray(prog.code.view(np.int32))
+
+    # monolithic: one vmap(while_loop) over the whole fleet (compile at the
+    # full batch shape first, then time the steady-state execution)
+    jmems = jnp.asarray(mems)
+    iss.run_fleet(code, jmems, max_steps).halted.block_until_ready()
+    t0 = time.perf_counter()
+    mono = iss.run_fleet(code, jmems, max_steps)
+    mono.halted.block_until_ready()
+    mono_wall = time.perf_counter() - t0
+    mono_steps = n_items * int(np.asarray(mono.n_instr).max())
+
+    res = run_stream(prog.code, array_source(mems), n_items=n_items,
+                     mem_words=32, max_steps=max_steps, chunk=chunk,
+                     seg_steps=seg_steps, out_addr=1, keep_state=True)
+
+    np.testing.assert_array_equal(res.mems, np.asarray(mono.mem))
+
+    ratio = mono_steps / max(res.lane_steps, 1)
+    busy = 100.0 * res.busy_steps / max(res.lane_steps, 1)
+    rows = [
+        ("fleet/lane_steps", res.lane_steps, mono_steps),
+        ("fleet/items_per_s", round(res.items_per_s, 1),
+         round(n_items / mono_wall, 1)),
+        ("fleet/wall_s", round(res.wall_s, 3), round(mono_wall, 3)),
+    ]
+    derived = {
+        "cycles_saved_ratio": ratio,
+        "streaming_busy_pct": busy,
+        "n_segments": res.n_segments,
+        "bit_exact": True,
+        "target": ">=2X fewer simulated cycles on skewed halt times",
+    }
+    return rows, derived
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--items", type=int, default=1024)
+    ap.add_argument("--chunk", type=int, default=128)
+    ap.add_argument("--seg-steps", type=int, default=512)
+    args = ap.parse_args()
+    rows, derived = fleet_streaming_vs_monolithic(
+        args.items, args.chunk, args.seg_steps)
+    print(f"{'metric':<20} {'streaming':>14} {'monolithic':>14}")
+    for name, s, m in rows:
+        print(f"{name:<20} {s:>14} {m:>14}")
+    print(f"cycles saved: {derived['cycles_saved_ratio']:.2f}x "
+          f"(lane busy {derived['streaming_busy_pct']:.1f}%, "
+          f"{derived['n_segments']} segments, bit-exact memories)")
+    if derived["cycles_saved_ratio"] < 2.0:
+        if args.items < 4 * args.chunk:
+            print(f"note: fleet too small to exploit skew "
+                  f"(--items {args.items} < 4x --chunk {args.chunk}); "
+                  f">=2X target applies at streaming scale")
+        else:
+            sys.exit(f"target NOT met: "
+                     f"{derived['cycles_saved_ratio']:.2f}x < 2X")
+
+
+if __name__ == "__main__":
+    main()

@@ -99,7 +99,7 @@ def table7_fig9_ppa():
 
 
 # paper-scale factors for the three workloads we implement reduced
-# (DESIGN.md §8.2): AD continuous 200 Hz ECG, GR full 2048-bit x 64-ref
+# (DESIGN.md §8.4): AD continuous 200 Hz ECG, GR full 2048-bit x 64-ref
 # sweep, TT 1024-point DFT.
 PAPER_SCALE = {"AD": 200.0 * 60, "GR": 64.0 * 8, "TT": (1024 / 32) ** 2}
 

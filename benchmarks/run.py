@@ -26,6 +26,7 @@ BENCHES = [
     ("fig13_sensitivity_energy", "benchmarks.paper_tables"),
     ("planner_grid", "benchmarks.serving"),
     ("roofline_table", "benchmarks.rooflines"),
+    ("fleet_streaming_vs_monolithic", "benchmarks.fleet"),
 ]
 
 

@@ -1,0 +1,9 @@
+"""Root conftest: anchors the repo root (for the `benchmarks` package) and
+src/ (for `repro`) on sys.path, so the suite runs under bare `pytest` from
+any directory, not just `PYTHONPATH=src python -m pytest` from the root."""
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))

@@ -1,9 +1,12 @@
 """Fleet-scale ILI simulation: the paper's trillion-item story.
 
-Runs the malodor-classification workload for a fleet of items (each with
-its own sensor readings) through the vmapped JAX ISS, sharded over every
-axis of the host mesh, then prices the fleet's energy and carbon through
-the FLEXIFLOW model per core.
+Runs a *heterogeneous* fleet — different workloads on different FLEXIBITS
+cores, one FleetPlan — through the streaming engine (DESIGN.md §9):
+items flow through a fixed pool of lanes in segments, halted items are
+compacted out early, and per-group cycle/energy tallies are priced
+through the FLEXIFLOW carbon model, including the carbon-optimal core for
+each group's (lifetime, frequency) deployment point and the TPU-side
+footprint of the simulation itself.
 
 Run:  PYTHONPATH=src python examples/fleet_simulation.py [--items 512]
 """
@@ -11,38 +14,35 @@ import argparse
 
 import numpy as np
 
-from repro.core.carbon import DeviceProfile, operational_kg
-from repro.flexibench.base import get
-from repro.flexibits import fleet
-from repro.flexibits.cycles import CORES
+from repro.fleet import FleetGroup, FleetPlan, run_plan
 from repro.launch.mesh import make_host_mesh
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--items", type=int, default=256)
+    ap.add_argument("--items", type=int, default=256,
+                    help="items per group")
+    ap.add_argument("--chunk", type=int, default=128)
+    ap.add_argument("--seg-steps", type=int, default=1024)
     args = ap.parse_args()
 
-    w = get("MC")
-    mems = fleet.fleet_inputs(w, args.items, seed=0)
-    mesh = make_host_mesh()
-    state = fleet.run_fleet_sharded(w, mems, mesh)
-    halted = np.asarray(state.halted)
-    assert halted.all(), "some items did not halt"
-    outs = np.asarray(state.mem[:, w.out_addr])
-    print(f"[fleet] {args.items} items on mesh {dict(mesh.shape)}; "
-          f"malodor score histogram: {np.bincount(outs, minlength=5)}")
+    # three sub-fleets: malodor classification on the 1-bit core (long
+    # lifetime, low frequency), water quality on the 4-bit core, smart
+    # irrigation on the 8-bit core (frequent executions favor wide cores)
+    plan = FleetPlan(groups=(
+        FleetGroup(workload="MC", core="SERV", n_items=args.items, seed=0),
+        FleetGroup(workload="WQ", core="QERV", n_items=args.items, seed=1),
+        FleetGroup(workload="SI", core="HERV", n_items=args.items, seed=2),
+    ), chunk=args.chunk, seg_steps=args.seg_steps)
 
-    for name, core in CORES.items():
-        kwh = fleet.fleet_energy_kwh(state, core, vm_kb=0.05)
-        # one year of daily executions for the whole fleet
-        prof = DeviceProfile(
-            float(np.mean(state.n_instr - state.n_two_stage)),
-            float(np.mean(state.n_two_stage)), 0.05, w.nvm_kb)
-        yearly = operational_kg(core, prof, lifetime_s=365 * 86400,
-                                execs_per_day=1) * args.items
-        print(f"[fleet] {name}: {kwh * 1e6:.3f} mWh per fleet-execution, "
-              f"{yearly * 1e3:.2f} g CO2e fleet-year")
+    mesh = make_host_mesh()
+    report = run_plan(plan, mesh=mesh)
+
+    print(f"[fleet] {report.n_items} items on mesh {dict(mesh.shape)}")
+    mc = report.groups[0].result
+    print(f"[fleet] MC malodor score histogram: "
+          f"{np.bincount(mc.out, minlength=5)}")
+    print(report.format())
 
 
 if __name__ == "__main__":

@@ -139,7 +139,8 @@ SHAPES_BY_NAME = {s.name: s for s in SHAPES}
 
 
 def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
-    """long_500k only runs on sub-quadratic archs (ssm/hybrid); see DESIGN.md."""
+    """long_500k only runs on sub-quadratic archs (ssm/hybrid); see
+    DESIGN.md §3."""
     if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
         return False, ("skip: full-attention arch (quadratic prefill at 500k); "
                        "per-spec only SSM/hybrid run long_500k")

@@ -1,0 +1,20 @@
+"""Streaming fleet-execution engine (DESIGN.md §9).
+
+Replaces the one-shot `flexibits.fleet.run_fleet_sharded` hot path with a
+chunked, segment-early-exit, heterogeneity-aware engine:
+
+- `engine.run_stream`   — chunked streaming executor (host memory O(chunk))
+- `plan.FleetPlan`      — heterogeneous (workload, core) sub-fleets
+- `plan.run_plan`       — drive a plan through the engine
+- `report.FleetReport`  — per-group cycle/energy tallies priced through
+                          core/carbon.py and core/planner.py
+"""
+from repro.fleet.engine import (FleetResult, array_source, run_stream,
+                                workload_source)
+from repro.fleet.plan import FleetGroup, FleetPlan, run_plan
+from repro.fleet.report import FleetReport, GroupReport
+
+__all__ = [
+    "FleetResult", "array_source", "run_stream", "workload_source",
+    "FleetGroup", "FleetPlan", "run_plan", "FleetReport", "GroupReport",
+]

@@ -1,0 +1,281 @@
+"""Chunked streaming fleet executor with early-exit segmentation.
+
+The monolithic path (`flexibits.fleet.run_fleet_sharded`) vmaps one
+while_loop over the whole fleet: every SIMD lane is occupied until the
+*slowest* item halts, and the host materializes all item memories at once.
+This engine fixes both (DESIGN.md §9):
+
+- **Chunked streaming.** Items flow through a fixed pool of `chunk` lanes;
+  the host only ever holds O(chunk) memory images (the per-item *scalar*
+  results — counts, halt flags, output words — are O(fleet), which is what
+  makes 10M+ item runs feasible). Lane buffers are donated back to XLA
+  between segments, so device memory is a single chunk-sized allocation.
+
+- **Early-exit segmentation.** The interpreter runs in bounded cycle
+  segments (default 4096). Between segments, halted lanes are harvested,
+  compacted out, and refilled from the stream, so aggregate simulated
+  lane-steps track the fleet's *actual* halt distribution instead of the
+  worst case. Segmented execution retires the exact instruction sequence
+  of `iss.run`, so final memories are bit-exact with the monolithic path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.flexibench.base import Workload
+from repro.flexibits import iss
+
+# source protocol: source(start, count) -> (count, mem_words) int32
+Source = Callable[[int, int], np.ndarray]
+
+
+def array_source(mems: np.ndarray) -> Source:
+    """Stream an in-memory (n_items, M) array (parity tests, small fleets)."""
+    mems = np.asarray(mems, np.int32)
+
+    def src(start: int, count: int) -> np.ndarray:
+        return mems[start:start + count]
+
+    return src
+
+
+def workload_source(w: Workload, seed: int = 0) -> Source:
+    """O(chunk) on-demand input generation for one workload.
+
+    Item i is seeded by (seed, i), so every item's inputs are a pure
+    function of its index — the fleet is identical no matter how the
+    engine's refill boundaries slice the stream (chunk/seg_steps are
+    pure performance knobs).
+    """
+    base = w.initial_memory(np.zeros(w.n_inputs, np.int32))
+
+    def src(start: int, count: int) -> np.ndarray:
+        xs = np.stack([
+            w.gen_inputs(np.random.default_rng([seed, i]), 1)[0]
+            for i in range(start, start + count)])
+        mems = np.tile(base, (count, 1))
+        mems[:, :xs.shape[1]] = xs
+        return mems
+
+    return src
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Per-item scalars plus engine-level accounting for one stream run."""
+    n_items: int
+    n_instr: np.ndarray          # (n,) retired instructions per item
+    n_two_stage: np.ndarray      # (n,)
+    halted: np.ndarray           # (n,) bool (False = max_steps exhausted)
+    out: np.ndarray              # (n,) word at out_addr (0 if no out_addr)
+    mix: np.ndarray              # (8,) retired-instruction mix, fleet total
+    lane_steps: int              # SIMD lane-step slots the engine executed
+    n_segments: int
+    chunk: int
+    seg_steps: int
+    wall_s: float
+    # full final state, only populated with keep_state=True (O(fleet) host
+    # memory — for parity tests and the legacy ISSState wrapper)
+    mems: Optional[np.ndarray] = None    # (n, M)
+    regs: Optional[np.ndarray] = None    # (n, 16)
+    pc: Optional[np.ndarray] = None      # (n,)
+    mix_items: Optional[np.ndarray] = None  # (n, 8)
+
+    @property
+    def busy_steps(self) -> int:
+        """Lane-steps that retired a real instruction (useful work)."""
+        return int(self.n_instr.sum())
+
+    @property
+    def monolithic_lane_steps(self) -> int:
+        """Cost of the one-shot vmap(while_loop) on the same fleet: every
+        lane runs (masked) until the slowest item halts."""
+        if self.n_items == 0:
+            return 0
+        return int(self.n_items) * int(self.n_instr.max())
+
+    @property
+    def items_per_s(self) -> float:
+        return self.n_items / self.wall_s if self.wall_s > 0 else float("inf")
+
+
+@functools.partial(jax.jit, donate_argnums=(1,),
+                   static_argnames=("seg_steps", "max_steps"))
+def _run_seg(code, state, *, seg_steps: int, max_steps: int):
+    return jax.vmap(
+        lambda s: iss.run_segment(code, s, seg_steps, max_steps))(state)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _refill(state: iss.ISSState, replace, new_mems) -> iss.ISSState:
+    """Reset `replace` lanes to a fresh item (mem from new_mems)."""
+    rep1 = replace[:, None]
+    return iss.ISSState(
+        regs=jnp.where(rep1, 0, state.regs),
+        pc=jnp.where(replace, 0, state.pc),
+        mem=jnp.where(rep1, new_mems, state.mem),
+        halted=jnp.where(replace, False, state.halted),
+        n_instr=jnp.where(replace, 0, state.n_instr),
+        n_two_stage=jnp.where(replace, 0, state.n_two_stage),
+        mix=jnp.where(rep1, 0, state.mix),
+    )
+
+
+def _fresh_chunk(mems: np.ndarray, active: np.ndarray) -> iss.ISSState:
+    n, _ = mems.shape
+    return iss.ISSState(
+        regs=jnp.zeros((n, 16), iss.I32),
+        pc=jnp.zeros((n,), iss.I32),
+        mem=jnp.asarray(mems, iss.I32),
+        halted=jnp.asarray(~active),   # padding lanes never step
+        n_instr=jnp.zeros((n,), iss.I32),
+        n_two_stage=jnp.zeros((n,), iss.I32),
+        mix=jnp.zeros((n, len(iss.MIX_CLASSES)), iss.I32),
+    )
+
+
+def _shard_state(state: iss.ISSState, mesh: Mesh) -> iss.ISSState:
+    """Lay the lane axis out over every mesh axis (pure data parallelism)."""
+    axes = tuple(mesh.axis_names)
+    lane = NamedSharding(mesh, P(axes))
+    lane2d = NamedSharding(mesh, P(axes, None))
+    return iss.ISSState(
+        regs=jax.device_put(state.regs, lane2d),
+        pc=jax.device_put(state.pc, lane),
+        mem=jax.device_put(state.mem, lane2d),
+        halted=jax.device_put(state.halted, lane),
+        n_instr=jax.device_put(state.n_instr, lane),
+        n_two_stage=jax.device_put(state.n_two_stage, lane),
+        mix=jax.device_put(state.mix, lane2d),
+    )
+
+
+def run_stream(code: np.ndarray, source: Source, *, n_items: int,
+               mem_words: int, max_steps: int, chunk: int = 256,
+               seg_steps: int = 4096, out_addr: Optional[int] = None,
+               keep_state: bool = False,
+               mesh: Optional[Mesh] = None) -> FleetResult:
+    """Stream `n_items` memory images from `source` through `chunk` lanes.
+
+    Returns per-item scalars in item order. With `keep_state=True` the
+    full final state (memories, registers, pc) is also collected — O(fleet)
+    host memory, so only use it for parity checks or small fleets.
+    """
+    if seg_steps < 1:
+        raise ValueError("seg_steps must be >= 1")
+    if chunk < 1:
+        raise ValueError("chunk must be >= 1")
+    chunk = min(chunk, max(n_items, 1))
+    if mesh is not None:
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        chunk = -(-chunk // n_dev) * n_dev   # round up to mesh divisibility
+
+    code = jnp.asarray(np.asarray(code).view(np.int32))
+
+    # per-item result collectors (scalars: O(fleet))
+    r_instr = np.zeros(n_items, np.int64)
+    r_two = np.zeros(n_items, np.int64)
+    r_halt = np.zeros(n_items, bool)
+    r_out = np.zeros(n_items, np.int32)
+    r_mix = np.zeros(len(iss.MIX_CLASSES), np.int64)
+    if keep_state:
+        r_mem = np.zeros((n_items, mem_words), np.int32)
+        r_regs = np.zeros((n_items, 16), np.int32)
+        r_pc = np.zeros(n_items, np.int32)
+        r_mix_items = np.zeros((n_items, len(iss.MIX_CLASSES)), np.int32)
+
+    t0 = time.perf_counter()
+
+    # initial fill
+    cursor = min(chunk, n_items)
+    first = np.zeros((chunk, mem_words), np.int32)
+    if cursor:
+        first[:cursor] = source(0, cursor)
+    ids = np.full(chunk, -1, np.int64)
+    ids[:cursor] = np.arange(cursor)
+    state = _fresh_chunk(first, ids >= 0)
+    if mesh is not None:
+        state = _shard_state(state, mesh)
+
+    prev_instr = np.zeros(chunk, np.int64)
+    lane_steps = 0
+    n_segments = 0
+
+    while (ids >= 0).any():
+        state = _run_seg(code, state, seg_steps=seg_steps,
+                         max_steps=max_steps)
+        n_segments += 1
+
+        halted = np.asarray(state.halted)
+        n_instr = np.asarray(state.n_instr, np.int64)
+        # SIMD cost: all lanes are occupied for the longest path this
+        # segment took on any lane
+        lane_steps += chunk * int((n_instr - prev_instr).max(initial=0))
+        prev_instr = n_instr
+
+        active = ids >= 0
+        done = active & (halted | (n_instr >= max_steps))
+        idx = np.nonzero(done)[0]
+        if idx.size:
+            items = ids[idx]
+            r_instr[items] = n_instr[idx]
+            r_two[items] = np.asarray(state.n_two_stage, np.int64)[idx]
+            r_halt[items] = halted[idx]
+            mix_rows = np.asarray(state.mix[jnp.asarray(idx)], np.int64)
+            r_mix += mix_rows.sum(0)
+            if out_addr is not None:
+                r_out[items] = np.asarray(state.mem[:, out_addr])[idx]
+            if keep_state:
+                jidx = jnp.asarray(idx)
+                r_mem[items] = np.asarray(state.mem[jidx])
+                r_regs[items] = np.asarray(state.regs[jidx])
+                r_pc[items] = np.asarray(state.pc)[idx]
+                r_mix_items[items] = mix_rows
+
+            # compact: retire done lanes, refill from the stream
+            n_new = min(idx.size, n_items - cursor)
+            ids[idx] = -1
+            if n_new:
+                lanes = idx[:n_new]
+                new_mems = np.zeros((chunk, mem_words), np.int32)
+                new_mems[lanes] = source(cursor, n_new)
+                replace = np.zeros(chunk, bool)
+                replace[lanes] = True
+                ids[lanes] = np.arange(cursor, cursor + n_new)
+                cursor += n_new
+                prev_instr[lanes] = 0
+                state = _refill(state, jnp.asarray(replace),
+                                jnp.asarray(new_mems))
+
+    wall_s = time.perf_counter() - t0
+    return FleetResult(
+        n_items=n_items, n_instr=r_instr, n_two_stage=r_two, halted=r_halt,
+        out=r_out, mix=r_mix, lane_steps=lane_steps, n_segments=n_segments,
+        chunk=chunk, seg_steps=seg_steps, wall_s=wall_s,
+        mems=r_mem if keep_state else None,
+        regs=r_regs if keep_state else None,
+        pc=r_pc if keep_state else None,
+        mix_items=r_mix_items if keep_state else None,
+    )
+
+
+def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,
+                        chunk: int = 256, seg_steps: int = 4096,
+                        max_steps: Optional[int] = None,
+                        keep_state: bool = False,
+                        mesh: Optional[Mesh] = None) -> FleetResult:
+    """Convenience wrapper: stream a FlexiBench workload end to end."""
+    return run_stream(
+        w.program.code, workload_source(w, seed), n_items=n_items,
+        mem_words=w.total_mem_words,
+        max_steps=max_steps or w.max_steps, chunk=chunk,
+        seg_steps=seg_steps, out_addr=w.out_addr, keep_state=keep_state,
+        mesh=mesh)

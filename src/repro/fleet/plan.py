@@ -1,0 +1,73 @@
+"""Heterogeneous fleet plans: (workload, core) sub-fleets in one run.
+
+The paper's fleet is not uniform — items differ in workload, datapath
+width, deployment lifetime, and task frequency (1000X lifetime variation,
+Table 2). A `FleetPlan` expresses that: each `FleetGroup` pins a
+FlexiBench workload to a FLEXIBITS core and a deployment profile, and
+`run_plan` drives every group through the same streaming engine
+(DESIGN.md §9.3), collecting per-group cycle/energy tallies for the
+carbon report.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+from jax.sharding import Mesh
+
+from repro.flexibench import base as fb
+from repro.flexibits.cycles import CORES, Core
+from repro.fleet import engine
+from repro.fleet.report import FleetReport, build_group_report
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetGroup:
+    """One homogeneous sub-fleet: n_items of one workload on one core."""
+    workload: str                         # FlexiBench key (WQ, MC, ...)
+    core: str = "SERV"                    # FLEXIBITS core name
+    n_items: int = 1024
+    seed: int = 0
+    lifetime_s: Optional[float] = None    # default: workload Table-2 value
+    execs_per_day: Optional[float] = None
+    max_steps: Optional[int] = None
+
+    def resolve(self) -> Tuple[fb.Workload, Core, float, float]:
+        w = fb.get(self.workload)
+        core = CORES[self.core]
+        life = self.lifetime_s if self.lifetime_s is not None \
+            else w.lifetime_s
+        freq = self.execs_per_day if self.execs_per_day is not None \
+            else w.execs_per_day
+        return w, core, life, freq
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetPlan:
+    """A full heterogeneous fleet plus engine tuning knobs."""
+    groups: Sequence[FleetGroup]
+    chunk: int = 256
+    seg_steps: int = 4096
+    intensity: float = 0.367              # kg CO2e/kWh (US grid)
+    clock_hz: float = 10_000.0
+
+    @property
+    def n_items(self) -> int:
+        return sum(g.n_items for g in self.groups)
+
+
+def run_plan(plan: FleetPlan, mesh: Optional[Mesh] = None,
+             keep_state: bool = False) -> FleetReport:
+    """Execute every group through the streaming engine and price it."""
+    group_reports = []
+    for g in plan.groups:
+        w, core, lifetime_s, execs_per_day = g.resolve()
+        res = engine.run_workload_stream(
+            w, g.n_items, seed=g.seed, chunk=plan.chunk,
+            seg_steps=plan.seg_steps, max_steps=g.max_steps,
+            keep_state=keep_state, mesh=mesh)
+        group_reports.append(build_group_report(
+            group=g, workload=w, core=core, result=res,
+            lifetime_s=lifetime_s, execs_per_day=execs_per_day,
+            intensity=plan.intensity, clock_hz=plan.clock_hz))
+    return FleetReport(groups=group_reports, intensity=plan.intensity)

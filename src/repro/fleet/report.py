@@ -1,0 +1,140 @@
+"""Fleet-level carbon report: engine tallies priced through the paper's
+models.
+
+Each group's measured cycle tallies become a `DeviceProfile` for
+core/carbon.py (operational + embodied kg over the group's deployment
+lifetime), core/selection.py supplies the carbon-optimal core for the
+group's (lifetime, frequency) point, and core/planner.py's datacenter
+constants price the *simulation itself* — the TPU-side footprint of
+running the fleet through the ISS (DESIGN.md §9.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List
+
+from repro.core import carbon
+from repro.core.planner import CHIP_POWER_W, PUE
+from repro.core.selection import optimal_core
+from repro.flexibench.base import Workload
+from repro.flexibits.cycles import Core
+from repro.fleet.engine import FleetResult
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupReport:
+    group: Any                    # the FleetGroup that produced this row
+    workload: Workload
+    core: Core
+    result: FleetResult
+    lifetime_s: float
+    execs_per_day: float
+    profile: carbon.DeviceProfile      # measured mean instruction counts
+    energy_j_per_exec: float           # one execution, one item
+    fleet_exec_kwh: float              # one execution of every item
+    operational_kg: float              # whole group over its lifetime
+    embodied_kg: float                 # whole group (SoC only)
+    total_kg: float
+    recommended_core: str              # carbon-argmin core for this point
+
+    @property
+    def cycles_per_item(self) -> float:
+        return self.core.cycles(self.profile.n_one_stage,
+                                self.profile.n_two_stage)
+
+
+def build_group_report(*, group: Any, workload: Workload, core: Core,
+                       result: FleetResult, lifetime_s: float,
+                       execs_per_day: float, intensity: float,
+                       clock_hz: float) -> GroupReport:
+    n = max(result.n_items, 1)
+    mean_one = float((result.n_instr - result.n_two_stage).sum()) / n
+    mean_two = float(result.n_two_stage.sum()) / n
+    vm_kb = workload.vm_kb()
+    prof = carbon.DeviceProfile(n_one_stage=mean_one, n_two_stage=mean_two,
+                                vm_kb=vm_kb, nvm_kb=workload.nvm_kb)
+    e_exec = carbon.energy_per_exec_j(core, prof, clock_hz)
+    op_kg = carbon.operational_kg(
+        core, prof, lifetime_s=lifetime_s, execs_per_day=execs_per_day,
+        intensity=intensity, clock_hz=clock_hz) * result.n_items
+    emb_kg = carbon.soc_embodied_kg(core, prof) * result.n_items
+    best, _ = optimal_core(prof, lifetime_s=lifetime_s,
+                           execs_per_day=execs_per_day, intensity=intensity)
+    return GroupReport(
+        group=group, workload=workload, core=core, result=result,
+        lifetime_s=lifetime_s, execs_per_day=execs_per_day, profile=prof,
+        energy_j_per_exec=e_exec,
+        fleet_exec_kwh=e_exec * result.n_items / 3.6e6,
+        operational_kg=op_kg, embodied_kg=emb_kg,
+        total_kg=op_kg + emb_kg, recommended_core=best.name)
+
+
+def simulation_footprint_kg(wall_s: float, n_chips: int = 1,
+                            intensity: float = 0.367) -> float:
+    """Carbon of running the simulation itself, using the serving planner's
+    datacenter chip model (core/planner.py): chip power x PUE x wall time."""
+    kwh = n_chips * CHIP_POWER_W * PUE * wall_s / 3600.0 / 1000.0
+    return kwh * intensity
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetReport:
+    groups: List[GroupReport]
+    intensity: float
+
+    @property
+    def n_items(self) -> int:
+        return sum(g.result.n_items for g in self.groups)
+
+    @property
+    def lane_steps(self) -> int:
+        return sum(g.result.lane_steps for g in self.groups)
+
+    @property
+    def monolithic_lane_steps(self) -> int:
+        return sum(g.result.monolithic_lane_steps for g in self.groups)
+
+    @property
+    def busy_steps(self) -> int:
+        return sum(g.result.busy_steps for g in self.groups)
+
+    @property
+    def wall_s(self) -> float:
+        return sum(g.result.wall_s for g in self.groups)
+
+    @property
+    def total_kg(self) -> float:
+        return sum(g.total_kg for g in self.groups)
+
+    @property
+    def cycles_saved_ratio(self) -> float:
+        """Monolithic lane-steps / streaming lane-steps (higher = better)."""
+        return self.monolithic_lane_steps / max(self.lane_steps, 1)
+
+    def simulation_kg(self, n_chips: int = 1) -> float:
+        return simulation_footprint_kg(self.wall_s, n_chips, self.intensity)
+
+    def format(self) -> str:
+        head = (f"{'group':<22} {'core':<5} {'items':>8} {'instr/item':>11} "
+                f"{'cyc/item':>10} {'mWh/fleet-exec':>14} "
+                f"{'kg CO2e (op+emb)':>17} {'best':>5}")
+        lines = [head, "-" * len(head)]
+        for g in self.groups:
+            mean_instr = (g.profile.n_one_stage + g.profile.n_two_stage)
+            lines.append(
+                f"{g.workload.key + ' ' + g.workload.algorithm:<22.22} "
+                f"{g.core.name:<5} {g.result.n_items:>8} "
+                f"{mean_instr:>11.1f} {g.cycles_per_item:>10.1f} "
+                f"{g.fleet_exec_kwh * 1e6:>14.3f} "
+                f"{g.operational_kg:>8.3g}+{g.embodied_kg:<8.3g} "
+                f"{g.recommended_core:>5}")
+        lines.append("-" * len(head))
+        eff = 100.0 * self.busy_steps / max(self.lane_steps, 1)
+        lines.append(
+            f"fleet: {self.n_items} items, {self.total_kg:.4g} kg CO2e; "
+            f"engine: {self.lane_steps:,} lane-steps "
+            f"({eff:.1f}% busy) vs {self.monolithic_lane_steps:,} "
+            f"monolithic ({self.cycles_saved_ratio:.2f}x saved); "
+            f"sim footprint {self.simulation_kg() * 1e3:.3g} g CO2e "
+            f"({self.wall_s:.2f}s wall)")
+        return "\n".join(lines)

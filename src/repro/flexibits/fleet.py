@@ -1,24 +1,25 @@
 """Fleet-scale ILI simulation: millions of items, each running the same
-program on different sensor inputs, sharded across the production mesh.
+program on different sensor inputs.
 
-This is the trillion-item adaptation of the paper's one-device RTL loop:
-`vmap` over items within a shard, `shard_map` over the mesh's combined
-(pod, data, model) axes (an ISS run has no cross-item communication, so
-every mesh axis is pure data parallelism).
+Since the streaming engine landed (DESIGN.md §9) this module is a thin
+compatibility wrapper: `run_fleet_sharded` keeps its historical signature
+and bit-exact results, but executes through `repro.fleet.engine` —
+chunked, segment-early-exit, buffer-donated — instead of one monolithic
+vmap(while_loop) over the whole fleet. New code should use
+`repro.fleet` directly (heterogeneous plans, O(chunk) host memory,
+carbon reports); this wrapper materializes full per-item state and is
+therefore O(fleet) on the host, exactly like the old path.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
 from repro.flexibench.base import Workload
 from repro.flexibits import iss
 from repro.flexibits.cycles import Core
+from repro.fleet import engine
 
 
 def fleet_inputs(w: Workload, n_items: int, seed: int = 0) -> np.ndarray:
@@ -30,22 +31,29 @@ def fleet_inputs(w: Workload, n_items: int, seed: int = 0) -> np.ndarray:
     return mems
 
 
-def run_fleet_sharded(w: Workload, mems: np.ndarray, mesh: Mesh):
-    """Run the fleet with items sharded over every mesh axis."""
-    code = jnp.asarray(w.program.code.view(np.int32))
-    axes = tuple(mesh.axis_names)
-    spec = P(axes)
+def run_fleet_sharded(w: Workload, mems: np.ndarray, mesh: Mesh,
+                      seg_steps: int = 4096) -> iss.ISSState:
+    """Run the fleet with items sharded over every mesh axis.
 
-    @functools.partial(
-        shard_map, mesh=mesh, in_specs=(spec,),
-        out_specs=iss.ISSState(
-            regs=spec, pc=spec, mem=spec, halted=spec, n_instr=spec,
-            n_two_stage=spec, mix=spec),
-        check_rep=False)
-    def shard_run(mems_shard):
-        return jax.vmap(lambda m: iss.run(code, m, w.max_steps))(mems_shard)
-
-    return jax.jit(shard_run)(jnp.asarray(mems))
+    Legacy API: returns the batched final ISSState for every item, in item
+    order, bit-exact with the historical vmap(while_loop) implementation.
+    """
+    mems = np.asarray(mems, np.int32)
+    n = mems.shape[0]
+    res = engine.run_stream(
+        w.program.code, engine.array_source(mems), n_items=n,
+        mem_words=mems.shape[1], max_steps=w.max_steps, chunk=n,
+        seg_steps=seg_steps, out_addr=w.out_addr, keep_state=True,
+        mesh=mesh)
+    return iss.ISSState(
+        regs=jnp.asarray(res.regs),
+        pc=jnp.asarray(res.pc),
+        mem=jnp.asarray(res.mems),
+        halted=jnp.asarray(res.halted),
+        n_instr=jnp.asarray(res.n_instr, iss.I32),
+        n_two_stage=jnp.asarray(res.n_two_stage, iss.I32),
+        mix=jnp.asarray(res.mix_items, iss.I32),
+    )
 
 
 def fleet_energy_kwh(state: iss.ISSState, core: Core,

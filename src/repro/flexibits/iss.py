@@ -220,6 +220,29 @@ def run(code: jax.Array, mem: jax.Array, max_steps: int) -> ISSState:
     return lax.while_loop(cond, lambda s: step(code, s), s0)
 
 
+def run_segment(code: jax.Array, s: ISSState, seg_steps: int,
+                max_steps: int) -> ISSState:
+    """Resume an ISSState for up to `seg_steps` further instructions.
+
+    The segment primitive of the streaming fleet engine (DESIGN.md §9):
+    running `run_segment` repeatedly until `halted` (or `n_instr` reaches
+    `max_steps`) retires the exact same instruction sequence as a single
+    `run` call, so segmented execution is bit-exact with the monolithic
+    while_loop. Not jitted here — fleet/engine.py jits the vmapped form
+    with buffer donation.
+    """
+    def cond(c):
+        k, st = c
+        return (~st.halted) & (k < seg_steps) & (st.n_instr < max_steps)
+
+    def body(c):
+        k, st = c
+        return k + 1, step(code, st)
+
+    _, out = lax.while_loop(cond, body, (jnp.zeros((), I32), s))
+    return out
+
+
 def run_fleet(code: jax.Array, mems: jax.Array, max_steps: int) -> ISSState:
     """vmap over a fleet of items with different memory images."""
     return jax.vmap(lambda m: run(code, m, max_steps))(mems)

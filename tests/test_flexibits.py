@@ -1,7 +1,9 @@
 """FlexiBits property tests: JAX ISS == Python oracle on random programs
-(hypothesis), assembler round-trips, cycle-model invariants."""
-import hypothesis
-import hypothesis.strategies as st
+(hypothesis), assembler round-trips, cycle-model invariants.
+
+`hypothesis` is optional (see requirements-dev.txt): without it the
+property tests are skipped; deterministic tests still run.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -11,43 +13,20 @@ from repro.flexibits.asm import Asm
 from repro.flexibits.cycles import CORES, HERV, QERV, SERV
 from repro.flexibits.pyiss import PyISS
 
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
 R_OPS = ["add", "sub", "sll", "slt", "sltu", "xor", "srl", "sra", "or",
          "and"]
 I_OPS = ["addi", "slti", "sltiu", "xori", "ori", "andi"]
 SH_OPS = ["slli", "srli", "srai"]
 
 
-@st.composite
-def random_program(draw):
-    """Straight-line arithmetic program + a store of every register."""
-    a = Asm(vm_reserved=128)
-    n = draw(st.integers(5, 40))
-    # seed registers
-    for r in range(5, 16):
-        a.li(r, draw(st.integers(-2048, 2047)))
-    for _ in range(n):
-        kind = draw(st.sampled_from(["r", "i", "sh"]))
-        rd = draw(st.integers(5, 15))
-        rs1 = draw(st.integers(0, 15))
-        if kind == "r":
-            op = draw(st.sampled_from(R_OPS))
-            rs2 = draw(st.integers(0, 15))
-            a.emit(op, rd, rs1, rs2)
-        elif kind == "i":
-            op = draw(st.sampled_from(I_OPS))
-            a.emit(op, rd, rs1, imm=draw(st.integers(-2048, 2047)))
-        else:
-            op = draw(st.sampled_from(SH_OPS))
-            a.emit(op, rd, rs1, imm=draw(st.integers(0, 31)))
-    for r in range(16):
-        a.sw(r, 0, 4 * r)
-    a.halt()
-    return a.assemble()
-
-
-@hypothesis.settings(max_examples=30, deadline=None)
-@hypothesis.given(random_program())
-def test_iss_matches_oracle(prog):
+def _check_iss_matches_oracle(prog):
     mem0 = prog.initial_memory(128)
     py = PyISS(prog.code, 128, mem0).run(100_000)
     jx = iss.run(jnp.asarray(prog.code.view(np.int32)),
@@ -59,10 +38,7 @@ def test_iss_matches_oracle(prog):
     assert int(jx.n_two_stage) == py.n_two_stage
 
 
-@hypothesis.settings(max_examples=20, deadline=None)
-@hypothesis.given(st.integers(-2 ** 31, 2 ** 31 - 1),
-                  st.integers(-2 ** 31, 2 ** 31 - 1))
-def test_software_mul_wraps_like_int32(x, y):
+def _check_software_mul_wraps_like_int32(x, y):
     a = Asm(vm_reserved=64)
     a.li(a.a0, x)
     a.li(a.a1, y)
@@ -75,6 +51,93 @@ def test_software_mul_wraps_like_int32(x, y):
     want = np.asarray([(x * y) & 0xFFFFFFFF], np.int64).astype(np.uint32) \
         .astype(np.int32)[0]
     assert np.int32(py.mem[0]) == want
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def random_program(draw):
+        """Straight-line arithmetic program + a store of every register."""
+        a = Asm(vm_reserved=128)
+        n = draw(st.integers(5, 40))
+        # seed registers
+        for r in range(5, 16):
+            a.li(r, draw(st.integers(-2048, 2047)))
+        for _ in range(n):
+            kind = draw(st.sampled_from(["r", "i", "sh"]))
+            rd = draw(st.integers(5, 15))
+            rs1 = draw(st.integers(0, 15))
+            if kind == "r":
+                op = draw(st.sampled_from(R_OPS))
+                rs2 = draw(st.integers(0, 15))
+                a.emit(op, rd, rs1, rs2)
+            elif kind == "i":
+                op = draw(st.sampled_from(I_OPS))
+                a.emit(op, rd, rs1, imm=draw(st.integers(-2048, 2047)))
+            else:
+                op = draw(st.sampled_from(SH_OPS))
+                a.emit(op, rd, rs1, imm=draw(st.integers(0, 31)))
+        for r in range(16):
+            a.sw(r, 0, 4 * r)
+        a.halt()
+        return a.assemble()
+
+    @hypothesis.settings(max_examples=30, deadline=None)
+    @hypothesis.given(random_program())
+    def test_iss_matches_oracle(prog):
+        _check_iss_matches_oracle(prog)
+
+    @hypothesis.settings(max_examples=20, deadline=None)
+    @hypothesis.given(st.integers(-2 ** 31, 2 ** 31 - 1),
+                      st.integers(-2 ** 31, 2 ** 31 - 1))
+    def test_software_mul_wraps_like_int32(x, y):
+        _check_software_mul_wraps_like_int32(x, y)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_iss_matches_oracle():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_software_mul_wraps_like_int32():
+        pass
+
+
+def test_software_mul_spot_checks():
+    """Deterministic fallback for the hypothesis mul property."""
+    for x, y in ((0, 0), (3, 7), (-5, 123456), (2 ** 31 - 1, -2),
+                 (-2 ** 31, 3)):
+        _check_software_mul_wraps_like_int32(x, y)
+
+
+def _np_random_program(rng):
+    """Deterministic analogue of the hypothesis `random_program` strategy."""
+    a = Asm(vm_reserved=128)
+    for r in range(5, 16):
+        a.li(r, int(rng.integers(-2048, 2048)))
+    for _ in range(int(rng.integers(5, 41))):
+        kind = rng.choice(["r", "i", "sh"])
+        rd = int(rng.integers(5, 16))
+        rs1 = int(rng.integers(0, 16))
+        if kind == "r":
+            a.emit(str(rng.choice(R_OPS)), rd, rs1,
+                   int(rng.integers(0, 16)))
+        elif kind == "i":
+            a.emit(str(rng.choice(I_OPS)), rd, rs1,
+                   imm=int(rng.integers(-2048, 2048)))
+        else:
+            a.emit(str(rng.choice(SH_OPS)), rd, rs1,
+                   imm=int(rng.integers(0, 32)))
+    for r in range(16):
+        a.sw(r, 0, 4 * r)
+    a.halt()
+    return a.assemble()
+
+
+def test_iss_oracle_spot_checks():
+    """Deterministic fallback for the hypothesis ISS-vs-oracle property:
+    fixed-seed random programs through the same parity check."""
+    for seed in range(5):
+        _check_iss_matches_oracle(
+            _np_random_program(np.random.default_rng(seed)))
 
 
 def test_branch_and_memory_ops():
