@@ -1,18 +1,27 @@
-"""Streaming fleet engine vs the monolithic baseline (DESIGN.md §9).
+"""Streaming fleet engine benchmarks (DESIGN.md §9).
 
-Measures, on a skewed halt-time distribution (the paper's regime: most
-items run short data-dependent paths, a tail runs long ones):
+Three studies on a skewed halt-time distribution (the paper's regime:
+most items run short data-dependent paths, a tail runs long ones):
 
-- total simulated lane-steps: monolithic vmap(while_loop) occupies every
-  lane until the slowest item halts; the streaming engine compacts halted
-  items out between segments, so it should retire >=2X fewer.
-- items/sec wall-clock for both paths, with bit-exact final memories.
+- streaming vs monolithic: total simulated lane-steps; the monolithic
+  vmap(while_loop) occupies every lane until the slowest item halts,
+  the streaming engine compacts halted items out between segments, so
+  it should retire >=2X fewer — bit-exact final memories.
+- stepper A/B (§9.5): wall-clock per retired instruction of the
+  lane-parallel branchless stepper vs the legacy vmapped lax.switch
+  interpreter on a >=64-lane chunk.
+- device scaling (§9.6): items/s of the shard_map'd engine as the host
+  device count grows (subprocesses with forced CPU device counts).
 
 Run:  PYTHONPATH=src python benchmarks/fleet.py [--items 1024]
+      (writes BENCH_fleet.json at the repo root)
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import sys
 import time
 
@@ -22,6 +31,8 @@ import numpy as np
 from repro.flexibits import iss
 from repro.flexibits.asm import Asm
 from repro.fleet import array_source, run_stream
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def skew_program():
@@ -89,28 +100,181 @@ def fleet_streaming_vs_monolithic(n_items: int = 1024, chunk: int = 128,
     return rows, derived
 
 
+def fleet_stepper_ab(n_items: int = 512, chunk: int = 128,
+                     seg_steps: int = 256, max_steps: int = 100_000):
+    """A/B the branchless lane stepper vs the legacy switch interpreter.
+
+    Same fleet, same chunk (>=64 lanes), same segmentation — only the
+    segment interpreter changes. Metric: wall-clock ns per retired
+    instruction (lower is better), best of `reps` timed runs so a noisy
+    shared CI runner can't flip the gate; outputs must agree bit-exactly.
+    """
+    assert chunk >= 64, "A/B must run on a >=64-lane chunk"
+    reps = 3
+    prog = skew_program()
+    mems = skew_fleet(prog, n_items)
+    kw = dict(n_items=n_items, mem_words=32, max_steps=max_steps,
+              chunk=chunk, seg_steps=seg_steps, out_addr=1)
+    stats = {}
+    ref_out = None
+    for stepper in ("switch", "branchless"):
+        run_stream(prog.code, array_source(mems), stepper=stepper,
+                   **kw)                          # compile warm-up
+        res = None
+        for _ in range(reps):
+            r = run_stream(prog.code, array_source(mems),
+                           stepper=stepper, **kw)
+            if res is None or r.wall_s < res.wall_s:
+                res = r
+        if ref_out is None:
+            ref_out = res.out
+        else:
+            np.testing.assert_array_equal(res.out, ref_out)
+        stats[stepper] = {
+            "wall_s": res.wall_s,
+            "ns_per_retired_instr":
+                res.wall_s * 1e9 / max(res.busy_steps, 1),
+            "items_per_s": res.items_per_s,
+            "n_segments": res.n_segments,
+        }
+    speedup = (stats["switch"]["ns_per_retired_instr"]
+               / stats["branchless"]["ns_per_retired_instr"])
+    rows = [
+        ("fleet/ab_ns_per_instr",
+         round(stats["branchless"]["ns_per_retired_instr"], 1),
+         round(stats["switch"]["ns_per_retired_instr"], 1)),
+        ("fleet/ab_items_per_s",
+         round(stats["branchless"]["items_per_s"], 1),
+         round(stats["switch"]["items_per_s"], 1)),
+    ]
+    derived = {
+        "stepper_speedup": speedup,
+        "branchless": stats["branchless"],
+        "switch": stats["switch"],
+        "chunk": chunk,
+        "bit_exact": True,
+        "target": "branchless < switch ns/retired-instr on >=64 lanes",
+    }
+    return rows, derived
+
+
+def _scaling_worker(n_items: int, chunk: int, seg_steps: int) -> dict:
+    """One scaling point: run the sharded engine over ALL host devices.
+    Invoked in a subprocess with XLA_FLAGS forcing the device count."""
+    import jax
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("fleet",))
+    prog = skew_program()
+    mems = skew_fleet(prog, n_items)
+    kw = dict(n_items=n_items, mem_words=32, max_steps=100_000,
+              chunk=chunk, seg_steps=seg_steps, out_addr=1, mesh=mesh)
+    run_stream(prog.code, array_source(mems), **kw)   # compile warm-up
+    res = run_stream(prog.code, array_source(mems), **kw)
+    return {"n_devices": n_dev, "items_per_s": res.items_per_s,
+            "wall_s": res.wall_s, "chunk": res.chunk,
+            "n_segments": res.n_segments}
+
+
+def fleet_device_scaling(counts=(1, 2, 4), n_items: int = 1024,
+                         chunk: int = 128, seg_steps: int = 256):
+    """Scaling curve of the shard_map'd engine over host device counts.
+
+    jax pins the device count at first backend init, so every point runs
+    in a subprocess with `--xla_force_host_platform_device_count=N`.
+    """
+    points = []
+    for n in counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count={n}")
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(_ROOT, "src"), _ROOT,
+             env.get("PYTHONPATH", "")])
+        cmd = [sys.executable, os.path.abspath(__file__),
+               "--scale-worker", "--items", str(n_items),
+               "--chunk", str(chunk), "--seg-steps", str(seg_steps)]
+        proc = subprocess.run(cmd, env=env, capture_output=True,
+                              text=True, timeout=900)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"scaling worker (n={n}) failed:\n{proc.stderr[-2000:]}")
+        points.append(json.loads(proc.stdout.strip().splitlines()[-1]))
+    base = points[0]["items_per_s"]
+    rows = [(f"fleet/scale_{p['n_devices']}dev",
+             round(p["items_per_s"], 1),
+             round(p["items_per_s"] / max(base, 1e-9), 2))
+            for p in points]
+    derived = {"points": points,
+               "speedup_vs_1dev":
+                   [p["items_per_s"] / max(base, 1e-9) for p in points]}
+    return rows, derived
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--items", type=int, default=1024)
     ap.add_argument("--chunk", type=int, default=128)
     ap.add_argument("--seg-steps", type=int, default=512)
+    ap.add_argument("--json", default=os.path.join(_ROOT,
+                                                   "BENCH_fleet.json"))
+    ap.add_argument("--scale-worker", action="store_true",
+                    help="internal: emit one device-scaling point as JSON")
+    ap.add_argument("--skip-scaling", action="store_true",
+                    help="skip the subprocess device-scaling sweep")
     args = ap.parse_args()
+
+    if args.scale_worker:
+        print(json.dumps(_scaling_worker(args.items, args.chunk,
+                                         args.seg_steps)))
+        return
+
+    bench = {}
     rows, derived = fleet_streaming_vs_monolithic(
         args.items, args.chunk, args.seg_steps)
+    bench["streaming_vs_monolithic"] = derived
     print(f"{'metric':<20} {'streaming':>14} {'monolithic':>14}")
     for name, s, m in rows:
         print(f"{name:<20} {s:>14} {m:>14}")
     print(f"cycles saved: {derived['cycles_saved_ratio']:.2f}x "
           f"(lane busy {derived['streaming_busy_pct']:.1f}%, "
           f"{derived['n_segments']} segments, bit-exact memories)")
-    if derived["cycles_saved_ratio"] < 2.0:
-        if args.items < 4 * args.chunk:
-            print(f"note: fleet too small to exploit skew "
-                  f"(--items {args.items} < 4x --chunk {args.chunk}); "
-                  f">=2X target applies at streaming scale")
-        else:
-            sys.exit(f"target NOT met: "
-                     f"{derived['cycles_saved_ratio']:.2f}x < 2X")
+
+    ab_rows, ab = fleet_stepper_ab(n_items=args.items,
+                                   chunk=max(args.chunk, 64),
+                                   seg_steps=args.seg_steps)
+    bench["stepper_ab"] = ab
+    print(f"\n{'metric':<22} {'branchless':>14} {'switch':>14}")
+    for name, bl, sw in ab_rows:
+        print(f"{name:<22} {bl:>14} {sw:>14}")
+    print(f"branchless speedup: {ab['stepper_speedup']:.2f}x "
+          f"per retired instruction (bit-exact)")
+
+    if not args.skip_scaling:
+        sc_rows, sc = fleet_device_scaling(
+            n_items=args.items, chunk=args.chunk,
+            seg_steps=args.seg_steps)
+        bench["device_scaling"] = sc
+        print(f"\n{'metric':<22} {'items/s':>14} {'vs 1 dev':>14}")
+        for name, ips, rel in sc_rows:
+            print(f"{name:<22} {ips:>14} {rel:>14}")
+
+    with open(args.json, "w") as f:
+        json.dump(bench, f, indent=1, default=str)
+    print(f"\nwrote {args.json}")
+
+    failures = []
+    if derived["cycles_saved_ratio"] < 2.0 and args.items >= 4 * args.chunk:
+        failures.append(f"streaming target NOT met: "
+                        f"{derived['cycles_saved_ratio']:.2f}x < 2X")
+    if ab["stepper_speedup"] <= 1.0:
+        failures.append(f"stepper A/B target NOT met: "
+                        f"{ab['stepper_speedup']:.2f}x <= 1X")
+    if derived["cycles_saved_ratio"] < 2.0 and args.items < 4 * args.chunk:
+        print(f"note: fleet too small to exploit skew "
+              f"(--items {args.items} < 4x --chunk {args.chunk}); "
+              f">=2X target applies at streaming scale")
+    if failures:
+        sys.exit("; ".join(failures))
 
 
 if __name__ == "__main__":

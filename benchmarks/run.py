@@ -27,6 +27,7 @@ BENCHES = [
     ("planner_grid", "benchmarks.serving"),
     ("roofline_table", "benchmarks.rooflines"),
     ("fleet_streaming_vs_monolithic", "benchmarks.fleet"),
+    ("fleet_stepper_ab", "benchmarks.fleet"),
 ]
 
 

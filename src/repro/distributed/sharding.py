@@ -16,12 +16,49 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def abstract_mesh(axis_names: Tuple[str, ...],
+                  axis_sizes: Tuple[int, ...]):
+    """Device-free mesh for shape-only sharding checks.
+
+    jax.sharding.AbstractMesh changed signature across jax releases
+    ((name, size) pairs vs separate sizes/names tuples); accept both so
+    the divisibility rules below can be exercised without real devices.
+    """
+    try:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, axis_sizes)))
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(axis_sizes), tuple(axis_names))
+
+
 def _model_axis_size(mesh: Mesh) -> int:
     return mesh.shape["model"]
 
 
 def batch_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def lane_specs(mesh: Mesh, state):
+    """Fleet-lane layout: dim 0 of every leaf over EVERY mesh axis.
+
+    The ISS fleet engine is pure data parallelism — each lane is an
+    independent item — so the lane pool flattens the whole mesh
+    (data x model x pod alike) into one device axis. Used both for
+    device_put layouts and as shard_map in/out specs (fleet/engine.py).
+    """
+    axes = tuple(mesh.axis_names)
+
+    def one(leaf):
+        return P(axes, *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(one, state)
+
+
+def lane_shardings(mesh: Mesh, state):
+    """NamedShardings for `lane_specs` (device_put-ready)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        lane_specs(mesh, state))
 
 
 # Priority lists of (dim, description) per parameter name. Dims are python

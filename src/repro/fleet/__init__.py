@@ -9,12 +9,14 @@ chunked, segment-early-exit, heterogeneity-aware engine:
 - `report.FleetReport`  — per-group cycle/energy tallies priced through
                           core/carbon.py and core/planner.py
 """
-from repro.fleet.engine import (FleetResult, array_source, run_stream,
+from repro.fleet.engine import (STEPPERS, FleetResult, array_source,
+                                run_stream, run_workload_stream,
                                 workload_source)
 from repro.fleet.plan import FleetGroup, FleetPlan, run_plan
 from repro.fleet.report import FleetReport, GroupReport
 
 __all__ = [
-    "FleetResult", "array_source", "run_stream", "workload_source",
+    "STEPPERS", "FleetResult", "array_source", "run_stream",
+    "run_workload_stream", "workload_source",
     "FleetGroup", "FleetPlan", "run_plan", "FleetReport", "GroupReport",
 ]

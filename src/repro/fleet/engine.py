@@ -20,6 +20,7 @@ This engine fixes both (DESIGN.md §9):
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import functools
 import time
@@ -28,10 +29,14 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed import sharding as dsharding
 from repro.flexibench.base import Workload
 from repro.flexibits import iss
+
+STEPPERS = ("branchless", "switch")
 
 # source protocol: source(start, count) -> (count, mem_words) int32
 Source = Callable[[int, int], np.ndarray]
@@ -68,6 +73,66 @@ def workload_source(w: Workload, seed: int = 0) -> Source:
     return src
 
 
+class _Prefetcher:
+    """Double-buffered async host refill (DESIGN.md §9.6).
+
+    Source generation is host work (per-item RNG, memory-image assembly);
+    segment execution is device work. A one-worker executor keeps exactly
+    one `block`-sized fetch in flight, so generating the next chunk of
+    items overlaps the device segment instead of serializing after it.
+    The engine consumes items strictly in stream order, so a single
+    pending future is a full double buffer. `background=False` degrades
+    to synchronous fetches (for sources that aren't thread-safe).
+    """
+
+    def __init__(self, source: Source, n_items: int, block: int,
+                 background: bool = True):
+        self._source = source
+        self._n = n_items
+        self._block = max(1, block)
+        self._cursor = 0          # next un-requested item
+        self._buf: Optional[np.ndarray] = None
+        self._off = 0
+        self._fut = None
+        self._ex = concurrent.futures.ThreadPoolExecutor(max_workers=1) \
+            if background else None
+        if self._ex is not None:
+            self._submit()
+
+    def _submit(self):
+        count = min(self._block, self._n - self._cursor)
+        if count > 0:
+            start = self._cursor
+            self._cursor += count
+            self._fut = self._ex.submit(self._source, start, count)
+        else:
+            self._fut = None
+
+    def take(self, count: int) -> np.ndarray:
+        """Next `count` item memories, in stream order."""
+        if self._ex is None:
+            start = self._cursor
+            self._cursor += count
+            return np.asarray(self._source(start, count), np.int32)
+        parts = []
+        while count > 0:
+            if self._buf is None or self._off >= len(self._buf):
+                if self._fut is None:
+                    raise RuntimeError("source stream exhausted")
+                self._buf = np.asarray(self._fut.result(), np.int32)
+                self._off = 0
+                self._submit()          # refill the second buffer now
+            k = min(count, len(self._buf) - self._off)
+            parts.append(self._buf[self._off:self._off + k])
+            self._off += k
+            count -= k
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+    def close(self):
+        if self._ex is not None:
+            self._ex.shutdown(wait=False)
+
+
 @dataclasses.dataclass
 class FleetResult:
     """Per-item scalars plus engine-level accounting for one stream run."""
@@ -82,6 +147,8 @@ class FleetResult:
     chunk: int
     seg_steps: int
     wall_s: float
+    stepper: str = "branchless"
+    n_devices: int = 1
     # full final state, only populated with keep_state=True (O(fleet) host
     # memory — for parity tests and the legacy ISSState wrapper)
     mems: Optional[np.ndarray] = None    # (n, M)
@@ -110,8 +177,51 @@ class FleetResult:
 @functools.partial(jax.jit, donate_argnums=(1,),
                    static_argnames=("seg_steps", "max_steps"))
 def _run_seg(code, state, *, seg_steps: int, max_steps: int):
+    """Legacy stepper: vmap of the scalar lax.switch interpreter."""
     return jax.vmap(
         lambda s: iss.run_segment(code, s, seg_steps, max_steps))(state)
+
+
+@functools.partial(jax.jit, donate_argnums=(1,),
+                   static_argnames=("seg_steps", "max_steps", "subset"))
+def _run_seg_lanes(code, state, *, seg_steps: int, max_steps: int,
+                   subset):
+    """Lane-parallel branchless stepper (DESIGN.md §9.5)."""
+    return iss.run_segment_lanes(code, state, seg_steps, max_steps, subset)
+
+
+def _lane_state_specs(mesh: Mesh, mem_words: int):
+    """Shard specs for a chunk ISSState, derived from the real state
+    constructor (via eval_shape) so field set and ranks can never drift
+    from what run_stream actually passes in."""
+    abstract = jax.eval_shape(
+        lambda: _fresh_chunk(np.zeros((1, mem_words), np.int32),
+                             np.ones(1, bool)))
+    return dsharding.lane_specs(mesh, abstract)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_seg_runner(mesh: Mesh, seg_steps: int, max_steps: int,
+                        subset, stepper: str, specs):
+    """shard_map segment runner: lane pool split over every mesh axis.
+
+    Each device owns chunk/n_devices lanes and runs its own while_loop —
+    a device whose lanes all halt early exits its segment immediately
+    instead of being dragged along by a global (all-reduced) loop
+    condition, which is what the GSPMD lowering of the same code does
+    (DESIGN.md §9.6). No collectives are needed: the engine is pure data
+    parallelism over items.
+    """
+    def seg(code, state):
+        if stepper == "switch":
+            return jax.vmap(lambda s: iss.run_segment(
+                code, s, seg_steps, max_steps))(state)
+        return iss.run_segment_lanes(code, state, seg_steps, max_steps,
+                                     subset)
+
+    fn = shard_map(seg, mesh=mesh, in_specs=(P(), specs),
+                   out_specs=specs, check_rep=False)
+    return jax.jit(fn, donate_argnums=(1,))
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -143,42 +253,65 @@ def _fresh_chunk(mems: np.ndarray, active: np.ndarray) -> iss.ISSState:
 
 
 def _shard_state(state: iss.ISSState, mesh: Mesh) -> iss.ISSState:
-    """Lay the lane axis out over every mesh axis (pure data parallelism)."""
-    axes = tuple(mesh.axis_names)
-    lane = NamedSharding(mesh, P(axes))
-    lane2d = NamedSharding(mesh, P(axes, None))
-    return iss.ISSState(
-        regs=jax.device_put(state.regs, lane2d),
-        pc=jax.device_put(state.pc, lane),
-        mem=jax.device_put(state.mem, lane2d),
-        halted=jax.device_put(state.halted, lane),
-        n_instr=jax.device_put(state.n_instr, lane),
-        n_two_stage=jax.device_put(state.n_two_stage, lane),
-        mix=jax.device_put(state.mix, lane2d),
-    )
+    """Lay the lane axis out over every mesh axis (pure data parallelism),
+    per the fleet-lane rule in distributed/sharding.py."""
+    return jax.tree.map(jax.device_put, state,
+                        dsharding.lane_shardings(mesh, state))
 
 
 def run_stream(code: np.ndarray, source: Source, *, n_items: int,
                mem_words: int, max_steps: int, chunk: int = 256,
                seg_steps: int = 4096, out_addr: Optional[int] = None,
                keep_state: bool = False,
-               mesh: Optional[Mesh] = None) -> FleetResult:
+               mesh: Optional[Mesh] = None,
+               stepper: str = "branchless",
+               subset: Optional[frozenset] = None,
+               prefetch: bool = True) -> FleetResult:
     """Stream `n_items` memory images from `source` through `chunk` lanes.
 
     Returns per-item scalars in item order. With `keep_state=True` the
     full final state (memories, registers, pc) is also collected — O(fleet)
     host memory, so only use it for parity checks or small fleets.
+
+    `stepper` picks the segment interpreter: "branchless" (lane-parallel
+    masked-select stepper, DESIGN.md §9.5) or "switch" (the legacy vmapped
+    lax.switch interpreter). `subset` optionally pins the static opcode
+    subset for the branchless stepper; by default it is derived from the
+    program text (`iss.opcode_subset`), letting XLA drop opcode classes
+    the workload can never retire. With a `mesh`, lanes are sharded over
+    every mesh axis and each device steps its shard independently via
+    shard_map (DESIGN.md §9.6). `prefetch` overlaps host-side source
+    generation with device segments (double buffering).
     """
     if seg_steps < 1:
         raise ValueError("seg_steps must be >= 1")
     if chunk < 1:
         raise ValueError("chunk must be >= 1")
+    if stepper not in STEPPERS:
+        raise ValueError(f"stepper must be one of {STEPPERS}")
     chunk = min(chunk, max(n_items, 1))
+    n_dev = 1
     if mesh is not None:
         n_dev = int(np.prod(list(mesh.shape.values())))
         chunk = -(-chunk // n_dev) * n_dev   # round up to mesh divisibility
 
-    code = jnp.asarray(np.asarray(code).view(np.int32))
+    code_np = np.asarray(code)
+    if stepper == "branchless" and subset is None:
+        subset = iss.opcode_subset(code_np)
+    code = jnp.asarray(code_np.view(np.int32))
+
+    if mesh is not None:
+        seg_fn = _sharded_seg_runner(mesh, seg_steps, max_steps, subset,
+                                     stepper,
+                                     _lane_state_specs(mesh, mem_words))
+    elif stepper == "branchless":
+        def seg_fn(c, st):
+            return _run_seg_lanes(c, st, seg_steps=seg_steps,
+                                  max_steps=max_steps, subset=subset)
+    else:
+        def seg_fn(c, st):
+            return _run_seg(c, st, seg_steps=seg_steps,
+                            max_steps=max_steps)
 
     # per-item result collectors (scalars: O(fleet))
     r_instr = np.zeros(n_items, np.int64)
@@ -194,72 +327,78 @@ def run_stream(code: np.ndarray, source: Source, *, n_items: int,
 
     t0 = time.perf_counter()
 
-    # initial fill
-    cursor = min(chunk, n_items)
-    first = np.zeros((chunk, mem_words), np.int32)
-    if cursor:
-        first[:cursor] = source(0, cursor)
-    ids = np.full(chunk, -1, np.int64)
-    ids[:cursor] = np.arange(cursor)
-    state = _fresh_chunk(first, ids >= 0)
-    if mesh is not None:
-        state = _shard_state(state, mesh)
+    # close the prefetch worker even when a segment raises (XLA OOM, bad
+    # source shapes): a leaked non-daemon thread outlives the call
+    pref = _Prefetcher(source, n_items, block=chunk, background=prefetch)
+    try:
+        # initial fill
+        cursor = min(chunk, n_items)
+        first = np.zeros((chunk, mem_words), np.int32)
+        if cursor:
+            first[:cursor] = pref.take(cursor)
+        ids = np.full(chunk, -1, np.int64)
+        ids[:cursor] = np.arange(cursor)
+        state = _fresh_chunk(first, ids >= 0)
+        if mesh is not None:
+            state = _shard_state(state, mesh)
 
-    prev_instr = np.zeros(chunk, np.int64)
-    lane_steps = 0
-    n_segments = 0
+        prev_instr = np.zeros(chunk, np.int64)
+        lane_steps = 0
+        n_segments = 0
 
-    while (ids >= 0).any():
-        state = _run_seg(code, state, seg_steps=seg_steps,
-                         max_steps=max_steps)
-        n_segments += 1
+        while (ids >= 0).any():
+            state = seg_fn(code, state)
+            n_segments += 1
 
-        halted = np.asarray(state.halted)
-        n_instr = np.asarray(state.n_instr, np.int64)
-        # SIMD cost: all lanes are occupied for the longest path this
-        # segment took on any lane
-        lane_steps += chunk * int((n_instr - prev_instr).max(initial=0))
-        prev_instr = n_instr
+            halted = np.asarray(state.halted)
+            n_instr = np.asarray(state.n_instr, np.int64)
+            # SIMD cost: all lanes are occupied for the longest path this
+            # segment took on any lane
+            lane_steps += chunk * int((n_instr - prev_instr).max(initial=0))
+            prev_instr = n_instr
 
-        active = ids >= 0
-        done = active & (halted | (n_instr >= max_steps))
-        idx = np.nonzero(done)[0]
-        if idx.size:
-            items = ids[idx]
-            r_instr[items] = n_instr[idx]
-            r_two[items] = np.asarray(state.n_two_stage, np.int64)[idx]
-            r_halt[items] = halted[idx]
-            mix_rows = np.asarray(state.mix[jnp.asarray(idx)], np.int64)
-            r_mix += mix_rows.sum(0)
-            if out_addr is not None:
-                r_out[items] = np.asarray(state.mem[:, out_addr])[idx]
-            if keep_state:
-                jidx = jnp.asarray(idx)
-                r_mem[items] = np.asarray(state.mem[jidx])
-                r_regs[items] = np.asarray(state.regs[jidx])
-                r_pc[items] = np.asarray(state.pc)[idx]
-                r_mix_items[items] = mix_rows
+            active = ids >= 0
+            done = active & (halted | (n_instr >= max_steps))
+            idx = np.nonzero(done)[0]
+            if idx.size:
+                items = ids[idx]
+                r_instr[items] = n_instr[idx]
+                r_two[items] = np.asarray(state.n_two_stage, np.int64)[idx]
+                r_halt[items] = halted[idx]
+                mix_rows = np.asarray(state.mix[jnp.asarray(idx)], np.int64)
+                r_mix += mix_rows.sum(0)
+                if out_addr is not None:
+                    r_out[items] = np.asarray(state.mem[:, out_addr])[idx]
+                if keep_state:
+                    jidx = jnp.asarray(idx)
+                    r_mem[items] = np.asarray(state.mem[jidx])
+                    r_regs[items] = np.asarray(state.regs[jidx])
+                    r_pc[items] = np.asarray(state.pc)[idx]
+                    r_mix_items[items] = mix_rows
 
-            # compact: retire done lanes, refill from the stream
-            n_new = min(idx.size, n_items - cursor)
-            ids[idx] = -1
-            if n_new:
-                lanes = idx[:n_new]
-                new_mems = np.zeros((chunk, mem_words), np.int32)
-                new_mems[lanes] = source(cursor, n_new)
-                replace = np.zeros(chunk, bool)
-                replace[lanes] = True
-                ids[lanes] = np.arange(cursor, cursor + n_new)
-                cursor += n_new
-                prev_instr[lanes] = 0
-                state = _refill(state, jnp.asarray(replace),
-                                jnp.asarray(new_mems))
+                # compact: retire done lanes, refill from the stream
+                n_new = min(idx.size, n_items - cursor)
+                ids[idx] = -1
+                if n_new:
+                    lanes = idx[:n_new]
+                    new_mems = np.zeros((chunk, mem_words), np.int32)
+                    new_mems[lanes] = pref.take(n_new)
+                    replace = np.zeros(chunk, bool)
+                    replace[lanes] = True
+                    ids[lanes] = np.arange(cursor, cursor + n_new)
+                    cursor += n_new
+                    prev_instr[lanes] = 0
+                    state = _refill(state, jnp.asarray(replace),
+                                    jnp.asarray(new_mems))
+    finally:
+        pref.close()
 
     wall_s = time.perf_counter() - t0
     return FleetResult(
         n_items=n_items, n_instr=r_instr, n_two_stage=r_two, halted=r_halt,
         out=r_out, mix=r_mix, lane_steps=lane_steps, n_segments=n_segments,
         chunk=chunk, seg_steps=seg_steps, wall_s=wall_s,
+        stepper=stepper, n_devices=n_dev,
         mems=r_mem if keep_state else None,
         regs=r_regs if keep_state else None,
         pc=r_pc if keep_state else None,
@@ -271,11 +410,17 @@ def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,
                         chunk: int = 256, seg_steps: int = 4096,
                         max_steps: Optional[int] = None,
                         keep_state: bool = False,
-                        mesh: Optional[Mesh] = None) -> FleetResult:
-    """Convenience wrapper: stream a FlexiBench workload end to end."""
+                        mesh: Optional[Mesh] = None,
+                        stepper: str = "branchless",
+                        prefetch: bool = True) -> FleetResult:
+    """Convenience wrapper: stream a FlexiBench workload end to end.
+
+    The branchless stepper's opcode subset is derived from the workload's
+    program text, so XLA compiles only the ISA subset this workload
+    retires (the RISP specialization knob applied to the simulator)."""
     return run_stream(
         w.program.code, workload_source(w, seed), n_items=n_items,
         mem_words=w.total_mem_words,
         max_steps=max_steps or w.max_steps, chunk=chunk,
         seg_steps=seg_steps, out_addr=w.out_addr, keep_state=keep_state,
-        mesh=mesh)
+        mesh=mesh, stepper=stepper, prefetch=prefetch)

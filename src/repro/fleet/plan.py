@@ -44,12 +44,19 @@ class FleetGroup:
 
 @dataclasses.dataclass(frozen=True)
 class FleetPlan:
-    """A full heterogeneous fleet plus engine tuning knobs."""
+    """A full heterogeneous fleet plus engine tuning knobs.
+
+    `stepper` selects the segment interpreter per DESIGN.md §9.5
+    ("branchless" lane-parallel stepper with per-workload opcode-subset
+    specialization, or the legacy "switch" interpreter for A/B runs);
+    `prefetch` enables double-buffered async host refill (§9.6)."""
     groups: Sequence[FleetGroup]
     chunk: int = 256
     seg_steps: int = 4096
     intensity: float = 0.367              # kg CO2e/kWh (US grid)
     clock_hz: float = 10_000.0
+    stepper: str = "branchless"
+    prefetch: bool = True
 
     @property
     def n_items(self) -> int:
@@ -65,7 +72,8 @@ def run_plan(plan: FleetPlan, mesh: Optional[Mesh] = None,
         res = engine.run_workload_stream(
             w, g.n_items, seed=g.seed, chunk=plan.chunk,
             seg_steps=plan.seg_steps, max_steps=g.max_steps,
-            keep_state=keep_state, mesh=mesh)
+            keep_state=keep_state, mesh=mesh, stepper=plan.stepper,
+            prefetch=plan.prefetch)
         group_reports.append(build_group_report(
             group=g, workload=w, core=core, result=res,
             lifetime_s=lifetime_s, execs_per_day=execs_per_day,

@@ -130,11 +130,14 @@ class FleetReport:
                 f"{g.recommended_core:>5}")
         lines.append("-" * len(head))
         eff = 100.0 * self.busy_steps / max(self.lane_steps, 1)
+        steppers = sorted({g.result.stepper for g in self.groups})
+        n_dev = max((g.result.n_devices for g in self.groups), default=1)
         lines.append(
             f"fleet: {self.n_items} items, {self.total_kg:.4g} kg CO2e; "
             f"engine: {self.lane_steps:,} lane-steps "
             f"({eff:.1f}% busy) vs {self.monolithic_lane_steps:,} "
             f"monolithic ({self.cycles_saved_ratio:.2f}x saved); "
+            f"stepper {'/'.join(steppers)} x{n_dev} dev; "
             f"sim footprint {self.simulation_kg() * 1e3:.3g} g CO2e "
             f"({self.wall_s:.2f}s wall)")
         return "\n".join(lines)

@@ -1,12 +1,21 @@
 """JAX RV32E instruction-set simulator — the paper's RTL characterization
-loop re-thought for TPU: one lax.while_loop interpreter, vmap-able over
-per-item memories (a *fleet* of devices with different sensor inputs), and
-shard_map-able over the production mesh (flexibits/fleet.py).
+loop re-thought for TPU: vmap-able over per-item memories (a *fleet* of
+devices with different sensor inputs) and shard_map-able over the
+production mesh (fleet/engine.py).
 
-State is a dict of jnp arrays; the step decodes with bit ops and dispatches
-on opcode via lax.switch. Cycle accounting implements the paper's bit-serial
-timing model (cycles.py): per retired instruction, one-stage or two-stage
-cost for the configured datapath width.
+Two interpreters share the decode/commit semantics bit-exactly:
+
+- `step` — scalar reference: decodes with bit ops, dispatches on opcode
+  via lax.switch; `run`/`run_segment` wrap it in while_loops.
+- `step_branchless`/`step_lanes` — the lane-parallel hot path
+  (DESIGN.md §9.5): no switch, masked jnp.where/jnp.select commits, one
+  shared memory port, one-hot register/mix updates, and a static
+  opcode-subset mask for per-workload ISA specialization;
+  `run_segment_lanes` steps a whole lane pool in one while_loop.
+
+Cycle accounting implements the paper's bit-serial timing model
+(cycles.py): per retired instruction, one-stage or two-stage cost for the
+configured datapath width.
 """
 from __future__ import annotations
 
@@ -15,6 +24,7 @@ from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.flexibits import isa
@@ -207,6 +217,263 @@ def step(code: jax.Array, s: ISSState) -> ISSState:
         n_two_stage=s.n_two_stage + two_stage.astype(I32),
         mix=s.mix.at[mix_idx].add(1),
     )
+
+
+# ---------------------------------------------------------------------------
+# Lane-parallel branchless stepper (DESIGN.md §9.5)
+#
+# Under vmap, `step`'s lax.switch executes every opcode branch for every
+# lane anyway (batched switch lowers to select-of-all-branches) — but each
+# branch re-derives its own addresses and issues its own gather/scatter.
+# The branchless stepper makes the all-branches cost explicit and amortized:
+# one decode, ONE memory gather shared by loads and stores, ONE scatter,
+# and masked jnp.where/jnp.select commits. A static opcode-subset mask
+# (per-workload ISA subset, à la RISC-V instruction-subset processors)
+# drops whole opcode classes from the graph at trace time, so XLA never
+# even compiles classes a workload cannot retire.
+# ---------------------------------------------------------------------------
+
+FULL_SUBSET = frozenset(_OPCODES)
+
+
+def opcode_subset(code) -> frozenset:
+    """Static host-side decode: the opcode classes present in a program.
+
+    Only opcodes that appear in the program text can ever retire (the pc
+    always fetches from `code`), so this is a sound per-workload ISA
+    subset for `step_branchless`/`step_lanes`.
+    """
+    words = np.asarray(code)
+    words = words.view(np.uint32) if words.dtype.itemsize == 4 \
+        else words.astype(np.uint32)
+    present = {int(o) for o in np.unique(words & np.uint32(0x7F))}
+    return frozenset(o for o in _OPCODES if o in present)
+
+
+def step_branchless(code: jax.Array, s: ISSState,
+                    subset: frozenset = None,
+                    active: jax.Array = None) -> ISSState:
+    """One branchless step: bit-exact with `step`, no lax.switch/cond.
+
+    `subset` (static) keeps only those opcode classes in the traced graph;
+    it must be a superset of `opcode_subset(code)` for bit-exactness.
+    `active=False` freezes the state entirely (used by the segment loop to
+    park halted lanes without a pytree-wide post-select).
+
+    Bit-exactness is defined over programs whose fetched words decode to
+    RV32E opcodes (everything asm.py / FlexiBench emit). For a word whose
+    opcode is outside the ISA both interpreters are junk — `step`'s
+    clamped searchsorted dispatches to an arbitrary neighboring class,
+    this one retires a no-op — and neither behavior is contractual.
+    """
+    sub = FULL_SUBSET if subset is None else frozenset(subset)
+
+    def on(*ops):
+        return any(o in sub for o in ops)
+
+    instr = code[(_u(s.pc) >> 2).astype(I32)].astype(U32)
+    ii = instr.astype(I32)
+    op = (ii & 0x7F)
+    rd = (ii >> 7) & 0xF
+    f3 = (ii >> 12) & 0x7
+    rs1 = (ii >> 15) & 0xF
+    rs2 = (ii >> 20) & 0xF
+    sub_bit = (ii >> 30) & 1
+
+    imm_i = _sx(_u(instr) >> 20, 12)
+    imm_s = _sx(((_u(instr) >> 25) << 5).astype(I32)
+                | ((ii >> 7) & 0x1F), 12)
+    imm_b = _sx(((ii >> 31) & 1) << 12 | ((ii >> 7) & 1) << 11
+                | ((ii >> 25) & 0x3F) << 5 | ((ii >> 8) & 0xF) << 1, 13)
+    imm_u = ii & jnp.asarray(-4096, I32)
+    imm_j = _sx(((ii >> 31) & 1) << 20 | ((ii >> 12) & 0xFF) << 12
+                | ((ii >> 20) & 1) << 11 | ((ii >> 21) & 0x3FF) << 1, 21)
+
+    a = s.regs[rs1]
+    b = s.regs[rs2]
+    au = _u(a)
+    bu = _u(b)
+    pc4 = s.pc + 4
+    live = jnp.ones((), bool) if active is None else active
+    false = jnp.zeros((), bool)
+    zero = jnp.zeros((), I32)
+
+    is_load = (op == isa.OP_LOAD) if on(isa.OP_LOAD) else false
+    is_store = ((op == isa.OP_STORE) & live) if on(isa.OP_STORE) else false
+
+    # ---- shared memory port: one gather serves loads AND stores
+    mem_val = zero
+    mem = s.mem
+    if on(isa.OP_LOAD, isa.OP_STORE):
+        addr = (a + jnp.where(is_store, imm_s, imm_i)).astype(I32)
+        widx = jnp.where(is_load | is_store, _u(addr).astype(I32) >> 2, 0)
+        word = s.mem[widx]
+        sh8 = ((addr & 3) * 8).astype(U32)
+        sh16 = ((addr & 2) * 8).astype(U32)
+        if on(isa.OP_LOAD):
+            byte = (_u(word) >> sh8).astype(I32) & 0xFF
+            half = (_u(word) >> sh16).astype(I32) & 0xFFFF
+            lf3 = jnp.clip(f3, 0, 5)       # matches step's clipped switch
+            mem_val = jnp.select(
+                [lf3 == 0, lf3 == 1, lf3 == 4, lf3 == 5],
+                [_sx(byte, 8), _sx(half, 16), byte, half], word)
+        if on(isa.OP_STORE):
+            bmask = (jnp.asarray(0xFF, U32) << sh8).astype(I32)
+            hmask = (jnp.asarray(0xFFFF, U32) << sh16).astype(I32)
+            sf3 = jnp.clip(f3, 0, 2)
+            neww = jnp.select(
+                [sf3 == 0, sf3 == 1],
+                [(word & ~bmask) | (((b & 0xFF).astype(U32) << sh8
+                                     ).astype(I32) & bmask),
+                 (word & ~hmask) | (((b & 0xFFFF).astype(U32) << sh16
+                                     ).astype(I32) & hmask)], b)
+            # non-stores write word back to itself at index 0: a no-op,
+            # so the scatter needs no predication beyond the value select
+            mem = s.mem.at[widx].set(jnp.where(is_store, neww, word))
+
+    # ---- shared ALU serves OP-IMM and OP-REG
+    alu_res = zero
+    if on(isa.OP_IMM, isa.OP_REG):
+        is_reg = (op == isa.OP_REG) if on(isa.OP_REG) else false
+        y = jnp.where(is_reg, b, imm_i)
+        is_sub = is_reg & (sub_bit == 1)
+        is_sra = (f3 == 5) & (sub_bit == 1)
+        sh = (y & 31).astype(U32)
+        alu_res = jnp.select(
+            [f3 == 0, f3 == 1, f3 == 2, f3 == 3, f3 == 4, f3 == 5,
+             f3 == 6],
+            [jnp.where(is_sub, a - y, a + y),
+             (au << sh).astype(I32),
+             (a < y).astype(I32),
+             (au < _u(y)).astype(I32),
+             a ^ y,
+             jnp.where(is_sra, a >> (y & 31), (au >> sh).astype(I32)),
+             a | y], a & y)
+
+    # ---- next pc
+    next_pc = pc4
+    if on(isa.OP_BRANCH):
+        taken = jnp.select(
+            [f3 == 0, f3 == 1, f3 == 2, f3 == 3, f3 == 4, f3 == 5,
+             f3 == 6],
+            [a == b, a != b, false, false, a < b, a >= b, au < bu],
+            au >= bu)
+        next_pc = jnp.where(op == isa.OP_BRANCH,
+                            jnp.where(taken, s.pc + imm_b, pc4), next_pc)
+    if on(isa.OP_JAL):
+        next_pc = jnp.where(op == isa.OP_JAL, s.pc + imm_j, next_pc)
+    if on(isa.OP_JALR):
+        next_pc = jnp.where(op == isa.OP_JALR, (a + imm_i) & ~1, next_pc)
+
+    # ---- rd write value
+    wr = zero
+    if on(isa.OP_LUI):
+        wr = jnp.where(op == isa.OP_LUI, imm_u, wr)
+    if on(isa.OP_AUIPC):
+        wr = jnp.where(op == isa.OP_AUIPC, s.pc + imm_u, wr)
+    if on(isa.OP_JAL, isa.OP_JALR):
+        wr = jnp.where((op == isa.OP_JAL) | (op == isa.OP_JALR), pc4, wr)
+    if on(isa.OP_LOAD):
+        wr = jnp.where(is_load, mem_val, wr)
+    if on(isa.OP_IMM, isa.OP_REG):
+        wr = jnp.where((op == isa.OP_IMM) | (op == isa.OP_REG),
+                       alu_res, wr)
+
+    # one-hot commit instead of a scatter: an elementwise select over the
+    # 16-entry register file fuses into the surrounding arithmetic, where
+    # a 1-element scatter is a separate kernel per step on CPU/TPU
+    writes_rd = (op != isa.OP_BRANCH) & (op != isa.OP_STORE) \
+        & (op != isa.OP_SYSTEM) & (rd != 0) & live
+    regs = jnp.where((jnp.arange(16, dtype=I32) == rd) & writes_rd,
+                     wr, s.regs)
+
+    halt = (op == isa.OP_SYSTEM) if on(isa.OP_SYSTEM) else false
+
+    # ---- classification (identical arithmetic to `step`)
+    is_shift_imm = (op == isa.OP_IMM) & ((f3 == 1) | (f3 == 5))
+    is_shift_reg = (op == isa.OP_REG) & ((f3 == 1) | (f3 == 5))
+    is_slt = ((op == isa.OP_IMM) | (op == isa.OP_REG)) \
+        & ((f3 == 2) | (f3 == 3))
+    two_stage = ((op == isa.OP_LOAD) | (op == isa.OP_STORE)
+                 | (op == isa.OP_BRANCH) | (op == isa.OP_JAL)
+                 | (op == isa.OP_JALR) | is_shift_imm | is_shift_reg
+                 | is_slt)
+    mix_idx = jnp.select(
+        [op == isa.OP_LOAD, op == isa.OP_STORE, op == isa.OP_BRANCH,
+         (op == isa.OP_JAL) | (op == isa.OP_JALR),
+         is_shift_imm | is_shift_reg,
+         (op == isa.OP_IMM) | (op == isa.OP_LUI) | (op == isa.OP_AUIPC),
+         op == isa.OP_REG],
+        [_MIX_IDX["loads"], _MIX_IDX["stores"], _MIX_IDX["branches"],
+         _MIX_IDX["jumps"], _MIX_IDX["shifts"], _MIX_IDX["I-type"],
+         _MIX_IDX["R-type"]],
+        _MIX_IDX["system"])
+
+    one = live.astype(I32)
+    mix_onehot = (jnp.arange(len(MIX_CLASSES), dtype=I32)
+                  == mix_idx).astype(I32) * one
+    return ISSState(
+        regs=regs,
+        pc=jnp.where(live, next_pc.astype(I32), s.pc),
+        mem=mem,
+        halted=s.halted | (halt & live),
+        n_instr=s.n_instr + one,
+        n_two_stage=s.n_two_stage + (two_stage & live).astype(I32),
+        mix=s.mix + mix_onehot,
+    )
+
+
+def step_lanes(code: jax.Array, states: ISSState,
+               subset: frozenset = None,
+               active: jax.Array = None) -> ISSState:
+    """Branchless step over a batch of lanes (leading lane axis).
+
+    Decodes once per lane with pure bit ops; every opcode class commits
+    via masked where/select, so vmap pays one shared gather + scatter
+    instead of per-branch memory ports. Bit-exact with vmap(step).
+    """
+    if active is None:
+        return jax.vmap(
+            lambda s: step_branchless(code, s, subset))(states)
+    return jax.vmap(
+        lambda a, s: step_branchless(code, s, subset, active=a)
+    )(active, states)
+
+
+def run_segment_lanes(code: jax.Array, states: ISSState, seg_steps: int,
+                      max_steps: int, subset: frozenset = None,
+                      unroll: int = 1) -> ISSState:
+    """Lane-parallel segment: up to `seg_steps` branchless steps per lane.
+
+    One while_loop over the whole lane pool (not vmap of scalar loops):
+    each iteration advances every still-active lane; lanes that halt or
+    exhaust `max_steps` are frozen in place by the `active` mask. The body
+    can unroll `unroll` steps per loop trip (substeps past `seg_steps`
+    are masked out, so segment boundaries stay exact); the default is 1 —
+    on CPU the one-hot-commit step body fuses into few kernels and
+    unrolling only bloats codegen, but accelerators with costlier loop
+    turnaround can profit. Execution retires the same instruction
+    sequence as vmapped `run_segment`, so segmented execution stays
+    bit-exact with `iss.run`.
+    """
+    unroll = max(1, min(unroll, seg_steps))
+
+    def active_of(st: ISSState) -> jax.Array:
+        return (~st.halted) & (st.n_instr < max_steps)
+
+    def cond(c):
+        k, st = c
+        return (k < seg_steps) & active_of(st).any()
+
+    def body(c):
+        k, st = c
+        for j in range(unroll):
+            act = active_of(st) & (k + j < seg_steps)
+            st = step_lanes(code, st, subset, active=act)
+        return k + unroll, st
+
+    _, out = lax.while_loop(cond, body, (jnp.zeros((), I32), states))
+    return out
 
 
 @functools.partial(jax.jit, static_argnums=(2,))

@@ -59,6 +59,39 @@ def _bytes_of(type_str: str) -> int:
                for dt, d in _array_shapes(type_str))
 
 
+def _split_operands(text: str) -> List[str]:
+    """Split an operand list on top-level commas only (shape dims like
+    `f32[64,128]` and tuple types nest commas inside []/{}/())."""
+    out: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in text:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    out.append("".join(cur))
+    return [o.strip() for o in out if o.strip()]
+
+
+def _operand_span(tail: str, start: int) -> str:
+    """Text between the opcode's '(' (at `start`) and its matching ')'."""
+    depth = 1
+    j = start
+    while j < len(tail) and depth:
+        if tail[j] in "([{":
+            depth += 1
+        elif tail[j] in ")]}":
+            depth -= 1
+        j += 1
+    return tail[start:j - 1] if depth == 0 else tail[start:]
+
+
 def _group_size(line: str) -> int:
     m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
     if m:
@@ -67,6 +100,15 @@ def _group_size(line: str) -> int:
     if m:
         return len(m.group(1).split(","))
     return 2
+
+
+def _collective_base(opcode: str) -> str:
+    """Strip async -start/-done SUFFIXES (str.rstrip strips a char set,
+    which would mangle e.g. 'all-gather-start' -> 'all-gathe')."""
+    for suf in ("-start", "-done"):
+        if opcode.endswith(suf):
+            return opcode[:-len(suf)]
+    return opcode
 
 
 _NO_BYTES_OPS = {"tuple", "get-tuple-element", "parameter", "constant",
@@ -146,22 +188,29 @@ def _parse(hlo: str):
         if arrs:
             shapes[cur][name] = arrs[0]
 
+        # Operand shapes: scheduled HLO writes operands inline-typed
+        # (`dot(f32[64,128]{1,0} %Arg_0.1, ...)`), so parse the type off
+        # the operand text itself and only fall back to the name table for
+        # bare `%name` references (pre-scheduling dumps).
+        operand_strs = _split_operands(_operand_span(tail, mop.end()))
+
+        def _operand_arrays(o: str) -> List[Tuple[str, List[int]]]:
+            found = _array_shapes(o)
+            if found:
+                return found
+            toks = o.split()
+            ent = shapes[cur].get(toks[-1].lstrip("%")) if toks else None
+            return [ent] if ent is not None else []
+
         # HBM-bytes proxy with op-specific rules. In-place/slicing ops move
         # only the slice, NOT the full buffer (XLA aliases the rest);
         # counting their full operands would overcount carried scan stashes
         # by ~n_layers x. Fused computations' internals never touch HBM
         # (bytes edges skip `calls=`, see below).
         def _operand_bytes_list():
-            mops2 = re.search(re.escape(opcode) + r"\(([^)]*)\)", rest)
-            if not mops2:
-                return []
-            out = []
-            for opnd in mops2.group(1).split(","):
-                ent = shapes[cur].get(opnd.strip().lstrip("%"))
-                if ent is not None:
-                    dt, dims = ent
-                    out.append(_numel(dims) * _DTYPE_BYTES[dt])
-            return out
+            return [sum(_numel(d) * _DTYPE_BYTES[dt]
+                        for dt, d in _operand_arrays(o))
+                    for o in operand_strs]
 
         def _operand_bytes(idx=None):
             lst = _operand_bytes_list()
@@ -191,10 +240,9 @@ def _parse(hlo: str):
             st.bytes += float(_bytes_of(type_str) + _operand_bytes())
 
         if opcode == "dot":
-            operands = re.search(r"dot\(([^)]*)\)", rest)
-            lhs = operands.group(1).split(",")[0].strip().lstrip("%")
-            ent = shapes[cur].get(lhs)
-            lhs_shape = ent[1] if ent else None
+            lhs_ents = _operand_arrays(operand_strs[0]) if operand_strs \
+                else []
+            lhs_shape = lhs_ents[0][1] if lhs_ents else None
             cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
             contract = 1
             if lhs_shape is not None and cdims:
@@ -207,10 +255,9 @@ def _parse(hlo: str):
             # conservative: treat like a dot over the kernel volume
             result_numel = sum(_numel(d) for _, d in arrs)
             st.flops += 2.0 * result_numel
-        elif opcode.rstrip("-start").rstrip("-done") in _COLLECTIVES or \
-                opcode in _COLLECTIVES:
-            base = opcode.replace("-start", "").replace("-done", "")
-            if base in _COLLECTIVES and not opcode.endswith("-done"):
+        elif _collective_base(opcode) in _COLLECTIVES:
+            base = _collective_base(opcode)
+            if not opcode.endswith("-done"):
                 nbytes = _bytes_of(type_str)
                 g = _group_size(rest)
                 if base == "all-reduce":

@@ -14,6 +14,7 @@ DECODE_MATCH_ARCHS = ["minitron-8b", "qwen2-1.5b", "gemma3-12b",
                       "zamba2-7b"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", DECODE_MATCH_ARCHS)
 def test_decode_matches_teacher_forcing(arch):
     """Greedy decode logits at position t == full-forward logits at t.
@@ -93,8 +94,8 @@ def test_expert_padding_masks_padded_experts():
 
 def test_sharding_rules_divisibility():
     """No parameter ever gets a spec whose dim doesn't divide the mesh."""
-    from repro.distributed.sharding import param_shardings
-    mesh = jax.sharding.AbstractMesh((1, 2), ("data", "model"))
+    from repro.distributed.sharding import abstract_mesh, param_shardings
+    mesh = abstract_mesh(("data", "model"), (1, 2))
     for arch in ARCH_IDS:
         cfg = get_smoke_config(arch)
         model = build_model(cfg)

@@ -10,6 +10,9 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# subprocess compiles of full dryrun cells — full tier only
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("args", [
     ("whisper-tiny", "train_4k", False),

@@ -34,6 +34,7 @@ def test_checkpoint_keep_n(tmp_path):
     assert sorted(ckpt.all_steps(str(tmp_path))) == [4, 5]
 
 
+@pytest.mark.slow
 def test_preemption_resume_exact(tmp_path):
     """Train 6 steps straight vs 3 steps -> 'preempt' -> resume 3 more;
     final losses must match exactly (deterministic data + donated state)."""

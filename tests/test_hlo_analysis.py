@@ -55,6 +55,82 @@ def test_bytes_scale_with_loop():
     assert r["bytes_per_device"] >= 10 * 2 * m * m * 4
 
 
+# Synthetic scheduled-HLO module with hand-computable totals: pins the
+# three analyzer quantities fixed in PR 2 (dot contracting-dim FLOPs from
+# inline-typed operands, while-body trip-count multiplication for both
+# FLOPs and bytes) to closed-form values, independent of XLA codegen.
+_SYNTH_HLO = """\
+HloModule pinned, is_scheduled=true
+
+%body.1 (arg.1: (s32[], f32[8,16], f32[16,4])) -> (s32[], f32[8,16], f32[16,4]) {
+  %arg.1 = (s32[], f32[8,16]{1,0}, f32[16,4]{1,0}) parameter(0)
+  %gte.0 = s32[] get-tuple-element((s32[], f32[8,16]{1,0}, f32[16,4]{1,0}) %arg.1), index=0
+  %gte.1 = f32[8,16]{1,0} get-tuple-element((s32[], f32[8,16]{1,0}, f32[16,4]{1,0}) %arg.1), index=1
+  %gte.2 = f32[16,4]{1,0} get-tuple-element((s32[], f32[8,16]{1,0}, f32[16,4]{1,0}) %arg.1), index=2
+  %dot.1 = f32[8,4]{1,0} dot(f32[8,16]{1,0} %gte.1, f32[16,4]{1,0} %gte.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %c.1 = s32[] constant(1)
+  %add.1 = s32[] add(s32[] %gte.0, s32[] %c.1)
+  ROOT %tuple.1 = (s32[], f32[8,16]{1,0}, f32[16,4]{1,0}) tuple(s32[] %add.1, f32[8,16]{1,0} %gte.1, f32[16,4]{1,0} %gte.2)
+}
+
+%cond.1 (arg.2: (s32[], f32[8,16], f32[16,4])) -> pred[] {
+  %arg.2 = (s32[], f32[8,16]{1,0}, f32[16,4]{1,0}) parameter(0)
+  %gte.3 = s32[] get-tuple-element((s32[], f32[8,16]{1,0}, f32[16,4]{1,0}) %arg.2), index=0
+  %c.2 = s32[] constant(5)
+  ROOT %lt.1 = pred[] compare(s32[] %gte.3, s32[] %c.2), direction=LT
+}
+
+ENTRY %main.1 (p0.1: f32[8,16], p1.1: f32[16,4]) -> f32[8,4] {
+  %p0.1 = f32[8,16]{1,0} parameter(0)
+  %p1.1 = f32[16,4]{1,0} parameter(1)
+  %c.3 = s32[] constant(0)
+  %tuple.2 = (s32[], f32[8,16]{1,0}, f32[16,4]{1,0}) tuple(s32[] %c.3, f32[8,16]{1,0} %p0.1, f32[16,4]{1,0} %p1.1)
+  %while.1 = (s32[], f32[8,16]{1,0}, f32[16,4]{1,0}) while((s32[], f32[8,16]{1,0}, f32[16,4]{1,0}) %tuple.2), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %dot.2 = f32[8,4]{1,0} dot(f32[8,16]{1,0} %p0.1, f32[16,4]{1,0} %p1.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_pinned_dot_flops_closed_form():
+    """dot FLOPs = 2*m*k*n from inline-typed operands, and while bodies
+    multiply by known_trip_count: 5 body dots + 1 entry dot."""
+    r = analyze_hlo(_SYNTH_HLO)
+    one_dot = 2 * 8 * 16 * 4
+    assert r["flops_per_device"] == (5 + 1) * one_dot
+    assert r["unknown_trip_counts"] == 0
+
+
+def test_pinned_loop_bytes_closed_form():
+    """Loop bytes scale by trip count. Per body iteration: dot.1
+    (result 8*4 + operands 8*16 + 16*4) + add.1 (3 scalars) floats;
+    entry: dot.2 the same + while.1 (result tuple + operand tuple)."""
+    r = analyze_hlo(_SYNTH_HLO)
+    dot_bytes = 4 * (8 * 4 + 8 * 16 + 16 * 4)
+    body_bytes = dot_bytes + 4 * 3
+    while_state = 4 * (1 + 8 * 16 + 16 * 4)
+    entry_bytes = dot_bytes + 2 * while_state    # while result + operand
+    assert r["bytes_per_device"] == 5 * body_bytes + entry_bytes
+
+
+def test_pinned_trip_count_from_compiled_scan():
+    """End-to-end pin on a real compiled scan: flops == trip * 2*m*m*m
+    exactly (the regression fixed in PR 2: operand name lookups missed
+    inline-typed operands, collapsing contracting dims to 1)."""
+    m, trip = 8, 13
+    w = jnp.eye(m, dtype=jnp.float32)
+
+    @jax.jit
+    def f(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None,
+                            length=trip)
+        return y
+
+    hlo = f.lower(jnp.zeros((m, m), jnp.float32)).compile().as_text()
+    r = analyze_hlo(hlo)
+    assert r["flops_per_device"] == trip * 2 * m * m * m
+    assert r["unknown_trip_counts"] == 0
+
+
 def test_roofline_terms_arithmetic():
     res = {"hlo": {"flops_per_device": PEAK_FLOPS,       # 1 s compute
                    "bytes_per_device": HBM_BW / 2,       # 0.5 s memory

@@ -39,6 +39,7 @@ def test_forward_loss(arch):
     assert float(loss) > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_train_step_no_nans(arch):
     cfg = get_smoke_config(arch)
