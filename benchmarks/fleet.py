@@ -1,15 +1,19 @@
 """Streaming fleet engine benchmarks (DESIGN.md §9).
 
-Three studies on a skewed halt-time distribution (the paper's regime:
+Four studies on a skewed halt-time distribution (the paper's regime:
 most items run short data-dependent paths, a tail runs long ones):
 
 - streaming vs monolithic: total simulated lane-steps; the monolithic
   vmap(while_loop) occupies every lane until the slowest item halts,
   the streaming engine compacts halted items out between segments, so
   it should retire >=2X fewer — bit-exact final memories.
-- stepper A/B (§9.5): wall-clock per retired instruction of the
-  lane-parallel branchless stepper vs the legacy vmapped lax.switch
-  interpreter on a >=64-lane chunk.
+- stepper A/B (§9.5/§9.7): wall-clock per retired instruction, three
+  ways — lane-parallel branchless stepper, fused-segment pallas kernel
+  (interpret fallback), legacy vmapped lax.switch — on a >=64-lane
+  chunk, bit-exact across all three.
+- fusion proof (§9.7): structural HLO op counts; the fused-segment
+  module's top level must hold >=10x fewer ops than the branchless
+  step body x seg_steps it replaces.
 - device scaling (§9.6): items/s of the shard_map'd engine as the host
   device count grows (subprocesses with forced CPU device counts).
 
@@ -100,14 +104,21 @@ def fleet_streaming_vs_monolithic(n_items: int = 1024, chunk: int = 128,
     return rows, derived
 
 
+AB_STEPPERS = ("switch", "branchless", "pallas")
+
+
 def fleet_stepper_ab(n_items: int = 512, chunk: int = 128,
                      seg_steps: int = 256, max_steps: int = 100_000):
-    """A/B the branchless lane stepper vs the legacy switch interpreter.
+    """Three-way stepper A/B: switch vs branchless vs fused-pallas.
 
     Same fleet, same chunk (>=64 lanes), same segmentation — only the
     segment interpreter changes. Metric: wall-clock ns per retired
     instruction (lower is better), best of `reps` timed runs so a noisy
-    shared CI runner can't flip the gate; outputs must agree bit-exactly.
+    shared CI runner can't flip the gate; outputs must agree bit-exactly
+    across all three. The wall-clock gate applies to branchless vs
+    switch only: the pallas stepper runs through the interpret=True CPU
+    fallback here (DESIGN.md §9.7), which measures the fused kernel's
+    semantics and module structure, not its accelerator wall-clock.
     """
     assert chunk >= 64, "A/B must run on a >=64-lane chunk"
     reps = 3
@@ -117,7 +128,7 @@ def fleet_stepper_ab(n_items: int = 512, chunk: int = 128,
               chunk=chunk, seg_steps=seg_steps, out_addr=1)
     stats = {}
     ref_out = None
-    for stepper in ("switch", "branchless"):
+    for stepper in AB_STEPPERS:
         run_stream(prog.code, array_source(mems), stepper=stepper,
                    **kw)                          # compile warm-up
         res = None
@@ -140,20 +151,88 @@ def fleet_stepper_ab(n_items: int = 512, chunk: int = 128,
     speedup = (stats["switch"]["ns_per_retired_instr"]
                / stats["branchless"]["ns_per_retired_instr"])
     rows = [
-        ("fleet/ab_ns_per_instr",
-         round(stats["branchless"]["ns_per_retired_instr"], 1),
-         round(stats["switch"]["ns_per_retired_instr"], 1)),
-        ("fleet/ab_items_per_s",
-         round(stats["branchless"]["items_per_s"], 1),
-         round(stats["switch"]["items_per_s"], 1)),
+        ("fleet/ab_ns_per_instr",) + tuple(
+            round(stats[s]["ns_per_retired_instr"], 1)
+            for s in AB_STEPPERS),
+        ("fleet/ab_items_per_s",) + tuple(
+            round(stats[s]["items_per_s"], 1) for s in AB_STEPPERS),
     ]
     derived = {
         "stepper_speedup": speedup,
-        "branchless": stats["branchless"],
-        "switch": stats["switch"],
+        "pallas_speedup": (stats["switch"]["ns_per_retired_instr"]
+                           / stats["pallas"]["ns_per_retired_instr"]),
+        **stats,
         "chunk": chunk,
         "bit_exact": True,
         "target": "branchless < switch ns/retired-instr on >=64 lanes",
+    }
+    return rows, derived
+
+
+def fleet_fusion_proof(chunk: int = 128, seg_steps: int = 512,
+                       max_steps: int = 100_000):
+    """HLO op-count proof of the fused-segment kernel (DESIGN.md §9.7).
+
+    Compiles the branchless and pallas segment runners at the same
+    (chunk, seg_steps) and counts ops structurally (`op_counts`). The
+    branchless segment is an XLA while_loop: its step body — the largest
+    while body in the module — is a graph of dozens of ops that XLA
+    re-dispatches once per architectural step, i.e. O(steps x ops) per
+    segment. The fused pallas segment runs the whole step loop inside
+    one kernel invocation, so the compiled module's top level collapses
+    to a handful of ops around a single call unit (on TPU hardware: one
+    custom call; under the interpret fallback the kernel body is
+    discharged back into the module, recorded here for transparency).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.fleet import engine
+    from repro.kernels.iss_stepper import iss_segment
+    from repro.launch.hlo_analysis import op_counts
+
+    prog = skew_program()
+    subset = iss.opcode_subset(prog.code)
+    code = jnp.asarray(prog.code.view(np.int32))
+    state = engine._fresh_chunk(
+        np.tile(prog.initial_memory(32), (chunk, 1)),
+        np.ones(chunk, bool))
+
+    def lower(fn):
+        return op_counts(jax.jit(fn).lower(code, state)
+                         .compile().as_text())
+
+    bl = lower(lambda c, s: iss.run_segment_lanes(
+        c, s, seg_steps, max_steps, subset))
+    pal = lower(lambda c, s: iss_segment(
+        c, s, seg_steps=seg_steps, max_steps=max_steps, subset=subset))
+
+    step_ops = bl["max_while_body_ops"]
+    dispatched = step_ops * seg_steps
+    top = pal["entry_ops"]
+    ratio = dispatched / max(top, 1)
+    rows = [
+        ("fleet/fusion_top_ops", top, f"{dispatched} (={step_ops}"
+                                      f"x{seg_steps})"),
+        ("fleet/fusion_ratio", round(ratio, 1), ">=10x"),
+    ]
+    derived = {
+        "seg_steps": seg_steps,
+        "chunk": chunk,
+        "branchless": {
+            "entry_ops": bl["entry_ops"],
+            "step_while_body_ops": step_ops,
+            "dispatched_ops_per_segment": dispatched,
+        },
+        "pallas": {
+            "entry_ops": top,
+            # interpret-fallback transparency: the discharged kernel's
+            # internal step loop still appears as a while body on CPU
+            "interpret_kernel_body_ops": pal["max_while_body_ops"],
+        },
+        "top_level_ratio": ratio,
+        "target": ">=10x fewer top-level ops than branchless step-body "
+                  "x seg_steps",
     }
     return rows, derived
 
@@ -243,11 +322,22 @@ def main():
                                    chunk=max(args.chunk, 64),
                                    seg_steps=args.seg_steps)
     bench["stepper_ab"] = ab
-    print(f"\n{'metric':<22} {'branchless':>14} {'switch':>14}")
-    for name, bl, sw in ab_rows:
-        print(f"{name:<22} {bl:>14} {sw:>14}")
-    print(f"branchless speedup: {ab['stepper_speedup']:.2f}x "
-          f"per retired instruction (bit-exact)")
+    print(f"\n{'metric':<22} " + " ".join(f"{s:>14}" for s in AB_STEPPERS))
+    for name, *vals in ab_rows:
+        print(f"{name:<22} " + " ".join(f"{v:>14}" for v in vals))
+    print(f"branchless speedup: {ab['stepper_speedup']:.2f}x, "
+          f"pallas(interpret) {ab['pallas_speedup']:.2f}x "
+          f"per retired instruction (bit-exact three-way)")
+
+    fp_rows, fp = fleet_fusion_proof(chunk=max(args.chunk, 64),
+                                     seg_steps=args.seg_steps)
+    bench["fusion_proof"] = fp
+    print(f"\n{'metric':<22} {'pallas':>16} {'branchless':>22}")
+    for name, p, b in fp_rows:
+        print(f"{name:<22} {p:>16} {b:>22}")
+    print(f"fused-segment module: {fp['pallas']['entry_ops']} top-level "
+          f"ops vs {fp['branchless']['dispatched_ops_per_segment']} "
+          f"step-dispatched ops ({fp['top_level_ratio']:.0f}x)")
 
     if not args.skip_scaling:
         sc_rows, sc = fleet_device_scaling(
@@ -269,6 +359,9 @@ def main():
     if ab["stepper_speedup"] <= 1.0:
         failures.append(f"stepper A/B target NOT met: "
                         f"{ab['stepper_speedup']:.2f}x <= 1X")
+    if fp["top_level_ratio"] < 10.0:
+        failures.append(f"fusion proof target NOT met: "
+                        f"{fp['top_level_ratio']:.1f}x < 10x")
     if derived["cycles_saved_ratio"] < 2.0 and args.items < 4 * args.chunk:
         print(f"note: fleet too small to exploit skew "
               f"(--items {args.items} < 4x --chunk {args.chunk}); "

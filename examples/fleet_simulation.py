@@ -14,7 +14,7 @@ import argparse
 
 import numpy as np
 
-from repro.fleet import FleetGroup, FleetPlan, run_plan
+from repro.fleet import STEPPERS, FleetGroup, FleetPlan, run_plan
 from repro.launch.mesh import make_host_mesh
 
 
@@ -24,6 +24,8 @@ def main():
                     help="items per group")
     ap.add_argument("--chunk", type=int, default=128)
     ap.add_argument("--seg-steps", type=int, default=1024)
+    ap.add_argument("--stepper", choices=STEPPERS, default="branchless",
+                    help="segment interpreter (DESIGN.md §9.5/§9.7)")
     args = ap.parse_args()
 
     # three sub-fleets: malodor classification on the 1-bit core (long
@@ -33,7 +35,7 @@ def main():
         FleetGroup(workload="MC", core="SERV", n_items=args.items, seed=0),
         FleetGroup(workload="WQ", core="QERV", n_items=args.items, seed=1),
         FleetGroup(workload="SI", core="HERV", n_items=args.items, seed=2),
-    ), chunk=args.chunk, seg_steps=args.seg_steps)
+    ), chunk=args.chunk, seg_steps=args.seg_steps, stepper=args.stepper)
 
     mesh = make_host_mesh()
     report = run_plan(plan, mesh=mesh)

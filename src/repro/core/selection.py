@@ -6,7 +6,7 @@ lifetimes) lives in flexibits/fleet.py.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -14,16 +14,27 @@ from repro.core.carbon import DeviceProfile, operational_kg, soc_embodied_kg
 from repro.flexibits.cycles import CORES, Core
 
 
-def total_grid(core: Core, prof: DeviceProfile, lifetimes_s: np.ndarray,
-               execs_per_day: np.ndarray, intensity: float = 0.367,
+def total_grid(core: Union[Core, Sequence[Core]], prof: DeviceProfile,
+               lifetimes_s: np.ndarray, execs_per_day: np.ndarray,
+               intensity: float = 0.367,
                clock_hz: float = 10_000.0) -> np.ndarray:
-    """(len(lifetimes), len(freqs)) total carbon for one core."""
-    emb = soc_embodied_kg(core, prof)
-    # operational scales linearly in lifetime x freq
-    base = operational_kg(core, prof, lifetime_s=86_400.0, execs_per_day=1.0,
-                          intensity=intensity, clock_hz=clock_hz)
-    life_days = lifetimes_s[:, None] / 86_400.0
-    return emb + base * life_days * execs_per_day[None, :]
+    """Total carbon over a (lifetime x frequency) grid.
+
+    One core -> (len(lifetimes), len(freqs)); a sequence of cores -> a
+    stacked (len(cores), len(lifetimes), len(freqs)) grid in one
+    broadcast (the embodied/operational anchors are per-core scalars;
+    operational carbon scales linearly in lifetime x freq).
+    """
+    cores = [core] if isinstance(core, Core) else list(core)
+    emb = np.array([soc_embodied_kg(c, prof) for c in cores])
+    base = np.array([
+        operational_kg(c, prof, lifetime_s=86_400.0, execs_per_day=1.0,
+                       intensity=intensity, clock_hz=clock_hz)
+        for c in cores])
+    life_days = np.asarray(lifetimes_s)[:, None] / 86_400.0
+    grid = emb[:, None, None] + base[:, None, None] \
+        * life_days[None, :, :] * np.asarray(execs_per_day)[None, None, :]
+    return grid[0] if isinstance(core, Core) else grid
 
 
 def selection_map(prof: DeviceProfile, lifetimes_s: np.ndarray,
@@ -31,8 +42,7 @@ def selection_map(prof: DeviceProfile, lifetimes_s: np.ndarray,
                   cores: Sequence[Core] = None) -> np.ndarray:
     """argmin-core index grid (paper Fig. 5). 0=SERV, 1=QERV, 2=HERV."""
     cores = list(cores or CORES.values())
-    totals = np.stack([total_grid(c, prof, lifetimes_s, execs_per_day,
-                                  intensity) for c in cores])
+    totals = total_grid(cores, prof, lifetimes_s, execs_per_day, intensity)
     return np.argmin(totals, axis=0)
 
 
@@ -40,12 +50,10 @@ def optimal_core(prof: DeviceProfile, *, lifetime_s: float,
                  execs_per_day: float, intensity: float = 0.367,
                  cores: Sequence[Core] = None) -> Tuple[Core, Dict]:
     cores = list(cores or CORES.values())
-    totals = [
-        float(total_grid(c, prof, np.array([lifetime_s]),
-                         np.array([execs_per_day]), intensity)[0, 0])
-        for c in cores]
+    totals = total_grid(cores, prof, np.array([lifetime_s]),
+                        np.array([execs_per_day]), intensity)[:, 0, 0]
     i = int(np.argmin(totals))
-    return cores[i], {c.name: t for c, t in zip(cores, totals)}
+    return cores[i], {c.name: float(t) for c, t in zip(cores, totals)}
 
 
 def crossover_lifetime_s(prof: DeviceProfile, core_a: Core, core_b: Core,

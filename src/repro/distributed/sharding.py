@@ -46,7 +46,10 @@ def lane_specs(mesh: Mesh, state):
     The ISS fleet engine is pure data parallelism — each lane is an
     independent item — so the lane pool flattens the whole mesh
     (data x model x pod alike) into one device axis. Used both for
-    device_put layouts and as shard_map in/out specs (fleet/engine.py).
+    device_put layouts and as shard_map in/out specs (fleet/engine.py)
+    — the same specs serve every segment stepper, including the fused
+    Pallas kernel, whose lane-tile grid runs inside each device's shard
+    (DESIGN.md §9.7).
     """
     axes = tuple(mesh.axis_names)
 

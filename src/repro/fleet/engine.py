@@ -35,8 +35,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.distributed import sharding as dsharding
 from repro.flexibench.base import Workload
 from repro.flexibits import iss
+from repro.kernels import iss_stepper
 
-STEPPERS = ("branchless", "switch")
+STEPPERS = ("branchless", "pallas", "switch")
 
 # source protocol: source(start, count) -> (count, mem_words) int32
 Source = Callable[[int, int], np.ndarray]
@@ -129,8 +130,17 @@ class _Prefetcher:
         return parts[0] if len(parts) == 1 else np.concatenate(parts)
 
     def close(self):
+        """Cancel/drain the in-flight fetch and join the worker.
+
+        `shutdown(wait=False)` would leave a running background fetch
+        alive past close — a leaked non-daemon thread still calling the
+        source after the engine returned (or raised). Cancel the pending
+        future if it has not started; if it is already running, drain it
+        (`wait=True`) so the source is never invoked after close().
+        """
         if self._ex is not None:
-            self._ex.shutdown(wait=False)
+            self._ex.shutdown(wait=True, cancel_futures=True)
+            self._fut = None
 
 
 @dataclasses.dataclass
@@ -174,22 +184,6 @@ class FleetResult:
         return self.n_items / self.wall_s if self.wall_s > 0 else float("inf")
 
 
-@functools.partial(jax.jit, donate_argnums=(1,),
-                   static_argnames=("seg_steps", "max_steps"))
-def _run_seg(code, state, *, seg_steps: int, max_steps: int):
-    """Legacy stepper: vmap of the scalar lax.switch interpreter."""
-    return jax.vmap(
-        lambda s: iss.run_segment(code, s, seg_steps, max_steps))(state)
-
-
-@functools.partial(jax.jit, donate_argnums=(1,),
-                   static_argnames=("seg_steps", "max_steps", "subset"))
-def _run_seg_lanes(code, state, *, seg_steps: int, max_steps: int,
-                   subset):
-    """Lane-parallel branchless stepper (DESIGN.md §9.5)."""
-    return iss.run_segment_lanes(code, state, seg_steps, max_steps, subset)
-
-
 def _lane_state_specs(mesh: Mesh, mem_words: int):
     """Shard specs for a chunk ISSState, derived from the real state
     constructor (via eval_shape) so field set and ranks can never drift
@@ -201,27 +195,58 @@ def _lane_state_specs(mesh: Mesh, mem_words: int):
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_seg_runner(mesh: Mesh, seg_steps: int, max_steps: int,
-                        subset, stepper: str, specs):
-    """shard_map segment runner: lane pool split over every mesh axis.
+def _segment_runner(stepper: str, chunk: int, seg_steps: int,
+                    max_steps: int, mem_words: int,
+                    mesh: Optional[Mesh], subset):
+    """Compiled segment runner, cached per engine configuration.
 
-    Each device owns chunk/n_devices lanes and runs its own while_loop —
-    a device whose lanes all halt early exits its segment immediately
-    instead of being dragged along by a global (all-reduced) loop
-    condition, which is what the GSPMD lowering of the same code does
-    (DESIGN.md §9.6). No collectives are needed: the engine is pure data
-    parallelism over items.
+    One factory for every (stepper, mesh) combination so heterogeneous
+    `FleetPlan` runs stop retracing per group: two groups that share
+    (stepper, chunk, seg_steps, max_steps, mem_words, mesh, opcode
+    subset) reuse the exact same jitted callable, and the jit cache
+    inside it never sees a new python closure per `run_stream` call.
+    `chunk` and `mem_words` only describe the lane-pool shape (the body
+    never reads them — jit specializes on the traced state shapes), but
+    keying on them keeps one compiled trace per callable.
+
+    Steppers: "branchless" — lane-parallel masked-select while_loop
+    (DESIGN.md §9.5); "pallas" — fused-segment kernel holding lane state
+    resident for the whole segment (§9.7); "switch" — the legacy vmapped
+    lax.switch interpreter. With a mesh the runner is shard_map'd: each
+    device owns chunk/n_devices lanes and runs its own segment, so a
+    device whose lanes all halt exits immediately instead of being
+    dragged along by a global (all-reduced) loop condition, which is
+    what the GSPMD lowering of the same code does (§9.6). No collectives
+    are needed: the engine is pure data parallelism over items.
     """
     def seg(code, state):
         if stepper == "switch":
             return jax.vmap(lambda s: iss.run_segment(
                 code, s, seg_steps, max_steps))(state)
+        if stepper == "pallas":
+            return iss_stepper.iss_segment(
+                code, state, seg_steps=seg_steps, max_steps=max_steps,
+                subset=subset)
         return iss.run_segment_lanes(code, state, seg_steps, max_steps,
                                      subset)
 
+    if mesh is None:
+        return jax.jit(seg, donate_argnums=(1,))
+    specs = _lane_state_specs(mesh, mem_words)
     fn = shard_map(seg, mesh=mesh, in_specs=(P(), specs),
                    out_specs=specs, check_rep=False)
     return jax.jit(fn, donate_argnums=(1,))
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps",))
+def _done_count(state: iss.ISSState, *, max_steps: int):
+    """Scalar count of done lanes (halted or step-budget exhausted).
+
+    The engine's per-segment host sync: comparing this single int32
+    against the host-known value tells whether any lane finished this
+    segment — only then is the O(chunk) halted/n_instr harvest pulled.
+    """
+    return (state.halted | (state.n_instr >= max_steps)).sum()
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -274,14 +299,21 @@ def run_stream(code: np.ndarray, source: Source, *, n_items: int,
     host memory, so only use it for parity checks or small fleets.
 
     `stepper` picks the segment interpreter: "branchless" (lane-parallel
-    masked-select stepper, DESIGN.md §9.5) or "switch" (the legacy vmapped
-    lax.switch interpreter). `subset` optionally pins the static opcode
-    subset for the branchless stepper; by default it is derived from the
-    program text (`iss.opcode_subset`), letting XLA drop opcode classes
-    the workload can never retire. With a `mesh`, lanes are sharded over
-    every mesh axis and each device steps its shard independently via
-    shard_map (DESIGN.md §9.6). `prefetch` overlaps host-side source
-    generation with device segments (double buffering).
+    masked-select stepper, DESIGN.md §9.5), "pallas" (fused-segment
+    kernel — the whole segment of a lane tile runs inside one kernel
+    invocation with state resident, §9.7), or "switch" (the legacy
+    vmapped lax.switch interpreter). `subset` optionally pins the static
+    opcode subset for the branchless/pallas steppers; by default it is
+    derived from the program text (`iss.opcode_subset`), letting the
+    compiler drop opcode classes the workload can never retire. With a
+    `mesh`, lanes are sharded over every mesh axis and each device steps
+    its shard independently via shard_map (DESIGN.md §9.6). `prefetch`
+    overlaps host-side source generation with device segments (double
+    buffering).
+
+    Host<->device sync per segment is one scalar: the done-lane count.
+    The O(chunk) halted/n_instr/mem harvest only happens on segments
+    where that count says some lane actually finished.
     """
     if seg_steps < 1:
         raise ValueError("seg_steps must be >= 1")
@@ -293,25 +325,23 @@ def run_stream(code: np.ndarray, source: Source, *, n_items: int,
     n_dev = 1
     if mesh is not None:
         n_dev = int(np.prod(list(mesh.shape.values())))
-        chunk = -(-chunk // n_dev) * n_dev   # round up to mesh divisibility
+    round_to = n_dev
+    if stepper == "pallas" and chunk > 128:
+        # keep the pallas lane-tile grid wide: a prime-ish chunk would
+        # tile at its largest small divisor (worst case 1 lane/kernel).
+        # Rounding the pool up to a 128-lane multiple (lcm'd with the
+        # mesh) costs only inert padding lanes, which never step.
+        round_to = int(128 * n_dev // np.gcd(128, n_dev))
+    if round_to > 1:
+        chunk = -(-chunk // round_to) * round_to
 
     code_np = np.asarray(code)
-    if stepper == "branchless" and subset is None:
+    if stepper in ("branchless", "pallas") and subset is None:
         subset = iss.opcode_subset(code_np)
     code = jnp.asarray(code_np.view(np.int32))
 
-    if mesh is not None:
-        seg_fn = _sharded_seg_runner(mesh, seg_steps, max_steps, subset,
-                                     stepper,
-                                     _lane_state_specs(mesh, mem_words))
-    elif stepper == "branchless":
-        def seg_fn(c, st):
-            return _run_seg_lanes(c, st, seg_steps=seg_steps,
-                                  max_steps=max_steps, subset=subset)
-    else:
-        def seg_fn(c, st):
-            return _run_seg(c, st, seg_steps=seg_steps,
-                            max_steps=max_steps)
+    seg_fn = _segment_runner(stepper, chunk, seg_steps, max_steps,
+                             mem_words, mesh, subset)
 
     # per-item result collectors (scalars: O(fleet))
     r_instr = np.zeros(n_items, np.int64)
@@ -345,10 +375,24 @@ def run_stream(code: np.ndarray, source: Source, *, n_items: int,
         prev_instr = np.zeros(chunk, np.int64)
         lane_steps = 0
         n_segments = 0
+        # host-known done-lane count: padding + retired-but-not-refilled
+        # lanes stay halted on device, so done == chunk - #active always
+        # holds right after a harvest
+        expected_done = chunk - int((ids >= 0).sum())
 
         while (ids >= 0).any():
             state = seg_fn(code, state)
             n_segments += 1
+
+            # single-scalar sync: if no lane finished this segment, every
+            # active lane ran exactly seg_steps (the segment loop only
+            # stops early when lanes halt or exhaust max_steps — both
+            # would raise the done count), so the O(chunk) harvest pulls
+            # are skipped entirely
+            if int(_done_count(state, max_steps=max_steps)) == expected_done:
+                lane_steps += chunk * seg_steps
+                prev_instr[ids >= 0] += seg_steps
+                continue
 
             halted = np.asarray(state.halted)
             n_instr = np.asarray(state.n_instr, np.int64)
@@ -390,6 +434,7 @@ def run_stream(code: np.ndarray, source: Source, *, n_items: int,
                     prev_instr[lanes] = 0
                     state = _refill(state, jnp.asarray(replace),
                                     jnp.asarray(new_mems))
+            expected_done = chunk - int((ids >= 0).sum())
     finally:
         pref.close()
 
@@ -415,9 +460,10 @@ def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,
                         prefetch: bool = True) -> FleetResult:
     """Convenience wrapper: stream a FlexiBench workload end to end.
 
-    The branchless stepper's opcode subset is derived from the workload's
-    program text, so XLA compiles only the ISA subset this workload
-    retires (the RISP specialization knob applied to the simulator)."""
+    The branchless/pallas steppers' opcode subset is derived from the
+    workload's program text, so the compiled segment contains only the
+    ISA subset this workload retires (the RISP specialization knob
+    applied to the simulator)."""
     return run_stream(
         w.program.code, workload_source(w, seed), n_items=n_items,
         mem_words=w.total_mem_words,

@@ -46,10 +46,11 @@ class FleetGroup:
 class FleetPlan:
     """A full heterogeneous fleet plus engine tuning knobs.
 
-    `stepper` selects the segment interpreter per DESIGN.md §9.5
-    ("branchless" lane-parallel stepper with per-workload opcode-subset
-    specialization, or the legacy "switch" interpreter for A/B runs);
-    `prefetch` enables double-buffered async host refill (§9.6)."""
+    `stepper` selects the segment interpreter: "branchless" (lane-
+    parallel stepper with per-workload opcode-subset specialization,
+    DESIGN.md §9.5), "pallas" (fused-segment kernel, §9.7), or the
+    legacy "switch" interpreter for A/B runs; `prefetch` enables
+    double-buffered async host refill (§9.6)."""
     groups: Sequence[FleetGroup]
     chunk: int = 256
     seg_steps: int = 4096

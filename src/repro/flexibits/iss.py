@@ -13,6 +13,12 @@ Two interpreters share the decode/commit semantics bit-exactly:
   opcode-subset mask for per-workload ISA specialization;
   `run_segment_lanes` steps a whole lane pool in one while_loop.
 
+A third interpreter, the fused-segment Pallas stepper
+(`kernels/iss_stepper.py`, DESIGN.md §9.7), ports the branchless commit
+scheme into a single kernel per lane tile; any change to the commit
+semantics here must be mirrored there (the instruction-soup tests in
+tests/test_stepper.py pin all three against each other).
+
 Cycle accounting implements the paper's bit-serial timing model
 (cycles.py): per retired instruction, one-stage or two-stage cost for the
 configured datapath width.
@@ -236,6 +242,212 @@ def step(code: jax.Array, s: ISSState) -> ISSState:
 FULL_SUBSET = frozenset(_OPCODES)
 
 
+# Shape-polymorphic pieces of the branchless step, shared verbatim by the
+# scalar `step_branchless` (vmapped by `step_lanes`) and the lane-tile
+# vectorized Pallas kernel (kernels/iss_stepper.py): the arithmetic is
+# elementwise, so one definition serves () and (lanes,) operands alike
+# and the two steppers cannot drift.
+
+class DecodedInstr(NamedTuple):
+    op: jax.Array
+    rd: jax.Array
+    f3: jax.Array
+    rs1: jax.Array
+    rs2: jax.Array
+    sub_bit: jax.Array
+    imm_i: jax.Array
+    imm_s: jax.Array
+    imm_b: jax.Array
+    imm_u: jax.Array
+    imm_j: jax.Array
+
+
+def decode_fields(instr: jax.Array) -> DecodedInstr:
+    """Bit-op decode of fetched instruction word(s) (uint32 in)."""
+    ii = instr.astype(I32)
+    return DecodedInstr(
+        op=ii & 0x7F,
+        rd=(ii >> 7) & 0xF,
+        f3=(ii >> 12) & 0x7,
+        rs1=(ii >> 15) & 0xF,
+        rs2=(ii >> 20) & 0xF,
+        sub_bit=(ii >> 30) & 1,
+        imm_i=_sx(_u(instr) >> 20, 12),
+        imm_s=_sx(((_u(instr) >> 25) << 5).astype(I32)
+                  | ((ii >> 7) & 0x1F), 12),
+        imm_b=_sx(((ii >> 31) & 1) << 12 | ((ii >> 7) & 1) << 11
+                  | ((ii >> 25) & 0x3F) << 5 | ((ii >> 8) & 0xF) << 1, 13),
+        imm_u=ii & jnp.asarray(-4096, I32),
+        imm_j=_sx(((ii >> 31) & 1) << 20 | ((ii >> 12) & 0xFF) << 12
+                  | ((ii >> 20) & 1) << 11 | ((ii >> 21) & 0x3FF) << 1, 21),
+    )
+
+
+def alu_result(a, y, f3, is_sub, is_sra):
+    """Shared OP-IMM/OP-REG ALU: f3-selected branchless result."""
+    au = _u(a)
+    sh = (y & 31).astype(U32)
+    return jnp.select(
+        [f3 == 0, f3 == 1, f3 == 2, f3 == 3, f3 == 4, f3 == 5, f3 == 6],
+        [jnp.where(is_sub, a - y, a + y),
+         (au << sh).astype(I32),
+         (a < y).astype(I32),
+         (au < _u(y)).astype(I32),
+         a ^ y,
+         jnp.where(is_sra, a >> (y & 31), (au >> sh).astype(I32)),
+         a | y], a & y)
+
+
+def branch_taken(a, b, f3):
+    """BRANCH condition select (f3 in {2,3} never taken, as in `step`)."""
+    false = jnp.zeros_like(a, bool)
+    au, bu = _u(a), _u(b)
+    return jnp.select(
+        [f3 == 0, f3 == 1, f3 == 2, f3 == 3, f3 == 4, f3 == 5, f3 == 6],
+        [a == b, a != b, false, false, a < b, a >= b, au < bu],
+        au >= bu)
+
+
+def load_value(word, addr, f3):
+    """Sub-word load extraction from the fetched memory word."""
+    sh8 = ((addr & 3) * 8).astype(U32)
+    sh16 = ((addr & 2) * 8).astype(U32)
+    byte = (_u(word) >> sh8).astype(I32) & 0xFF
+    half = (_u(word) >> sh16).astype(I32) & 0xFFFF
+    lf3 = jnp.clip(f3, 0, 5)       # matches step's clipped switch
+    return jnp.select(
+        [lf3 == 0, lf3 == 1, lf3 == 4, lf3 == 5],
+        [_sx(byte, 8), _sx(half, 16), byte, half], word)
+
+
+def store_word(word, addr, b, f3):
+    """Read-modify-write merge of the store value into the memory word."""
+    sh8 = ((addr & 3) * 8).astype(U32)
+    sh16 = ((addr & 2) * 8).astype(U32)
+    bmask = (jnp.asarray(0xFF, U32) << sh8).astype(I32)
+    hmask = (jnp.asarray(0xFFFF, U32) << sh16).astype(I32)
+    sf3 = jnp.clip(f3, 0, 2)
+    return jnp.select(
+        [sf3 == 0, sf3 == 1],
+        [(word & ~bmask) | (((b & 0xFF).astype(U32) << sh8
+                             ).astype(I32) & bmask),
+         (word & ~hmask) | (((b & 0xFFFF).astype(U32) << sh16
+                             ).astype(I32) & hmask)], b)
+
+
+def branchless_commits(d: DecodedInstr, a, b, pc, subset, live, *,
+                       read_word, write_word):
+    """Opcode-gated commit pipeline shared by `step_branchless` and the
+    Pallas tile stepper (kernels/iss_stepper.py).
+
+    Computes every commit value — next pc, rd write value/predicate,
+    halt, timing class, mix category, and the updated memory — from the
+    decoded fields and register operands. Only the memory *ports* are
+    injected, because that is all that differs between the steppers
+    (indexed gather/scatter vs masked one-hot):
+
+      read_word(widx) -> word          fetched memory word per lane
+      write_word(widx, word, neww, is_store) -> mem   committed memory
+
+    `subset` (static) drops opcode classes from the traced graph;
+    `live=False` freezes stores, rd writes, and counters. All arithmetic
+    is shape-polymorphic over () and (lanes,) operands.
+
+    Returns (next_pc, wr, writes_rd, mem, halt, two_stage, mix_idx);
+    `mem` is None when the subset contains no stores.
+    """
+    sub = FULL_SUBSET if subset is None else frozenset(subset)
+
+    def on(*ops):
+        return any(o in sub for o in ops)
+
+    op, rd, f3 = d.op, d.rd, d.f3
+    pc4 = pc + 4
+    false = jnp.zeros_like(live)
+    zero = jnp.zeros_like(pc)
+
+    is_load = (op == isa.OP_LOAD) if on(isa.OP_LOAD) else false
+    is_store = ((op == isa.OP_STORE) & live) if on(isa.OP_STORE) else false
+
+    # ---- shared memory word port: one read serves loads AND stores
+    mem_val = zero
+    mem = None
+    if on(isa.OP_LOAD, isa.OP_STORE):
+        addr = (a + jnp.where(is_store, d.imm_s, d.imm_i)).astype(I32)
+        widx = jnp.where(is_load | is_store, _u(addr).astype(I32) >> 2, 0)
+        word = read_word(widx)
+        if on(isa.OP_LOAD):
+            mem_val = load_value(word, addr, f3)
+        if on(isa.OP_STORE):
+            mem = write_word(widx, word, store_word(word, addr, b, f3),
+                             is_store)
+
+    # ---- shared ALU serves OP-IMM and OP-REG
+    alu_res = zero
+    if on(isa.OP_IMM, isa.OP_REG):
+        is_reg = (op == isa.OP_REG) if on(isa.OP_REG) else false
+        y = jnp.where(is_reg, b, d.imm_i)
+        alu_res = alu_result(a, y, f3,
+                             is_sub=is_reg & (d.sub_bit == 1),
+                             is_sra=(f3 == 5) & (d.sub_bit == 1))
+
+    # ---- next pc
+    next_pc = pc4
+    if on(isa.OP_BRANCH):
+        next_pc = jnp.where(op == isa.OP_BRANCH,
+                            jnp.where(branch_taken(a, b, f3),
+                                      pc + d.imm_b, pc4), next_pc)
+    if on(isa.OP_JAL):
+        next_pc = jnp.where(op == isa.OP_JAL, pc + d.imm_j, next_pc)
+    if on(isa.OP_JALR):
+        next_pc = jnp.where(op == isa.OP_JALR, (a + d.imm_i) & ~1, next_pc)
+
+    # ---- rd write value
+    wr = zero
+    if on(isa.OP_LUI):
+        wr = jnp.where(op == isa.OP_LUI, d.imm_u, wr)
+    if on(isa.OP_AUIPC):
+        wr = jnp.where(op == isa.OP_AUIPC, pc + d.imm_u, wr)
+    if on(isa.OP_JAL, isa.OP_JALR):
+        wr = jnp.where((op == isa.OP_JAL) | (op == isa.OP_JALR), pc4, wr)
+    if on(isa.OP_LOAD):
+        wr = jnp.where(is_load, mem_val, wr)
+    if on(isa.OP_IMM, isa.OP_REG):
+        wr = jnp.where((op == isa.OP_IMM) | (op == isa.OP_REG),
+                       alu_res, wr)
+
+    writes_rd = (op != isa.OP_BRANCH) & (op != isa.OP_STORE) \
+        & (op != isa.OP_SYSTEM) & (rd != 0) & live
+    halt = (op == isa.OP_SYSTEM) if on(isa.OP_SYSTEM) else false
+    two_stage, mix_idx = classify(op, f3)
+    return next_pc, wr, writes_rd, mem, halt, two_stage, mix_idx
+
+
+def classify(op, f3):
+    """(two_stage, mix_idx) per retired instruction — the paper's
+    bit-serial timing classes and Fig. 2a mix categories. Identical
+    arithmetic to the tail of `step`."""
+    is_shift_imm = (op == isa.OP_IMM) & ((f3 == 1) | (f3 == 5))
+    is_shift_reg = (op == isa.OP_REG) & ((f3 == 1) | (f3 == 5))
+    is_slt = ((op == isa.OP_IMM) | (op == isa.OP_REG)) \
+        & ((f3 == 2) | (f3 == 3))
+    two_stage = ((op == isa.OP_LOAD) | (op == isa.OP_STORE)
+                 | (op == isa.OP_BRANCH) | (op == isa.OP_JAL)
+                 | (op == isa.OP_JALR) | is_shift_imm | is_shift_reg
+                 | is_slt)
+    mix_idx = jnp.select(
+        [op == isa.OP_LOAD, op == isa.OP_STORE, op == isa.OP_BRANCH,
+         (op == isa.OP_JAL) | (op == isa.OP_JALR),
+         is_shift_imm | is_shift_reg,
+         (op == isa.OP_IMM) | (op == isa.OP_LUI) | (op == isa.OP_AUIPC),
+         op == isa.OP_REG],
+        [_MIX_IDX["loads"], _MIX_IDX["stores"], _MIX_IDX["branches"],
+         _MIX_IDX["jumps"], _MIX_IDX["shifts"], _MIX_IDX["I-type"],
+         _MIX_IDX["R-type"]],
+        _MIX_IDX["system"])
+    return two_stage, mix_idx
+
+
 def opcode_subset(code) -> frozenset:
     """Static host-side decode: the opcode classes present in a program.
 
@@ -266,148 +478,30 @@ def step_branchless(code: jax.Array, s: ISSState,
     clamped searchsorted dispatches to an arbitrary neighboring class,
     this one retires a no-op — and neither behavior is contractual.
     """
-    sub = FULL_SUBSET if subset is None else frozenset(subset)
-
-    def on(*ops):
-        return any(o in sub for o in ops)
-
     instr = code[(_u(s.pc) >> 2).astype(I32)].astype(U32)
-    ii = instr.astype(I32)
-    op = (ii & 0x7F)
-    rd = (ii >> 7) & 0xF
-    f3 = (ii >> 12) & 0x7
-    rs1 = (ii >> 15) & 0xF
-    rs2 = (ii >> 20) & 0xF
-    sub_bit = (ii >> 30) & 1
-
-    imm_i = _sx(_u(instr) >> 20, 12)
-    imm_s = _sx(((_u(instr) >> 25) << 5).astype(I32)
-                | ((ii >> 7) & 0x1F), 12)
-    imm_b = _sx(((ii >> 31) & 1) << 12 | ((ii >> 7) & 1) << 11
-                | ((ii >> 25) & 0x3F) << 5 | ((ii >> 8) & 0xF) << 1, 13)
-    imm_u = ii & jnp.asarray(-4096, I32)
-    imm_j = _sx(((ii >> 31) & 1) << 20 | ((ii >> 12) & 0xFF) << 12
-                | ((ii >> 20) & 1) << 11 | ((ii >> 21) & 0x3FF) << 1, 21)
-
-    a = s.regs[rs1]
-    b = s.regs[rs2]
-    au = _u(a)
-    bu = _u(b)
-    pc4 = s.pc + 4
+    d = decode_fields(instr)
+    a = s.regs[d.rs1]
+    b = s.regs[d.rs2]
     live = jnp.ones((), bool) if active is None else active
-    false = jnp.zeros((), bool)
-    zero = jnp.zeros((), I32)
 
-    is_load = (op == isa.OP_LOAD) if on(isa.OP_LOAD) else false
-    is_store = ((op == isa.OP_STORE) & live) if on(isa.OP_STORE) else false
+    def read_word(widx):
+        return s.mem[widx]
 
-    # ---- shared memory port: one gather serves loads AND stores
-    mem_val = zero
-    mem = s.mem
-    if on(isa.OP_LOAD, isa.OP_STORE):
-        addr = (a + jnp.where(is_store, imm_s, imm_i)).astype(I32)
-        widx = jnp.where(is_load | is_store, _u(addr).astype(I32) >> 2, 0)
-        word = s.mem[widx]
-        sh8 = ((addr & 3) * 8).astype(U32)
-        sh16 = ((addr & 2) * 8).astype(U32)
-        if on(isa.OP_LOAD):
-            byte = (_u(word) >> sh8).astype(I32) & 0xFF
-            half = (_u(word) >> sh16).astype(I32) & 0xFFFF
-            lf3 = jnp.clip(f3, 0, 5)       # matches step's clipped switch
-            mem_val = jnp.select(
-                [lf3 == 0, lf3 == 1, lf3 == 4, lf3 == 5],
-                [_sx(byte, 8), _sx(half, 16), byte, half], word)
-        if on(isa.OP_STORE):
-            bmask = (jnp.asarray(0xFF, U32) << sh8).astype(I32)
-            hmask = (jnp.asarray(0xFFFF, U32) << sh16).astype(I32)
-            sf3 = jnp.clip(f3, 0, 2)
-            neww = jnp.select(
-                [sf3 == 0, sf3 == 1],
-                [(word & ~bmask) | (((b & 0xFF).astype(U32) << sh8
-                                     ).astype(I32) & bmask),
-                 (word & ~hmask) | (((b & 0xFFFF).astype(U32) << sh16
-                                     ).astype(I32) & hmask)], b)
-            # non-stores write word back to itself at index 0: a no-op,
-            # so the scatter needs no predication beyond the value select
-            mem = s.mem.at[widx].set(jnp.where(is_store, neww, word))
+    def write_word(widx, word, neww, is_store):
+        # non-stores write word back to itself at index 0: a no-op,
+        # so the scatter needs no predication beyond the value select
+        return s.mem.at[widx].set(jnp.where(is_store, neww, word))
 
-    # ---- shared ALU serves OP-IMM and OP-REG
-    alu_res = zero
-    if on(isa.OP_IMM, isa.OP_REG):
-        is_reg = (op == isa.OP_REG) if on(isa.OP_REG) else false
-        y = jnp.where(is_reg, b, imm_i)
-        is_sub = is_reg & (sub_bit == 1)
-        is_sra = (f3 == 5) & (sub_bit == 1)
-        sh = (y & 31).astype(U32)
-        alu_res = jnp.select(
-            [f3 == 0, f3 == 1, f3 == 2, f3 == 3, f3 == 4, f3 == 5,
-             f3 == 6],
-            [jnp.where(is_sub, a - y, a + y),
-             (au << sh).astype(I32),
-             (a < y).astype(I32),
-             (au < _u(y)).astype(I32),
-             a ^ y,
-             jnp.where(is_sra, a >> (y & 31), (au >> sh).astype(I32)),
-             a | y], a & y)
-
-    # ---- next pc
-    next_pc = pc4
-    if on(isa.OP_BRANCH):
-        taken = jnp.select(
-            [f3 == 0, f3 == 1, f3 == 2, f3 == 3, f3 == 4, f3 == 5,
-             f3 == 6],
-            [a == b, a != b, false, false, a < b, a >= b, au < bu],
-            au >= bu)
-        next_pc = jnp.where(op == isa.OP_BRANCH,
-                            jnp.where(taken, s.pc + imm_b, pc4), next_pc)
-    if on(isa.OP_JAL):
-        next_pc = jnp.where(op == isa.OP_JAL, s.pc + imm_j, next_pc)
-    if on(isa.OP_JALR):
-        next_pc = jnp.where(op == isa.OP_JALR, (a + imm_i) & ~1, next_pc)
-
-    # ---- rd write value
-    wr = zero
-    if on(isa.OP_LUI):
-        wr = jnp.where(op == isa.OP_LUI, imm_u, wr)
-    if on(isa.OP_AUIPC):
-        wr = jnp.where(op == isa.OP_AUIPC, s.pc + imm_u, wr)
-    if on(isa.OP_JAL, isa.OP_JALR):
-        wr = jnp.where((op == isa.OP_JAL) | (op == isa.OP_JALR), pc4, wr)
-    if on(isa.OP_LOAD):
-        wr = jnp.where(is_load, mem_val, wr)
-    if on(isa.OP_IMM, isa.OP_REG):
-        wr = jnp.where((op == isa.OP_IMM) | (op == isa.OP_REG),
-                       alu_res, wr)
+    next_pc, wr, writes_rd, mem, halt, two_stage, mix_idx = \
+        branchless_commits(d, a, b, s.pc, subset, live,
+                           read_word=read_word, write_word=write_word)
+    mem = s.mem if mem is None else mem
 
     # one-hot commit instead of a scatter: an elementwise select over the
     # 16-entry register file fuses into the surrounding arithmetic, where
     # a 1-element scatter is a separate kernel per step on CPU/TPU
-    writes_rd = (op != isa.OP_BRANCH) & (op != isa.OP_STORE) \
-        & (op != isa.OP_SYSTEM) & (rd != 0) & live
-    regs = jnp.where((jnp.arange(16, dtype=I32) == rd) & writes_rd,
+    regs = jnp.where((jnp.arange(16, dtype=I32) == d.rd) & writes_rd,
                      wr, s.regs)
-
-    halt = (op == isa.OP_SYSTEM) if on(isa.OP_SYSTEM) else false
-
-    # ---- classification (identical arithmetic to `step`)
-    is_shift_imm = (op == isa.OP_IMM) & ((f3 == 1) | (f3 == 5))
-    is_shift_reg = (op == isa.OP_REG) & ((f3 == 1) | (f3 == 5))
-    is_slt = ((op == isa.OP_IMM) | (op == isa.OP_REG)) \
-        & ((f3 == 2) | (f3 == 3))
-    two_stage = ((op == isa.OP_LOAD) | (op == isa.OP_STORE)
-                 | (op == isa.OP_BRANCH) | (op == isa.OP_JAL)
-                 | (op == isa.OP_JALR) | is_shift_imm | is_shift_reg
-                 | is_slt)
-    mix_idx = jnp.select(
-        [op == isa.OP_LOAD, op == isa.OP_STORE, op == isa.OP_BRANCH,
-         (op == isa.OP_JAL) | (op == isa.OP_JALR),
-         is_shift_imm | is_shift_reg,
-         (op == isa.OP_IMM) | (op == isa.OP_LUI) | (op == isa.OP_AUIPC),
-         op == isa.OP_REG],
-        [_MIX_IDX["loads"], _MIX_IDX["stores"], _MIX_IDX["branches"],
-         _MIX_IDX["jumps"], _MIX_IDX["shifts"], _MIX_IDX["I-type"],
-         _MIX_IDX["R-type"]],
-        _MIX_IDX["system"])
 
     one = live.astype(I32)
     mix_onehot = (jnp.arange(len(MIX_CLASSES), dtype=I32)

@@ -1,0 +1,245 @@
+"""Fused-segment Pallas ISS stepper (DESIGN.md §9.7).
+
+`iss.run_segment_lanes` is plain XLA: every architectural step of the
+segment `while_loop` re-materializes the full lane-pool `ISSState`
+(regs, pc, mem, halted, counters) through the memory system and
+re-dispatches the step body as dozens of separate HLO ops. This kernel
+executes ALL `seg_steps` architectural steps of a lane tile inside ONE
+`pl.pallas_call` invocation:
+
+- the program text and the tile's regs/pc/mem/halted/counters are read
+  from their refs once, live in kernel-resident values (VMEM on TPU) for
+  the whole segment, and are written back once at the end;
+- the step body is the branchless one-hot commit scheme ported from
+  `iss.step_branchless`, with every memory port expressed as a masked
+  one-hot reduce/select instead of gather/scatter — the kernel body is
+  pure elementwise/reduction work over (lanes, words) tiles;
+- the PR-2 opcode-subset DCE (`iss.opcode_subset`) is applied at kernel
+  *build* time, so dead opcode classes are never emitted into the kernel
+  for a given workload (the RISP specialization knob, one kernel per
+  ISA subset);
+- the grid runs over lane tiles; each tile's internal `while_loop`
+  exits as soon as its own lanes are all halted, mirroring the per-device
+  early exit of the shard_map path (§9.6) at tile granularity.
+
+Bit-exactness contract: identical to `step_branchless` (and therefore to
+`iss.step`/`iss.run`) for programs whose fetched words decode to RV32E
+opcodes — including the clamp-on-read / drop-on-write behavior of jax
+gathers and scatters at out-of-range addresses, which the one-hot ports
+reproduce explicitly (clipped match for the read port, unclipped match
+for the write port). Pinned by the instruction-soup and segment-parity
+tests in `tests/test_stepper.py`.
+
+The CPU fallback follows the package convention (`bitplane_matmul.py`,
+`ssd_scan.py`): off-TPU the kernel defaults to `interpret=True`, so it
+runs anywhere jax runs and the fleet engine can A/B it against the XLA
+steppers; on a TPU backend the default flips to the compiled Mosaic
+path (explicit `interpret=` overrides either way).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.flexibits import iss
+from repro.flexibits.iss import I32, U32, ISSState, _u
+
+
+def _pick_lane_tile(n_lanes: int, want: Optional[int]) -> int:
+    """Largest divisor of `n_lanes` that is <= the requested tile."""
+    want = n_lanes if want is None else max(1, min(want, n_lanes))
+    for d in range(want, 0, -1):
+        if n_lanes % d == 0:
+            return d
+    return 1
+
+
+def _step_tile(code, regs, pc, mem, halted, n_instr, n_two, mix,
+               active, subset):
+    """One branchless architectural step over a (TL,)-lane tile.
+
+    Lane-vectorized port of `iss.step_branchless`: the opcode-gated
+    commit pipeline is the SAME code (`iss.branchless_commits`, with the
+    shared decode/ALU/branch/load-store/classify helpers), so the
+    semantics cannot drift. What this function owns is only the data
+    movement: instruction fetch, register reads, and the memory word
+    ports are masked one-hot reductions/selects, so the kernel body
+    contains no gather/scatter at all. `active=False` freezes a lane
+    completely. `subset` is static — opcode classes outside it are
+    dropped from the kernel at build time.
+    """
+    n_lanes = pc.shape[0]
+    n_code = code.shape[0]
+    mem_words = mem.shape[1]
+    iota_code = jnp.arange(n_code, dtype=I32)
+    iota_mem = jnp.arange(mem_words, dtype=I32)
+    iota_reg = jnp.arange(16, dtype=I32)
+
+    # ---- fetch: clipped one-hot == jax's clamp-on-read gather semantics
+    pword = (_u(pc) >> 2).astype(I32)
+    fsel = jnp.clip(pword, 0, n_code - 1)[:, None] == iota_code[None, :]
+    ii = jnp.sum(jnp.where(fsel, code[None, :], 0), axis=1)
+    d = iss.decode_fields(ii.astype(U32))
+
+    # ---- register read port: one-hot over the 16-entry file
+    def read_reg(idx):
+        sel = idx[:, None] == iota_reg[None, :]
+        return jnp.sum(jnp.where(sel, regs, 0), axis=1)
+
+    a = read_reg(d.rs1)
+    b = read_reg(d.rs2)
+    live = jnp.ones(n_lanes, bool) if active is None else active
+
+    # ---- memory word ports: a clipped one-hot read (clamp-on-read, as
+    # jax gathers) and an UNCLIPPED one-hot write select (out-of-range
+    # stores drop, as jax scatters)
+    def read_word(widx):
+        rsel = jnp.clip(widx, 0, mem_words - 1)[:, None] \
+            == iota_mem[None, :]
+        return jnp.sum(jnp.where(rsel, mem, 0), axis=1)
+
+    def write_word(widx, word, neww, is_store):
+        wsel = (widx[:, None] == iota_mem[None, :]) & is_store[:, None]
+        return jnp.where(wsel, neww[:, None], mem)
+
+    next_pc, wr, writes_rd, new_mem, halt, two_stage, mix_idx = \
+        iss.branchless_commits(d, a, b, pc, subset, live,
+                               read_word=read_word, write_word=write_word)
+    mem = mem if new_mem is None else new_mem
+
+    # ---- one-hot register-file commit (elementwise, no scatter)
+    rdsel = (d.rd[:, None] == iota_reg[None, :]) & writes_rd[:, None]
+    regs = jnp.where(rdsel, wr[:, None], regs)
+
+    one = live.astype(I32)
+    mix_onehot = (jnp.arange(len(iss.MIX_CLASSES), dtype=I32)[None, :]
+                  == mix_idx[:, None]).astype(I32) * one[:, None]
+    return (regs,
+            jnp.where(live, next_pc.astype(I32), pc),
+            mem,
+            halted | (halt & live),
+            n_instr + one,
+            n_two + (two_stage & live).astype(I32),
+            mix + mix_onehot)
+
+
+def _segment_kernel(code_ref, regs_ref, pc_ref, mem_ref, halt_ref,
+                    ni_ref, n2_ref, mix_ref,
+                    oregs_ref, opc_ref, omem_ref, ohalt_ref,
+                    oni_ref, on2_ref, omix_ref, *,
+                    seg_steps: int, max_steps: int, subset):
+    """Mega-step: all `seg_steps` architectural steps of one lane tile.
+
+    State is read from the refs ONCE, carried through the segment loop as
+    kernel-resident values, and written back ONCE — the per-step state
+    round-trip of the XLA steppers never leaves the kernel.
+    """
+    code = code_ref[...]
+    carry = (jnp.zeros((), I32), regs_ref[...], pc_ref[...], mem_ref[...],
+             halt_ref[...], ni_ref[...], n2_ref[...], mix_ref[...])
+
+    def active_of(halted, n_instr):
+        return (~halted) & (n_instr < max_steps)
+
+    def cond(c):
+        k, _, _, _, halted, n_instr, _, _ = c
+        return (k < seg_steps) & active_of(halted, n_instr).any()
+
+    def body(c):
+        k, regs, pc, mem, halted, n_instr, n2, mix = c
+        act = active_of(halted, n_instr)
+        regs, pc, mem, halted, n_instr, n2, mix = _step_tile(
+            code, regs, pc, mem, halted, n_instr, n2, mix, act, subset)
+        return k + 1, regs, pc, mem, halted, n_instr, n2, mix
+
+    _, regs, pc, mem, halted, n_instr, n2, mix = \
+        lax.while_loop(cond, body, carry)
+    oregs_ref[...] = regs
+    opc_ref[...] = pc
+    omem_ref[...] = mem
+    ohalt_ref[...] = halted
+    oni_ref[...] = n_instr
+    on2_ref[...] = n2
+    omix_ref[...] = mix
+
+
+def iss_segment(code: jax.Array, state: ISSState, *, seg_steps: int,
+                max_steps: int, subset=None,
+                lane_tile: Optional[int] = None,
+                interpret: Optional[bool] = None) -> ISSState:
+    """Fused-segment stepper: up to `seg_steps` steps for every lane.
+
+    Drop-in replacement for `iss.run_segment_lanes` — bit-exact with it
+    (and with `iss.run`) over RV32E programs. The grid runs over lane
+    tiles of `lane_tile` lanes (default: largest divisor of the lane
+    count <= 128); each tile's segment executes inside a single kernel
+    invocation with state resident for the whole segment. State buffers
+    are aliased input->output, so the caller's donated lane pool is
+    updated in place rather than reallocated per segment.
+
+    `subset` is the static opcode subset (`iss.opcode_subset`): classes
+    outside it are never emitted into the kernel. `interpret=None`
+    resolves by backend — the compiled Mosaic kernel on TPU, the
+    run-anywhere interpreter fallback elsewhere (the package's CPU
+    convention); pass an explicit bool to override. Not jitted here —
+    the fleet engine jits (and donates through) the wrapped call.
+    """
+    if seg_steps < 1:
+        raise ValueError("seg_steps must be >= 1")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_lanes, mem_words = state.mem.shape
+    n_code = code.shape[0]
+    tile = _pick_lane_tile(n_lanes, 128 if lane_tile is None else lane_tile)
+    n_mix = len(iss.MIX_CLASSES)
+    sub = None if subset is None else frozenset(subset)
+
+    def row(i):
+        return (i,)
+
+    def row2(i):
+        return (i, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_segment_kernel, seg_steps=seg_steps,
+                          max_steps=max_steps, subset=sub),
+        grid=(n_lanes // tile,),
+        in_specs=[
+            pl.BlockSpec((n_code,), lambda i: (0,)),
+            pl.BlockSpec((tile, 16), row2),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile, mem_words), row2),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile, n_mix), row2),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, 16), row2),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile, mem_words), row2),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile, n_mix), row2),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_lanes, 16), I32),
+            jax.ShapeDtypeStruct((n_lanes,), I32),
+            jax.ShapeDtypeStruct((n_lanes, mem_words), I32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.bool_),
+            jax.ShapeDtypeStruct((n_lanes,), I32),
+            jax.ShapeDtypeStruct((n_lanes,), I32),
+            jax.ShapeDtypeStruct((n_lanes, n_mix), I32),
+        ],
+        # state buffers update in place (code, input 0, is read-only)
+        input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3, 5: 4, 6: 5, 7: 6},
+        interpret=interpret,
+    )(code, state.regs, state.pc, state.mem, state.halted,
+      state.n_instr, state.n_two_stage, state.mix)
+    return ISSState(*out)

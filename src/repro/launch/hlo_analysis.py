@@ -307,6 +307,61 @@ def _parse(hlo: str):
     return comps, entry
 
 
+def op_counts(hlo: str) -> Dict:
+    """Structural op counts of a compiled HLO module.
+
+    Counts the instructions each computation dispatches *itself*: a
+    fusion, call, or while is ONE op of the computation that contains it
+    (its internals belong to the callee computation); `parameter`
+    declarations are not ops. Returns the per-computation counts, the
+    entry-computation count, and the op counts of every while-loop body.
+
+    This is the structural complement to `analyze_hlo`'s flop/byte
+    totals: a while body's op count is the size of the HLO graph XLA
+    re-dispatches on every loop trip, while `entry_ops` is what the
+    module dispatches once per call. The fleet benchmark's fused-segment
+    proof (benchmarks/fleet.py, DESIGN.md §9.7) compares the two: the
+    XLA segment stepper re-dispatches its whole step graph once per
+    architectural step, the fused Pallas segment dispatches a single
+    kernel unit per segment.
+    """
+    counts: Dict[str, int] = {}
+    entry = None
+    cur = None
+    body_names = []
+    for raw in hlo.splitlines():
+        mc = _COMP_RE.match(raw)
+        if mc and not raw.startswith(" "):
+            cur = mc.group(2)
+            counts[cur] = 0
+            if mc.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(raw)
+        if not mi:
+            continue
+        rest = mi.group(2)
+        if re.search(r"\bparameter\(", rest):
+            continue
+        counts[cur] += 1
+        if re.search(r"\bwhile\(", rest):
+            mb = re.search(r"body=%?([\w\.\-]+)", rest)
+            if mb:
+                body_names.append(mb.group(1))
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    body_ops = {b: counts.get(b, 0) for b in body_names}
+    return {
+        "entry": entry,
+        "entry_ops": counts[entry],
+        "computations": counts,
+        "while_body_ops": body_ops,
+        "max_while_body_ops": max(body_ops.values(), default=0),
+    }
+
+
 def analyze_hlo(hlo: str) -> Dict:
     """Loop-aware totals per device: flops, collective bytes, counts."""
     comps, entry = _parse(hlo)

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo, op_counts
 from repro.launch.roofline import (HBM_BW, PEAK_FLOPS, roofline_terms)
 
 
@@ -129,6 +129,32 @@ def test_pinned_trip_count_from_compiled_scan():
     r = analyze_hlo(hlo)
     assert r["flops_per_device"] == trip * 2 * m * m * m
     assert r["unknown_trip_counts"] == 0
+
+
+def test_op_counts_synthetic_closed_form():
+    """Structural op counts on the pinned module: parameters are not
+    ops, a while is one op of its caller, and its body's count is
+    reported per trip."""
+    r = op_counts(_SYNTH_HLO)
+    assert r["entry"] == "main.1"
+    # entry: c.3, tuple.2, while.1, dot.2 (2 parameters excluded)
+    assert r["entry_ops"] == 4
+    # body.1: gte x3, dot.1, c.1, add.1, tuple.1 (parameter excluded)
+    assert r["computations"]["body.1"] == 7
+    assert r["while_body_ops"] == {"body.1": 7}
+    assert r["max_while_body_ops"] == 7
+
+
+def test_fused_segment_top_level_collapse():
+    """DESIGN.md §9.7 acceptance: the fused pallas segment module's top
+    level holds >=10x fewer ops than the branchless step-loop body x
+    seg_steps it replaces (the branchless while re-dispatches its whole
+    step graph once per architectural step)."""
+    from benchmarks.fleet import fleet_fusion_proof
+    _, fp = fleet_fusion_proof(chunk=16, seg_steps=64)
+    assert fp["branchless"]["step_while_body_ops"] > 0
+    assert fp["pallas"]["entry_ops"] > 0
+    assert fp["top_level_ratio"] >= 10.0
 
 
 def test_roofline_terms_arithmetic():

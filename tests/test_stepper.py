@@ -1,12 +1,14 @@
-"""Lane-parallel branchless stepper (DESIGN.md §9.5/§9.6): bit-exactness
-vs the lax.switch interpreter over a randomized instruction soup covering
-every opcode class, opcode-subset specialization, segment-loop parity,
-engine stepper A/B parity, the async prefetcher, and sharded multi-device
-streaming."""
+"""Lane-parallel branchless stepper and fused-segment pallas stepper
+(DESIGN.md §9.5/§9.6/§9.7): bit-exactness vs the lax.switch interpreter
+over a randomized instruction soup covering every opcode class,
+opcode-subset specialization, segment-loop parity, engine stepper A/B
+parity, the async prefetcher, and sharded multi-device streaming."""
 import json
 import os
 import subprocess
 import sys
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +16,7 @@ import numpy as np
 import pytest
 
 from repro.flexibits import isa, iss
+from repro.kernels.iss_stepper import iss_segment
 
 _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 MEM_WORDS = 64
@@ -150,9 +153,66 @@ def test_segment_unroll_bit_exact():
     assert int(np.asarray(got.n_instr).max()) <= 37
 
 
+def test_pallas_segment_bit_exact_instruction_soup():
+    """Every opcode class x random fields x random state: the fused
+    pallas segment at seg_steps=1 commits exactly what step_lanes
+    commits — including clamp-on-read / drop-on-write behavior at the
+    OOB memory edges the mem-op lane states are biased toward."""
+    rng = np.random.default_rng(21)
+    mem_ops = ("lb", "lh", "lw", "lbu", "lhu", "sb", "sh", "sw")
+    lanes = len(isa.ALL_OPS)
+    for trial in range(6):
+        words = np.array([_random_instr(rng, n) for n in isa.ALL_OPS],
+                         np.uint32)
+        states = []
+        for i, name in enumerate(isa.ALL_OPS):
+            s = _random_state(rng, mem_like=name in mem_ops)
+            states.append(s._replace(pc=jnp.asarray(4 * i, iss.I32)))
+        batched = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        code = jnp.asarray(words.view(np.int32))
+        ref = jax.jit(lambda st: iss.step_lanes(code, st))(batched)
+        # lane_tile < lanes exercises the lane-tile grid as well
+        got = iss_segment(code, batched, seg_steps=1, max_steps=1 << 30,
+                          lane_tile=max(1, lanes // 3))
+        _assert_state_equal(ref, got, ctx=f"pallas soup trial {trial}")
+
+
+def test_pallas_subset_segment_parity():
+    """Fused segments with the derived opcode subset retire the exact
+    sequence of the monolithic full-ISA interpreter on a real workload,
+    across many segment boundaries and a tiled lane grid."""
+    from repro.flexibench.base import get
+    from repro.flexibits.fleet import fleet_inputs
+    w = get("MC")
+    n = 12
+    mems = fleet_inputs(w, n, seed=9)
+    code = jnp.asarray(w.program.code.view(np.int32))
+    sub = iss.opcode_subset(w.program.code)
+    mono = iss.run_fleet(code, jnp.asarray(mems), w.max_steps)
+
+    states = iss.ISSState(
+        regs=jnp.zeros((n, 16), iss.I32),
+        pc=jnp.zeros((n,), iss.I32),
+        mem=jnp.asarray(mems),
+        halted=jnp.zeros((n,), bool),
+        n_instr=jnp.zeros((n,), iss.I32),
+        n_two_stage=jnp.zeros((n,), iss.I32),
+        mix=jnp.zeros((n, len(iss.MIX_CLASSES)), iss.I32),
+    )
+    seg = jax.jit(lambda c, st: iss_segment(
+        c, st, seg_steps=64, max_steps=w.max_steps, subset=sub,
+        lane_tile=4))
+    for _ in range(10_000):
+        states = seg(code, states)
+        if bool(np.asarray(states.halted).all()):
+            break
+    _assert_state_equal(states, mono, ctx="pallas subset segment")
+
+
 def test_engine_stepper_ab_parity():
-    """run_stream(stepper=switch) == run_stream(stepper=branchless),
-    including full final state."""
+    """run_stream is bit-exact across all three steppers (switch,
+    branchless, pallas), including full final state and the engine's
+    lane-step accounting."""
     from benchmarks.fleet import skew_fleet, skew_program
     from repro.fleet import array_source, run_stream
     prog = skew_program()
@@ -161,15 +221,17 @@ def test_engine_stepper_ab_parity():
     kw = dict(n_items=48, mem_words=32, max_steps=100_000, chunk=16,
               seg_steps=64, out_addr=1, keep_state=True)
     a = run_stream(prog.code, array_source(mems), stepper="switch", **kw)
-    b = run_stream(prog.code, array_source(mems), stepper="branchless",
-                   **kw)
-    np.testing.assert_array_equal(a.mems, b.mems)
-    np.testing.assert_array_equal(a.regs, b.regs)
-    np.testing.assert_array_equal(a.n_instr, b.n_instr)
-    np.testing.assert_array_equal(a.out, b.out)
-    np.testing.assert_array_equal(a.mix, b.mix)
-    assert a.lane_steps == b.lane_steps
-    assert b.stepper == "branchless" and a.stepper == "switch"
+    assert a.stepper == "switch"
+    for stepper in ("branchless", "pallas"):
+        b = run_stream(prog.code, array_source(mems), stepper=stepper,
+                       **kw)
+        np.testing.assert_array_equal(a.mems, b.mems)
+        np.testing.assert_array_equal(a.regs, b.regs)
+        np.testing.assert_array_equal(a.n_instr, b.n_instr)
+        np.testing.assert_array_equal(a.out, b.out)
+        np.testing.assert_array_equal(a.mix, b.mix)
+        assert a.lane_steps == b.lane_steps
+        assert b.stepper == stepper
 
 
 def test_prefetcher_preserves_stream_order():
@@ -184,6 +246,52 @@ def test_prefetcher_preserves_stream_order():
                              + [pref.take(5)])
         np.testing.assert_array_equal(got[:, 0], np.arange(103))
         pref.close()
+
+
+def test_pallas_prime_chunk_rounds_to_wide_tiles():
+    """A prime chunk > 128 would tile at 1 lane/kernel; the engine pads
+    the pallas lane pool up to a 128-multiple instead (inert padding
+    lanes), staying bit-exact with branchless."""
+    from benchmarks.fleet import skew_fleet, skew_program
+    from repro.fleet import array_source, run_stream
+    prog = skew_program()
+    mems = skew_fleet(prog, 140, short_iters=8, long_iters=200,
+                      long_frac=0.2, seed=3)
+    kw = dict(n_items=140, mem_words=32, max_steps=100_000, chunk=131,
+              seg_steps=64, out_addr=1)
+    a = run_stream(prog.code, array_source(mems), stepper="branchless",
+                   **kw)
+    b = run_stream(prog.code, array_source(mems), stepper="pallas", **kw)
+    assert b.chunk == 256 and a.chunk == 131
+    np.testing.assert_array_equal(a.out, b.out)
+    np.testing.assert_array_equal(a.n_instr, b.n_instr)
+
+
+def test_prefetcher_close_drains_inflight_fetch():
+    """close() must cancel or drain the background fetch: a leaked
+    worker thread must never still be inside the source after close()
+    returns (regression: shutdown(wait=False) left it running)."""
+    from repro.fleet.engine import _Prefetcher
+    lock = threading.Lock()
+    running = [0]
+    calls = []
+
+    def source(start, count):
+        with lock:
+            running[0] += 1
+        calls.append(start)
+        time.sleep(0.2)
+        with lock:
+            running[0] -= 1
+        return np.zeros((count, 1), np.int32)
+
+    pref = _Prefetcher(source, 64, block=16, background=True)
+    pref.close()
+    assert running[0] == 0, "source still running after close()"
+    assert pref._fut is None
+    n_calls = len(calls)
+    time.sleep(0.3)          # a cancelled future must never fire late
+    assert len(calls) == n_calls <= 1
 
 
 def test_engine_prefetch_off_matches_on():
@@ -215,7 +323,7 @@ mems = skew_fleet(prog, 64, short_iters=8, long_iters=400,
 mono = iss.run_fleet(jnp.asarray(prog.code.view(np.int32)),
                      jnp.asarray(mems), 100_000)
 mesh = jax.make_mesh((len(jax.devices()),), ("fleet",))
-for stepper in ("branchless", "switch"):
+for stepper in ("branchless", "pallas", "switch"):
     res = run_stream(prog.code, array_source(mems), n_items=64,
                      mem_words=32, max_steps=100_000, chunk=16,
                      seg_steps=64, out_addr=1, keep_state=True,
