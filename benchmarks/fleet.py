@@ -1,6 +1,6 @@
 """Streaming fleet engine benchmarks (DESIGN.md §9).
 
-Four studies on a skewed halt-time distribution (the paper's regime:
+Five studies on a skewed halt-time distribution (the paper's regime:
 most items run short data-dependent paths, a tail runs long ones):
 
 - streaming vs monolithic: total simulated lane-steps; the monolithic
@@ -14,6 +14,11 @@ most items run short data-dependent paths, a tail runs long ones):
 - fusion proof (§9.7): structural HLO op counts; the fused-segment
   module's top level must hold >=10x fewer ops than the branchless
   step body x seg_steps it replaces.
+- packed vs sequential (§9.8): wall-clock of the packed multi-program
+  runtime (whole heterogeneous plan in one stream, freed lanes
+  backfilled from any pending group) vs draining the same groups
+  sequentially, on 16x-skewed group sizes — bit-exact per group, and
+  packed must not be slower.
 - device scaling (§9.6): items/s of the shard_map'd engine as the host
   device count grows (subprocesses with forced CPU device counts).
 
@@ -237,6 +242,92 @@ def fleet_fusion_proof(chunk: int = 128, seg_steps: int = 512,
     return rows, derived
 
 
+def fleet_packed_vs_sequential(chunk: int = 128, seg_steps: int = 256,
+                               max_steps: int = 100_000):
+    """Packed multi-program runtime vs sequential group drain (§9.8).
+
+    A skewed plan — group sizes spanning 16x, each group with its own
+    within-group halt-time skew — run twice through the engine: once
+    group-by-group (`run_stream` per group, the pre-§9.8 baseline) and
+    once as ONE packed stream (`run_packed`). Sequentially, every group
+    pays its own tail (the last segments where a few long items hold
+    the whole pool) and its own host<->device cadence; packed, freed
+    lanes are immediately backfilled with items from any pending group.
+    Gate: packed wall-clock <= sequential on this plan, with per-group
+    tallies bit-exact between the two modes. Timed best-of-`reps` after
+    a warm-up run of each mode, so the comparison is steady-state
+    execution, not compile time (which also favors packed: one compiled
+    runner for the bank vs one per group).
+    """
+    from repro.fleet import engine
+
+    prog = skew_program()
+    reps = 3
+    # 16x size skew; per-group halt-time skew via long_frac/long_iters
+    sizes = (8 * chunk, chunk, chunk // 2, chunk // 2)
+    gspecs = []
+    for gi, n in enumerate(sizes):
+        mems = skew_fleet(prog, n, short_iters=48,
+                          long_iters=2048 + 512 * gi,
+                          long_frac=0.08 + 0.04 * gi, seed=17 + gi)
+        gspecs.append(engine.PackedGroup(
+            code=prog.code, source=array_source(mems), n_items=n,
+            max_steps=max_steps, mem_words=32, out_addr=1))
+
+    kw = dict(chunk=chunk, seg_steps=seg_steps)
+
+    def run_sequential():
+        t0 = time.perf_counter()
+        outs = [run_stream(g.code, g.source, n_items=g.n_items,
+                           mem_words=g.mem_words, max_steps=g.max_steps,
+                           out_addr=g.out_addr, **kw) for g in gspecs]
+        return outs, time.perf_counter() - t0
+
+    def run_packed_mode():
+        t0 = time.perf_counter()
+        outs, stats = engine.run_packed(gspecs, **kw)
+        return outs, time.perf_counter() - t0, stats
+
+    run_sequential()                         # warm-up (compile)
+    run_packed_mode()
+    seq_res, seq_wall = None, float("inf")
+    pk_res, pk_wall, pk_stats = None, float("inf"), None
+    for _ in range(reps):
+        r, w = run_sequential()
+        if w < seq_wall:
+            seq_res, seq_wall = r, w
+        r, w, st = run_packed_mode()
+        if w < pk_wall:
+            pk_res, pk_wall, pk_stats = r, w, st
+
+    for a, b in zip(seq_res, pk_res):        # bit-exact demux per group
+        np.testing.assert_array_equal(a.n_instr, b.n_instr)
+        np.testing.assert_array_equal(a.out, b.out)
+        np.testing.assert_array_equal(a.mix, b.mix)
+
+    seq_segments = sum(r.n_segments for r in seq_res)
+    seq_lane_steps = sum(r.lane_steps for r in seq_res)
+    speedup = seq_wall / max(pk_wall, 1e-12)
+    rows = [
+        ("fleet/packed_wall_s", round(pk_wall, 3), round(seq_wall, 3)),
+        ("fleet/packed_segments", pk_stats.n_segments, seq_segments),
+        ("fleet/packed_lane_steps", pk_stats.lane_steps, seq_lane_steps),
+    ]
+    derived = {
+        "group_sizes": list(sizes),
+        "packed_wall_s": pk_wall,
+        "sequential_wall_s": seq_wall,
+        "packed_speedup": speedup,
+        "packed_segments": pk_stats.n_segments,
+        "sequential_segments": seq_segments,
+        "packed_lane_steps": pk_stats.lane_steps,
+        "sequential_lane_steps": seq_lane_steps,
+        "bit_exact": True,
+        "target": "packed wall-clock <= sequential on skewed group sizes",
+    }
+    return rows, derived
+
+
 def _scaling_worker(n_items: int, chunk: int, seg_steps: int) -> dict:
     """One scaling point: run the sharded engine over ALL host devices.
     Invoked in a subprocess with XLA_FLAGS forcing the device count."""
@@ -339,6 +430,16 @@ def main():
           f"ops vs {fp['branchless']['dispatched_ops_per_segment']} "
           f"step-dispatched ops ({fp['top_level_ratio']:.0f}x)")
 
+    pk_rows, pk = fleet_packed_vs_sequential(chunk=max(args.chunk, 64),
+                                             seg_steps=args.seg_steps)
+    bench["packed_vs_sequential"] = pk
+    print(f"\n{'metric':<24} {'packed':>14} {'sequential':>14}")
+    for name, p, s in pk_rows:
+        print(f"{name:<24} {p:>14} {s:>14}")
+    print(f"packed runtime: {pk['packed_speedup']:.2f}x wall-clock vs "
+          f"sequential group drain on group sizes {pk['group_sizes']} "
+          f"(bit-exact per-group demux)")
+
     if not args.skip_scaling:
         sc_rows, sc = fleet_device_scaling(
             n_items=args.items, chunk=args.chunk,
@@ -362,6 +463,10 @@ def main():
     if fp["top_level_ratio"] < 10.0:
         failures.append(f"fusion proof target NOT met: "
                         f"{fp['top_level_ratio']:.1f}x < 10x")
+    if pk["packed_wall_s"] > pk["sequential_wall_s"]:
+        failures.append(f"packed runtime target NOT met: "
+                        f"{pk['packed_wall_s']:.3f}s packed > "
+                        f"{pk['sequential_wall_s']:.3f}s sequential")
     if derived["cycles_saved_ratio"] < 2.0 and args.items < 4 * args.chunk:
         print(f"note: fleet too small to exploit skew "
               f"(--items {args.items} < 4x --chunk {args.chunk}); "

@@ -26,6 +26,11 @@ def main():
     ap.add_argument("--seg-steps", type=int, default=1024)
     ap.add_argument("--stepper", choices=STEPPERS, default="branchless",
                     help="segment interpreter (DESIGN.md §9.5/§9.7)")
+    ap.add_argument("--packed", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="run all groups in one packed multi-program "
+                         "stream (DESIGN.md §9.8); --no-packed drains "
+                         "groups sequentially (the A/B baseline)")
     args = ap.parse_args()
 
     # three sub-fleets: malodor classification on the 1-bit core (long
@@ -35,12 +40,15 @@ def main():
         FleetGroup(workload="MC", core="SERV", n_items=args.items, seed=0),
         FleetGroup(workload="WQ", core="QERV", n_items=args.items, seed=1),
         FleetGroup(workload="SI", core="HERV", n_items=args.items, seed=2),
-    ), chunk=args.chunk, seg_steps=args.seg_steps, stepper=args.stepper)
+    ), chunk=args.chunk, seg_steps=args.seg_steps, stepper=args.stepper,
+        packed=args.packed)
 
     mesh = make_host_mesh()
     report = run_plan(plan, mesh=mesh)
 
-    print(f"[fleet] {report.n_items} items on mesh {dict(mesh.shape)}")
+    mode = "packed" if args.packed else "sequential"
+    print(f"[fleet] {report.n_items} items on mesh {dict(mesh.shape)} "
+          f"({mode} runtime)")
     mc = report.groups[0].result
     print(f"[fleet] MC malodor score histogram: "
           f"{np.bincount(mc.out, minlength=5)}")

@@ -49,13 +49,30 @@ def lane_specs(mesh: Mesh, state):
     device_put layouts and as shard_map in/out specs (fleet/engine.py)
     — the same specs serve every segment stepper, including the fused
     Pallas kernel, whose lane-tile grid runs inside each device's shard
-    (DESIGN.md §9.7).
+    (DESIGN.md §9.7). The packed fleet runtime's per-lane fields
+    (`iss.PackedState.prog_id` / `.max_steps`, §9.8) are ordinary lane
+    leaves — dim 0 is the lane axis — so the same rule shards them with
+    no special casing; only the program bank is different (see
+    `bank_specs`).
     """
     axes = tuple(mesh.axis_names)
 
     def one(leaf):
         return P(axes, *([None] * (leaf.ndim - 1)))
     return jax.tree.map(one, state)
+
+
+def bank_specs(mesh: Mesh, tree):
+    """Program-bank layout: replicate every leaf on every device.
+
+    The packed runtime's bank (padded program rows) and per-program
+    code-length vector are read by EVERY lane every step — sharding them
+    would put a collective inside the segment while_loop, where the
+    whole engine design is zero-collective data parallelism (DESIGN.md
+    §9.6/§9.8). Banks are tiny (programs x words), so replication is
+    free; used as shard_map in_specs alongside `lane_specs`.
+    """
+    return jax.tree.map(lambda _: P(), tree)
 
 
 def lane_shardings(mesh: Mesh, state):

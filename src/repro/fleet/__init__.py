@@ -4,19 +4,26 @@ Replaces the one-shot `flexibits.fleet.run_fleet_sharded` hot path with a
 chunked, segment-early-exit, heterogeneity-aware engine:
 
 - `engine.run_stream`   — chunked streaming executor (host memory O(chunk))
-- `plan.FleetPlan`      — heterogeneous (workload, core) sub-fleets
-- `plan.run_plan`       — drive a plan through the engine
+- `engine.run_packed`   — packed multi-program runtime: every group of a
+                          heterogeneous plan in ONE stream (program bank,
+                          per-lane prog_id, admission scheduler, §9.8)
+- `plan.FleetPlan`      — heterogeneous (workload, core) sub-fleets;
+                          `run_plan` routes through the packed runtime by
+                          default (`packed=False` = sequential baseline)
 - `report.FleetReport`  — per-group cycle/energy tallies priced through
-                          core/carbon.py and core/planner.py
+                          core/carbon.py and core/planner.py, with packed
+                          whole-run stats when the plan ran packed
 """
-from repro.fleet.engine import (STEPPERS, FleetResult, array_source,
+from repro.fleet.engine import (STEPPERS, FleetResult, PackedGroup,
+                                PackedStats, array_source, run_packed,
                                 run_stream, run_workload_stream,
                                 workload_source)
 from repro.fleet.plan import FleetGroup, FleetPlan, run_plan
 from repro.fleet.report import FleetReport, GroupReport
 
 __all__ = [
-    "STEPPERS", "FleetResult", "array_source", "run_stream",
-    "run_workload_stream", "workload_source",
+    "STEPPERS", "FleetResult", "PackedGroup", "PackedStats",
+    "array_source", "run_packed", "run_stream", "run_workload_stream",
+    "workload_source",
     "FleetGroup", "FleetPlan", "run_plan", "FleetReport", "GroupReport",
 ]

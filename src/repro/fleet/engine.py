@@ -17,6 +17,13 @@ This engine fixes both (DESIGN.md §9):
   lane-steps track the fleet's *actual* halt distribution instead of the
   worst case. Segmented execution retires the exact instruction sequence
   of `iss.run`, so final memories are bit-exact with the monolithic path.
+
+- **Packed multi-program runtime** (`run_packed`, DESIGN.md §9.8). A
+  heterogeneous `FleetPlan` no longer drains group by group: programs
+  are padded into a bank, every lane carries its program row + step
+  budget, and freed lanes are backfilled with items from ANY pending
+  group, so one group's halt-time tail hides behind the others' backlog
+  and the whole plan runs as one stream.
 """
 from __future__ import annotations
 
@@ -30,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.distributed import sharding as dsharding
 from repro.flexibench.base import Workload
@@ -53,20 +60,47 @@ def array_source(mems: np.ndarray) -> Source:
     return src
 
 
-def workload_source(w: Workload, seed: int = 0) -> Source:
+def workload_source(w: Workload, seed: int = 0,
+                    gen_block: int = 256) -> Source:
     """O(chunk) on-demand input generation for one workload.
 
-    Item i is seeded by (seed, i), so every item's inputs are a pure
-    function of its index — the fleet is identical no matter how the
-    engine's refill boundaries slice the stream (chunk/seg_steps are
-    pure performance knobs).
+    Generation is batched over fixed *aligned* blocks of `gen_block`
+    items: item i's inputs are row `i % gen_block` of
+    `w.gen_inputs(default_rng([seed, i // gen_block]), gen_block)`. The
+    aligned block an item falls in is a pure function of its index, so
+    the fleet is identical no matter how the engine's refill boundaries
+    slice the stream (chunk/seg_steps are pure performance knobs) —
+    while the host hot path pays one Generator construction and one
+    vectorized `gen_inputs` call per block instead of per item.
+    `gen_block` is part of the stream's identity (a different block size
+    is a different — equally valid — fleet), not an engine tuning knob.
+
+    The last generated block is cached: the engine consumes items in
+    stream order, so a request straddling a block boundary reuses the
+    cached block instead of regenerating it.
     """
     base = w.initial_memory(np.zeros(w.n_inputs, np.int32))
+    gen_block = max(1, gen_block)
+    cache = {"blk": -1, "xs": None}
+
+    def block(blk: int) -> np.ndarray:
+        if cache["blk"] != blk:
+            rng = np.random.default_rng([seed, blk])
+            cache["xs"] = np.asarray(w.gen_inputs(rng, gen_block), np.int32)
+            cache["blk"] = blk
+        return cache["xs"]
 
     def src(start: int, count: int) -> np.ndarray:
-        xs = np.stack([
-            w.gen_inputs(np.random.default_rng([seed, i]), 1)[0]
-            for i in range(start, start + count)])
+        if count <= 0:
+            return np.zeros((0, base.size), np.int32)
+        parts = []
+        i = start
+        while i < start + count:
+            blk, off = divmod(i, gen_block)
+            k = min(gen_block - off, start + count - i)
+            parts.append(block(blk)[off:off + k])
+            i += k
+        xs = parts[0] if len(parts) == 1 else np.concatenate(parts)
         mems = np.tile(base, (count, 1))
         mems[:, :xs.shape[1]] = xs
         return mems
@@ -92,6 +126,7 @@ class _Prefetcher:
         self._n = n_items
         self._block = max(1, block)
         self._cursor = 0          # next un-requested item
+        self._taken = 0           # items handed to the engine so far
         self._buf: Optional[np.ndarray] = None
         self._off = 0
         self._fut = None
@@ -110,7 +145,19 @@ class _Prefetcher:
             self._fut = None
 
     def take(self, count: int) -> np.ndarray:
-        """Next `count` item memories, in stream order."""
+        """Next `count` item memories, in stream order.
+
+        Requests past the declared stream length fail loudly with the
+        full cursor state — "exhausted" alone is undebuggable when a
+        plan/group/source disagrees with the engine about `n_items`.
+        """
+        if self._taken + count > self._n:
+            raise RuntimeError(
+                f"source stream exhausted: requested {count} item(s) at "
+                f"stream cursor {self._taken}, but the source holds only "
+                f"{self._n} item(s) "
+                f"({self._n - self._taken} item(s) remaining)")
+        self._taken += count
         if self._ex is None:
             start = self._cursor
             self._cursor += count
@@ -119,7 +166,10 @@ class _Prefetcher:
         while count > 0:
             if self._buf is None or self._off >= len(self._buf):
                 if self._fut is None:
-                    raise RuntimeError("source stream exhausted")
+                    raise RuntimeError(
+                        f"source stream exhausted: no fetch in flight at "
+                        f"stream cursor {self._taken}, request cursor "
+                        f"{self._cursor}, n_items={self._n}")
                 self._buf = np.asarray(self._fut.result(), np.int32)
                 self._off = 0
                 self._submit()          # refill the second buffer now
@@ -184,71 +234,6 @@ class FleetResult:
         return self.n_items / self.wall_s if self.wall_s > 0 else float("inf")
 
 
-def _lane_state_specs(mesh: Mesh, mem_words: int):
-    """Shard specs for a chunk ISSState, derived from the real state
-    constructor (via eval_shape) so field set and ranks can never drift
-    from what run_stream actually passes in."""
-    abstract = jax.eval_shape(
-        lambda: _fresh_chunk(np.zeros((1, mem_words), np.int32),
-                             np.ones(1, bool)))
-    return dsharding.lane_specs(mesh, abstract)
-
-
-@functools.lru_cache(maxsize=None)
-def _segment_runner(stepper: str, chunk: int, seg_steps: int,
-                    max_steps: int, mem_words: int,
-                    mesh: Optional[Mesh], subset):
-    """Compiled segment runner, cached per engine configuration.
-
-    One factory for every (stepper, mesh) combination so heterogeneous
-    `FleetPlan` runs stop retracing per group: two groups that share
-    (stepper, chunk, seg_steps, max_steps, mem_words, mesh, opcode
-    subset) reuse the exact same jitted callable, and the jit cache
-    inside it never sees a new python closure per `run_stream` call.
-    `chunk` and `mem_words` only describe the lane-pool shape (the body
-    never reads them — jit specializes on the traced state shapes), but
-    keying on them keeps one compiled trace per callable.
-
-    Steppers: "branchless" — lane-parallel masked-select while_loop
-    (DESIGN.md §9.5); "pallas" — fused-segment kernel holding lane state
-    resident for the whole segment (§9.7); "switch" — the legacy vmapped
-    lax.switch interpreter. With a mesh the runner is shard_map'd: each
-    device owns chunk/n_devices lanes and runs its own segment, so a
-    device whose lanes all halt exits immediately instead of being
-    dragged along by a global (all-reduced) loop condition, which is
-    what the GSPMD lowering of the same code does (§9.6). No collectives
-    are needed: the engine is pure data parallelism over items.
-    """
-    def seg(code, state):
-        if stepper == "switch":
-            return jax.vmap(lambda s: iss.run_segment(
-                code, s, seg_steps, max_steps))(state)
-        if stepper == "pallas":
-            return iss_stepper.iss_segment(
-                code, state, seg_steps=seg_steps, max_steps=max_steps,
-                subset=subset)
-        return iss.run_segment_lanes(code, state, seg_steps, max_steps,
-                                     subset)
-
-    if mesh is None:
-        return jax.jit(seg, donate_argnums=(1,))
-    specs = _lane_state_specs(mesh, mem_words)
-    fn = shard_map(seg, mesh=mesh, in_specs=(P(), specs),
-                   out_specs=specs, check_rep=False)
-    return jax.jit(fn, donate_argnums=(1,))
-
-
-@functools.partial(jax.jit, static_argnames=("max_steps",))
-def _done_count(state: iss.ISSState, *, max_steps: int):
-    """Scalar count of done lanes (halted or step-budget exhausted).
-
-    The engine's per-segment host sync: comparing this single int32
-    against the host-known value tells whether any lane finished this
-    segment — only then is the O(chunk) halted/n_instr harvest pulled.
-    """
-    return (state.halted | (state.n_instr >= max_steps)).sum()
-
-
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _refill(state: iss.ISSState, replace, new_mems) -> iss.ISSState:
     """Reset `replace` lanes to a fresh item (mem from new_mems)."""
@@ -275,13 +260,6 @@ def _fresh_chunk(mems: np.ndarray, active: np.ndarray) -> iss.ISSState:
         n_two_stage=jnp.zeros((n,), iss.I32),
         mix=jnp.zeros((n, len(iss.MIX_CLASSES)), iss.I32),
     )
-
-
-def _shard_state(state: iss.ISSState, mesh: Mesh) -> iss.ISSState:
-    """Lay the lane axis out over every mesh axis (pure data parallelism),
-    per the fleet-lane rule in distributed/sharding.py."""
-    return jax.tree.map(jax.device_put, state,
-                        dsharding.lane_shardings(mesh, state))
 
 
 def run_stream(code: np.ndarray, source: Source, *, n_items: int,
@@ -311,144 +289,427 @@ def run_stream(code: np.ndarray, source: Source, *, n_items: int,
     overlaps host-side source generation with device segments (double
     buffering).
 
-    Host<->device sync per segment is one scalar: the done-lane count.
-    The O(chunk) halted/n_instr/mem harvest only happens on segments
-    where that count says some lane actually finished.
+    Implemented as the single-group special case of the packed
+    multi-program runtime (`run_packed`, DESIGN.md §9.8) — one stream
+    loop serves both, so the sync/harvest/refill subtleties exist in
+    exactly one place — with the run's whole-pool accounting (lane-step
+    slots including padding lanes, segment count, measured wall clock)
+    folded back into the returned `FleetResult`. Host<->device sync per
+    segment stays one scalar: the done-lane count.
     """
+    results, stats = run_packed(
+        [PackedGroup(code=code, source=source, n_items=n_items,
+                     max_steps=max_steps, mem_words=mem_words,
+                     out_addr=out_addr)],
+        chunk=chunk, seg_steps=seg_steps, keep_state=keep_state,
+        mesh=mesh, stepper=stepper, subset=subset, prefetch=prefetch)
+    return dataclasses.replace(
+        results[0], lane_steps=stats.lane_steps,
+        n_segments=stats.n_segments, chunk=stats.chunk,
+        wall_s=stats.wall_s)
+
+
+# ---------------------------------------------------------------------------
+# Packed multi-program fleet runtime (DESIGN.md §9.8)
+#
+# `run_stream` executes ONE program; a heterogeneous FleetPlan run group
+# by group pays each group's tail idle (the last segments where only a
+# few long-running items hold the whole lane pool), its own retrace, and
+# its own host<->device round-trips. The packed runtime multiplexes every
+# group through one stream: programs live in a padded program bank, each
+# lane carries the bank row it is executing (`iss.PackedState.prog_id`)
+# plus its own step budget, and the admission scheduler backfills every
+# freed lane with an item from ANY pending group — proportional to the
+# groups' remaining backlogs, so all groups drain together and the tail
+# of one group is hidden behind the backlog of the others.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedGroup:
+    """One group's inputs to the packed runtime (engine-level: program +
+    item source; fleet/plan.py builds these from a FleetPlan)."""
+    code: np.ndarray                  # program words (uint32 or int32)
+    source: Source
+    n_items: int
+    max_steps: int
+    mem_words: int
+    out_addr: Optional[int] = None
+
+
+@dataclasses.dataclass
+class PackedStats:
+    """Whole-run accounting of one packed stream (the per-group
+    `FleetResult`s carry only the lane-step slots attributable to their
+    own active lanes; idle/padding slots belong to the run)."""
+    n_groups: int
+    n_progs: int
+    bank_width: int
+    lane_steps: int               # chunk x max-step-delta, summed
+    n_segments: int
+    chunk: int
+    seg_steps: int
+    wall_s: float
+    stepper: str
+    n_devices: int
+
+
+def _apportion(slots: int, remaining) -> np.ndarray:
+    """Admission policy: split `slots` free lanes over groups
+    proportionally to their remaining backlogs (largest-remainder
+    rounding, ties to the lower group index — deterministic).
+
+    Proportional shares keep every pending group flowing and drain all
+    groups at roughly the same time, so no group is left to run its tail
+    alone at the end of the stream. Per-group results do not depend on
+    the policy at all (item i of group g is a pure function of the
+    group's source), only wall-clock does.
+    """
+    remaining = np.asarray(remaining, np.int64)
+    total = int(remaining.sum())
+    slots = min(int(slots), total)
+    take = np.zeros(len(remaining), np.int64)
+    if slots <= 0:
+        return take
+    quota = slots * remaining / total
+    take = np.minimum(np.floor(quota).astype(np.int64), remaining)
+    left = slots - int(take.sum())
+    if left > 0:
+        frac = np.where(remaining > take, quota - take, -1.0)
+        for g in np.argsort(-frac, kind="stable")[:left]:
+            take[g] += 1
+    return take
+
+
+def _fresh_packed(mems: np.ndarray, active: np.ndarray,
+                  prog_id: np.ndarray,
+                  max_steps: np.ndarray) -> iss.PackedState:
+    return iss.PackedState(
+        lanes=_fresh_chunk(mems, active),
+        prog_id=jnp.asarray(prog_id, iss.I32),
+        max_steps=jnp.asarray(max_steps, iss.I32))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _refill_packed(state: iss.PackedState, replace, new_mems, new_prog,
+                   new_ms) -> iss.PackedState:
+    """Reset `replace` lanes to a fresh item of (possibly) another group:
+    new memory image, bank row, and step budget."""
+    return iss.PackedState(
+        lanes=_refill(state.lanes, replace, new_mems),
+        prog_id=jnp.where(replace, new_prog, state.prog_id),
+        max_steps=jnp.where(replace, new_ms, state.max_steps))
+
+
+@jax.jit
+def _done_count_packed(state: iss.PackedState):
+    """Scalar count of done lanes (halted or own step budget exhausted;
+    padding lanes carry budget 0 and count as done).
+
+    The engine's per-segment host sync: comparing this single int32
+    against the host-known value tells whether any lane finished this
+    segment — only then is the O(chunk) harvest pulled."""
+    return (state.lanes.halted
+            | (state.lanes.n_instr >= state.max_steps)).sum()
+
+
+def _packed_state_specs(mesh: Mesh, mem_words: int):
+    """Shard specs for a packed lane pool, derived from the real state
+    constructor (via eval_shape) so the new lane fields (prog_id,
+    max_steps) can never drift from what run_packed actually passes."""
+    abstract = jax.eval_shape(
+        lambda: _fresh_packed(np.zeros((1, mem_words), np.int32),
+                              np.ones(1, bool), np.zeros(1, np.int32),
+                              np.ones(1, np.int32)))
+    return dsharding.lane_specs(mesh, abstract)
+
+
+@functools.lru_cache(maxsize=None)
+def _packed_segment_runner(stepper: str, chunk: int, seg_steps: int,
+                           mem_words: int, n_progs: int, bank_width: int,
+                           mesh: Optional[Mesh], subset):
+    """Compiled packed segment runner, cached per engine configuration.
+
+    The bank, per-program code lengths, and per-program memory bounds
+    are traced *inputs* (not closure constants), so two plans that share
+    shapes and opcode subset reuse one compiled callable even with
+    different programs. Per-lane `max_steps` lives in the state, so the
+    budget never appears in the cache key at all — one compiled runner
+    serves every heterogeneous budget mix.
+    """
+    def seg(bank, code_len, mem_len, state):
+        if stepper == "switch":
+            lanes = jax.vmap(
+                lambda p, m, l: iss.run_segment_banked(
+                    bank, code_len, p, m, l, seg_steps, mem_len)
+            )(state.prog_id, state.max_steps, state.lanes)
+            return iss.PackedState(lanes=lanes, prog_id=state.prog_id,
+                                   max_steps=state.max_steps)
+        if stepper == "pallas":
+            return iss_stepper.iss_segment_banked(
+                bank, code_len, state, seg_steps=seg_steps, subset=subset,
+                mem_len=mem_len)
+        return iss.run_segment_lanes_banked(bank, code_len, state,
+                                            seg_steps, subset, mem_len)
+
+    if mesh is None:
+        return jax.jit(seg, donate_argnums=(3,))
+    specs = _packed_state_specs(mesh, mem_words)
+    bspecs = dsharding.bank_specs(mesh, (0, 0, 0))
+    fn = shard_map(seg, mesh=mesh, in_specs=(*bspecs, specs),
+                   out_specs=specs, check_rep=False)
+    return jax.jit(fn, donate_argnums=(3,))
+
+
+def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
+               keep_state: bool = False, mesh: Optional[Mesh] = None,
+               stepper: str = "branchless",
+               subset: Optional[frozenset] = None,
+               prefetch: bool = True):
+    """Execute every `PackedGroup` through ONE packed stream.
+
+    Returns `(results, stats)`: `results[g]` is a per-group `FleetResult`
+    bit-exact with what `run_stream` would produce for group g alone —
+    identical per-item instruction/timing/mix tallies and final state
+    (`tests/test_packed.py` pins this three ways) — and `stats` is the
+    whole-run `PackedStats`.
+
+    The program bank holds one padded row per group; every stepper
+    fetches through the per-program clamp (`iss.fetch_banked`), bounds
+    each lane's data-memory ports at its group's own `mem_words` (so
+    clamp-on-read / drop-on-write happen at the program's boundary even
+    though the pool memory is padded to the largest group's), and the
+    branchless/pallas steppers compile ONE graph specialized to the
+    *union* opcode subset of the bank (a superset of every row's subset,
+    so per-group bit-exactness is preserved). Lane admission backfills
+    freed lanes from any pending group (`_apportion`); per-group sources
+    prefetch concurrently, each double-buffered as in `run_stream`.
+
+    Per-group accounting: `lane_steps`/`n_segments` count only segments
+    slots where the group had active lanes; `wall_s` splits the measured
+    whole-run wall clock proportionally to retired instructions (the
+    sums over groups match the run, up to idle-lane slots, which belong
+    to `stats`).
+    """
+    groups = list(groups)
+    if not groups:
+        raise ValueError("run_packed needs at least one group")
     if seg_steps < 1:
         raise ValueError("seg_steps must be >= 1")
     if chunk < 1:
         raise ValueError("chunk must be >= 1")
     if stepper not in STEPPERS:
         raise ValueError(f"stepper must be one of {STEPPERS}")
-    chunk = min(chunk, max(n_items, 1))
+
+    n_groups = len(groups)
+    counts = np.array([g.n_items for g in groups], np.int64)
+    total_items = int(counts.sum())
+    if total_items == 0:
+        empty = [FleetResult(
+            n_items=0, n_instr=np.zeros(0, np.int64),
+            n_two_stage=np.zeros(0, np.int64), halted=np.zeros(0, bool),
+            out=np.zeros(0, np.int32),
+            mix=np.zeros(len(iss.MIX_CLASSES), np.int64), lane_steps=0,
+            n_segments=0, chunk=0, seg_steps=seg_steps, wall_s=0.0,
+            stepper=stepper) for _ in groups]
+        return empty, PackedStats(
+            n_groups=n_groups, n_progs=n_groups, bank_width=0,
+            lane_steps=0, n_segments=0, chunk=0, seg_steps=seg_steps,
+            wall_s=0.0, stepper=stepper, n_devices=1)
+    mem_words = max(g.mem_words for g in groups)
+    bank_np, code_len_np = iss.pack_programs([g.code for g in groups])
+    if subset is None:
+        subset = frozenset().union(
+            *(iss.opcode_subset(g.code) for g in groups))
+    bank = jnp.asarray(bank_np)
+    code_len = jnp.asarray(code_len_np)
+    # per-program memory bounds: lanes of a small-memory group keep
+    # clamp-on-read / drop-on-write at their OWN word count even though
+    # the pool memory is padded to the largest group's
+    mem_len = jnp.asarray([g.mem_words for g in groups], iss.I32)
+    ms_of = np.array([g.max_steps for g in groups], np.int64)
+
+    chunk = min(chunk, max(total_items, 1))
     n_dev = 1
     if mesh is not None:
         n_dev = int(np.prod(list(mesh.shape.values())))
     round_to = n_dev
     if stepper == "pallas" and chunk > 128:
-        # keep the pallas lane-tile grid wide: a prime-ish chunk would
-        # tile at its largest small divisor (worst case 1 lane/kernel).
-        # Rounding the pool up to a 128-lane multiple (lcm'd with the
-        # mesh) costs only inert padding lanes, which never step.
+        # same wide-lane-tile rule as run_stream: pad the pool to a
+        # 128-multiple (lcm'd with the mesh) instead of tiling at a
+        # prime-ish chunk's largest small divisor
         round_to = int(128 * n_dev // np.gcd(128, n_dev))
     if round_to > 1:
         chunk = -(-chunk // round_to) * round_to
 
-    code_np = np.asarray(code)
-    if stepper in ("branchless", "pallas") and subset is None:
-        subset = iss.opcode_subset(code_np)
-    code = jnp.asarray(code_np.view(np.int32))
+    seg_fn = _packed_segment_runner(stepper, chunk, seg_steps, mem_words,
+                                    n_groups, bank_np.shape[1], mesh,
+                                    subset)
 
-    seg_fn = _segment_runner(stepper, chunk, seg_steps, max_steps,
-                             mem_words, mesh, subset)
-
-    # per-item result collectors (scalars: O(fleet))
-    r_instr = np.zeros(n_items, np.int64)
-    r_two = np.zeros(n_items, np.int64)
-    r_halt = np.zeros(n_items, bool)
-    r_out = np.zeros(n_items, np.int32)
-    r_mix = np.zeros(len(iss.MIX_CLASSES), np.int64)
+    # per-group per-item collectors (scalars: O(fleet))
+    r_instr = [np.zeros(n, np.int64) for n in counts]
+    r_two = [np.zeros(n, np.int64) for n in counts]
+    r_halt = [np.zeros(n, bool) for n in counts]
+    r_out = [np.zeros(n, np.int32) for n in counts]
+    r_mix = [np.zeros(len(iss.MIX_CLASSES), np.int64) for _ in groups]
+    g_lane_steps = np.zeros(n_groups, np.int64)
+    g_segments = np.zeros(n_groups, np.int64)
     if keep_state:
-        r_mem = np.zeros((n_items, mem_words), np.int32)
-        r_regs = np.zeros((n_items, 16), np.int32)
-        r_pc = np.zeros(n_items, np.int32)
-        r_mix_items = np.zeros((n_items, len(iss.MIX_CLASSES)), np.int32)
+        r_mem = [np.zeros((n, g.mem_words), np.int32)
+                 for n, g in zip(counts, groups)]
+        r_regs = [np.zeros((n, 16), np.int32) for n in counts]
+        r_pc = [np.zeros(n, np.int32) for n in counts]
+        r_mix_items = [np.zeros((n, len(iss.MIX_CLASSES)), np.int32)
+                       for n in counts]
 
     t0 = time.perf_counter()
-
-    # close the prefetch worker even when a segment raises (XLA OOM, bad
-    # source shapes): a leaked non-daemon thread outlives the call
-    pref = _Prefetcher(source, n_items, block=chunk, background=prefetch)
+    prefs = [_Prefetcher(g.source, g.n_items,
+                         block=max(1, min(chunk, g.n_items)),
+                         background=prefetch)
+             for g in groups]
     try:
-        # initial fill
-        cursor = min(chunk, n_items)
-        first = np.zeros((chunk, mem_words), np.int32)
-        if cursor:
-            first[:cursor] = pref.take(cursor)
-        ids = np.full(chunk, -1, np.int64)
-        ids[:cursor] = np.arange(cursor)
-        state = _fresh_chunk(first, ids >= 0)
+        cursor = np.zeros(n_groups, np.int64)   # next item per group
+        ids = np.full(chunk, -1, np.int64)      # item index within group
+        lane_group = np.full(chunk, -1, np.int64)
+        lane_ms = np.zeros(chunk, np.int64)     # host copy of budgets
+
+        def admit(state, free_lanes):
+            """Backfill `free_lanes` with items from any pending group."""
+            take = _apportion(len(free_lanes), counts - cursor)
+            n_new = int(take.sum())
+            if n_new == 0:
+                return state, 0
+            new_mems = np.zeros((chunk, mem_words), np.int32)
+            new_prog = np.zeros(chunk, np.int32)
+            new_ms = np.zeros(chunk, np.int32)
+            replace = np.zeros(chunk, bool)
+            off = 0
+            for g in np.nonzero(take)[0]:
+                k = int(take[g])
+                lanes = free_lanes[off:off + k]
+                off += k
+                new_mems[lanes, :groups[g].mem_words] = prefs[g].take(k)
+                new_prog[lanes] = g
+                new_ms[lanes] = ms_of[g]
+                replace[lanes] = True
+                ids[lanes] = np.arange(cursor[g], cursor[g] + k)
+                lane_group[lanes] = g
+                lane_ms[lanes] = ms_of[g]
+                cursor[g] += k
+            if state is None:
+                return (new_mems, replace, new_prog, new_ms), n_new
+            return _refill_packed(state, jnp.asarray(replace),
+                                  jnp.asarray(new_mems),
+                                  jnp.asarray(new_prog),
+                                  jnp.asarray(new_ms)), n_new
+
+        # initial fill (admit into a fresh pool; padding lanes carry
+        # budget 0 and stay parked forever)
+        (first, active0, prog0, ms0), _ = admit(None, np.arange(chunk))
+        state = _fresh_packed(first, active0, prog0, ms0)
         if mesh is not None:
-            state = _shard_state(state, mesh)
+            state = jax.tree.map(jax.device_put, state,
+                                 dsharding.lane_shardings(mesh, state))
 
         prev_instr = np.zeros(chunk, np.int64)
         lane_steps = 0
         n_segments = 0
-        # host-known done-lane count: padding + retired-but-not-refilled
-        # lanes stay halted on device, so done == chunk - #active always
-        # holds right after a harvest
         expected_done = chunk - int((ids >= 0).sum())
 
         while (ids >= 0).any():
-            state = seg_fn(code, state)
+            state = seg_fn(bank, code_len, mem_len, state)
             n_segments += 1
+            active = ids >= 0
+            act_per_group = np.bincount(lane_group[active],
+                                        minlength=n_groups)
+            g_segments += act_per_group > 0
 
-            # single-scalar sync: if no lane finished this segment, every
-            # active lane ran exactly seg_steps (the segment loop only
-            # stops early when lanes halt or exhaust max_steps — both
-            # would raise the done count), so the O(chunk) harvest pulls
-            # are skipped entirely
-            if int(_done_count(state, max_steps=max_steps)) == expected_done:
+            # single-scalar sync, as in run_stream: if no lane finished,
+            # every active lane ran exactly seg_steps
+            if int(_done_count_packed(state)) == expected_done:
                 lane_steps += chunk * seg_steps
-                prev_instr[ids >= 0] += seg_steps
+                g_lane_steps += act_per_group * seg_steps
+                prev_instr[active] += seg_steps
                 continue
 
-            halted = np.asarray(state.halted)
-            n_instr = np.asarray(state.n_instr, np.int64)
-            # SIMD cost: all lanes are occupied for the longest path this
-            # segment took on any lane
-            lane_steps += chunk * int((n_instr - prev_instr).max(initial=0))
+            halted = np.asarray(state.lanes.halted)
+            n_instr = np.asarray(state.lanes.n_instr, np.int64)
+            delta = int((n_instr - prev_instr).max(initial=0))
+            lane_steps += chunk * delta
+            g_lane_steps += act_per_group * delta
             prev_instr = n_instr
 
-            active = ids >= 0
-            done = active & (halted | (n_instr >= max_steps))
+            done = active & (halted | (n_instr >= lane_ms))
             idx = np.nonzero(done)[0]
             if idx.size:
-                items = ids[idx]
-                r_instr[items] = n_instr[idx]
-                r_two[items] = np.asarray(state.n_two_stage, np.int64)[idx]
-                r_halt[items] = halted[idx]
-                mix_rows = np.asarray(state.mix[jnp.asarray(idx)], np.int64)
-                r_mix += mix_rows.sum(0)
-                if out_addr is not None:
-                    r_out[items] = np.asarray(state.mem[:, out_addr])[idx]
+                jidx = jnp.asarray(idx)
+                two = np.asarray(state.lanes.n_two_stage, np.int64)
+                mix_rows = np.asarray(state.lanes.mix[jidx], np.int64)
+                # one O(done x mem_words) row gather serves every
+                # group's out-word read (and the keep_state memories) —
+                # not a full O(chunk) column pull per group
+                need_mem = keep_state or any(
+                    g.out_addr is not None for g in groups)
+                if need_mem:
+                    mem_rows = np.asarray(state.lanes.mem[jidx])
                 if keep_state:
-                    jidx = jnp.asarray(idx)
-                    r_mem[items] = np.asarray(state.mem[jidx])
-                    r_regs[items] = np.asarray(state.regs[jidx])
-                    r_pc[items] = np.asarray(state.pc)[idx]
-                    r_mix_items[items] = mix_rows
+                    regs_rows = np.asarray(state.lanes.regs[jidx])
+                    pc_rows = np.asarray(state.lanes.pc)[idx]
+                for g in np.unique(lane_group[idx]):
+                    sel = lane_group[idx] == g
+                    lg = idx[sel]
+                    items = ids[lg]
+                    r_instr[g][items] = n_instr[lg]
+                    r_two[g][items] = two[lg]
+                    r_halt[g][items] = halted[lg]
+                    r_mix[g] += mix_rows[sel].sum(0)
+                    if groups[g].out_addr is not None:
+                        r_out[g][items] = \
+                            mem_rows[sel][:, groups[g].out_addr]
+                    if keep_state:
+                        r_mem[g][items] = \
+                            mem_rows[sel][:, :groups[g].mem_words]
+                        r_regs[g][items] = regs_rows[sel]
+                        r_pc[g][items] = pc_rows[sel]
+                        r_mix_items[g][items] = mix_rows[sel]
 
-                # compact: retire done lanes, refill from the stream
-                n_new = min(idx.size, n_items - cursor)
+                # retire done lanes, then backfill from any pending group
                 ids[idx] = -1
-                if n_new:
-                    lanes = idx[:n_new]
-                    new_mems = np.zeros((chunk, mem_words), np.int32)
-                    new_mems[lanes] = pref.take(n_new)
-                    replace = np.zeros(chunk, bool)
-                    replace[lanes] = True
-                    ids[lanes] = np.arange(cursor, cursor + n_new)
-                    cursor += n_new
-                    prev_instr[lanes] = 0
-                    state = _refill(state, jnp.asarray(replace),
-                                    jnp.asarray(new_mems))
+                lane_group[idx] = -1
+                lane_ms[idx] = 0
+                state, _ = admit(state, idx)
+                # refilled lanes restart at n_instr=0; retired-but-empty
+                # lanes keep their frozen device counters
+                prev_instr[idx] = np.where(ids[idx] >= 0, 0,
+                                           prev_instr[idx])
             expected_done = chunk - int((ids >= 0).sum())
     finally:
-        pref.close()
+        for p in prefs:
+            p.close()
 
     wall_s = time.perf_counter() - t0
-    return FleetResult(
-        n_items=n_items, n_instr=r_instr, n_two_stage=r_two, halted=r_halt,
-        out=r_out, mix=r_mix, lane_steps=lane_steps, n_segments=n_segments,
-        chunk=chunk, seg_steps=seg_steps, wall_s=wall_s,
-        stepper=stepper, n_devices=n_dev,
-        mems=r_mem if keep_state else None,
-        regs=r_regs if keep_state else None,
-        pc=r_pc if keep_state else None,
-        mix_items=r_mix_items if keep_state else None,
-    )
+    busy = np.array([r.sum() for r in r_instr], np.float64)
+    busy_share = busy / max(busy.sum(), 1.0)
+    results = []
+    for g, grp in enumerate(groups):
+        results.append(FleetResult(
+            n_items=grp.n_items, n_instr=r_instr[g], n_two_stage=r_two[g],
+            halted=r_halt[g], out=r_out[g], mix=r_mix[g],
+            lane_steps=int(g_lane_steps[g]), n_segments=int(g_segments[g]),
+            chunk=chunk, seg_steps=seg_steps,
+            wall_s=wall_s * float(busy_share[g]),
+            stepper=stepper, n_devices=n_dev,
+            mems=r_mem[g] if keep_state else None,
+            regs=r_regs[g] if keep_state else None,
+            pc=r_pc[g] if keep_state else None,
+            mix_items=r_mix_items[g] if keep_state else None,
+        ))
+    stats = PackedStats(
+        n_groups=n_groups, n_progs=bank_np.shape[0],
+        bank_width=bank_np.shape[1], lane_steps=lane_steps,
+        n_segments=n_segments, chunk=chunk, seg_steps=seg_steps,
+        wall_s=wall_s, stepper=stepper, n_devices=n_dev)
+    return results, stats
 
 
 def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,
@@ -467,6 +728,7 @@ def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,
     return run_stream(
         w.program.code, workload_source(w, seed), n_items=n_items,
         mem_words=w.total_mem_words,
-        max_steps=max_steps or w.max_steps, chunk=chunk,
+        max_steps=w.max_steps if max_steps is None else max_steps,
+        chunk=chunk,
         seg_steps=seg_steps, out_addr=w.out_addr, keep_state=keep_state,
         mesh=mesh, stepper=stepper, prefetch=prefetch)

@@ -50,7 +50,12 @@ class FleetPlan:
     parallel stepper with per-workload opcode-subset specialization,
     DESIGN.md §9.5), "pallas" (fused-segment kernel, §9.7), or the
     legacy "switch" interpreter for A/B runs; `prefetch` enables
-    double-buffered async host refill (§9.6)."""
+    double-buffered async host refill (§9.6); `packed` (the default)
+    executes ALL groups in one packed multi-program stream — program
+    bank + per-lane prog_id, freed lanes backfilled from any pending
+    group (§9.8) — instead of draining groups sequentially. Per-group
+    results are bit-exact either way (pinned by tests/test_packed.py);
+    `packed=False` keeps the sequential path as the A/B baseline."""
     groups: Sequence[FleetGroup]
     chunk: int = 256
     seg_steps: int = 4096
@@ -58,15 +63,58 @@ class FleetPlan:
     clock_hz: float = 10_000.0
     stepper: str = "branchless"
     prefetch: bool = True
+    packed: bool = True
 
     @property
     def n_items(self) -> int:
         return sum(g.n_items for g in self.groups)
 
 
+def _packed_groups(plan: FleetPlan):
+    """Lower FleetGroups to engine-level PackedGroups (one bank row per
+    group — two groups sharing a workload still get their own rows, so
+    prog_id doubles as the group id for accounting)."""
+    lowered = []
+    resolved = []
+    for g in plan.groups:
+        w, core, lifetime_s, execs_per_day = g.resolve()
+        resolved.append((w, core, lifetime_s, execs_per_day))
+        lowered.append(engine.PackedGroup(
+            code=w.program.code, source=engine.workload_source(w, g.seed),
+            n_items=g.n_items,
+            max_steps=g.max_steps if g.max_steps is not None
+            else w.max_steps,
+            mem_words=w.total_mem_words, out_addr=w.out_addr))
+    return lowered, resolved
+
+
 def run_plan(plan: FleetPlan, mesh: Optional[Mesh] = None,
              keep_state: bool = False) -> FleetReport:
-    """Execute every group through the streaming engine and price it."""
+    """Execute the plan and price it through the carbon report.
+
+    With `plan.packed` (the default) every group runs in ONE packed
+    stream (engine.run_packed) and `fleet/report.py` demuxes the
+    per-lane tallies back into per-group `GroupReport`s; with
+    `packed=False` groups drain sequentially through `run_stream`, one
+    stream each — the A/B baseline the packed runtime is benchmarked
+    (and pinned bit-exact) against.
+    """
+    if plan.packed and plan.groups:
+        lowered, resolved = _packed_groups(plan)
+        results, stats = engine.run_packed(
+            lowered, chunk=plan.chunk, seg_steps=plan.seg_steps,
+            keep_state=keep_state, mesh=mesh, stepper=plan.stepper,
+            prefetch=plan.prefetch)
+        group_reports = [
+            build_group_report(
+                group=g, workload=w, core=core, result=res,
+                lifetime_s=lifetime_s, execs_per_day=execs_per_day,
+                intensity=plan.intensity, clock_hz=plan.clock_hz)
+            for g, (w, core, lifetime_s, execs_per_day), res
+            in zip(plan.groups, resolved, results)]
+        return FleetReport(groups=group_reports, intensity=plan.intensity,
+                           packed=stats)
+
     group_reports = []
     for g in plan.groups:
         w, core, lifetime_s, execs_per_day = g.resolve()

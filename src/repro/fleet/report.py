@@ -11,14 +11,14 @@ running the fleet through the ISS (DESIGN.md §9.4).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List
+from typing import Any, List, Optional
 
 from repro.core import carbon
 from repro.core.planner import CHIP_POWER_W, PUE
 from repro.core.selection import optimal_core
 from repro.flexibench.base import Workload
 from repro.flexibits.cycles import Core
-from repro.fleet.engine import FleetResult
+from repro.fleet.engine import FleetResult, PackedStats
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,8 +79,18 @@ def simulation_footprint_kg(wall_s: float, n_chips: int = 1,
 
 @dataclasses.dataclass(frozen=True)
 class FleetReport:
+    """Fleet-wide pricing + engine accounting.
+
+    From a packed run (DESIGN.md §9.8) the per-group `GroupReport`s are
+    the *demux* of one multiplexed stream: each group's per-item
+    instruction/timing/mix tallies — and therefore every carbon number —
+    are bit-exact with a sequential per-group run, while `packed` holds
+    the whole-run `PackedStats` (total lane-step slots including idle
+    lanes, segment count, wall clock for the single stream).
+    """
     groups: List[GroupReport]
     intensity: float
+    packed: Optional[PackedStats] = None
 
     @property
     def n_items(self) -> int:
@@ -88,6 +98,9 @@ class FleetReport:
 
     @property
     def lane_steps(self) -> int:
+        """Lane-step slots attributed to groups' active lanes. For a
+        packed run, `packed.lane_steps` additionally counts idle/padding
+        slots, which belong to the shared stream rather than a group."""
         return sum(g.result.lane_steps for g in self.groups)
 
     @property
@@ -100,6 +113,8 @@ class FleetReport:
 
     @property
     def wall_s(self) -> float:
+        if self.packed is not None:
+            return self.packed.wall_s      # one stream, measured once
         return sum(g.result.wall_s for g in self.groups)
 
     @property
@@ -140,4 +155,11 @@ class FleetReport:
             f"stepper {'/'.join(steppers)} x{n_dev} dev; "
             f"sim footprint {self.simulation_kg() * 1e3:.3g} g CO2e "
             f"({self.wall_s:.2f}s wall)")
+        if self.packed is not None:
+            p = self.packed
+            lines.append(
+                f"packed runtime: {p.n_groups} groups in one stream "
+                f"(bank {p.n_progs}x{p.bank_width} words), "
+                f"{p.n_segments} segments, {p.lane_steps:,} lane-step "
+                f"slots incl. idle, chunk {p.chunk}")
         return "\n".join(lines)

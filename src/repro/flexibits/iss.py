@@ -19,6 +19,13 @@ scheme into a single kernel per lane tile; any change to the commit
 semantics here must be mirrored there (the instruction-soup tests in
 tests/test_stepper.py pin all three against each other).
 
+All three also run *banked* (DESIGN.md §9.8): lanes fetch from a padded
+multi-program bank through `fetch_banked` (per-program pc clamp), carry
+their program row and step budget in `PackedState`, and retire exactly
+what a single-program pool running their program would — the packed
+fleet runtime multiplexes a whole heterogeneous plan through one lane
+pool on top of this.
+
 Cycle accounting implements the paper's bit-serial timing model
 (cycles.py): per retired instruction, one-stage or two-stage cost for the
 configured datapath width.
@@ -58,6 +65,54 @@ class ISSState(NamedTuple):
     mix: jax.Array         # (8,) int32 per-category retired counts
 
 
+class PackedState(NamedTuple):
+    """Lane pool executing a *bank* of programs (DESIGN.md §9.8).
+
+    The packed fleet runtime multiplexes every group of a heterogeneous
+    `FleetPlan` through one lane pool: each lane carries the bank row of
+    the program it is executing (`prog_id`) and its own retirement
+    budget (`max_steps`, groups differ in step budget), both refilled
+    alongside the architectural state when the admission scheduler
+    assigns the lane a new item.
+    """
+    lanes: ISSState        # lane-batched architectural state
+    prog_id: jax.Array     # (lanes,) int32 bank row per lane
+    max_steps: jax.Array   # (lanes,) int32 per-lane step budget
+
+
+def pack_programs(codes) -> "tuple[np.ndarray, np.ndarray]":
+    """Pad programs into a (n_progs, max_len) int32 bank + length vector.
+
+    Rows are zero-padded; the pad words are unreachable because every
+    banked fetch clamps the pc to the row's own `code_len` (the same
+    clamp-on-read semantics a single-program fetch gets from jax
+    gathers, applied per program — see `fetch_banked`).
+    """
+    rows = [np.asarray(c) for c in codes]
+    rows = [r.view(np.int32) if r.dtype.itemsize == 4 else
+            r.astype(np.uint32).view(np.int32) for r in rows]
+    max_len = max(len(r) for r in rows)
+    bank = np.zeros((len(rows), max_len), np.int32)
+    for i, r in enumerate(rows):
+        bank[i, :len(r)] = r
+    return bank, np.array([len(r) for r in rows], np.int32)
+
+
+def fetch_banked(bank: jax.Array, code_len: jax.Array, prog_id: jax.Array,
+                 pc: jax.Array) -> jax.Array:
+    """Fetch instruction word(s) from a program bank (uint32 out).
+
+    Bit-exact with the single-program fetch `code[pc >> 2]` run against
+    each lane's own program: the word index clamps to that program's
+    `code_len`, not the padded bank width, so a pc past a short
+    program's end reads the program's *own* last word exactly as jax's
+    clamp-on-read gather would. Shape-polymorphic over () and (lanes,).
+    """
+    pword = (_u(pc) >> 2).astype(I32)
+    pword = jnp.clip(pword, 0, code_len[prog_id] - 1)
+    return bank[prog_id, pword].astype(U32)
+
+
 def init_state(mem: jax.Array) -> ISSState:
     return ISSState(
         regs=jnp.zeros(16, I32),
@@ -79,8 +134,15 @@ def _u(v):
     return v.astype(U32)
 
 
-def step(code: jax.Array, s: ISSState) -> ISSState:
-    instr = code[(_u(s.pc) >> 2).astype(I32)].astype(U32)
+def step(code: jax.Array, s: ISSState, *,
+         instr: jax.Array = None, mem_len: jax.Array = None) -> ISSState:
+    # `instr` overrides the fetch (banked runtimes fetch from a program
+    # bank via `fetch_banked`); `mem_len` bounds the data-memory ports at
+    # the lane's OWN word count, so a lane in a pool padded to a larger
+    # memory keeps jax's clamp-on-read / drop-on-write semantics at ITS
+    # program's boundary. Everything else is identical.
+    if instr is None:
+        instr = code[(_u(s.pc) >> 2).astype(I32)].astype(U32)
     ii = instr.astype(I32)
     op = (ii & 0x7F)
     rd = (ii >> 7) & 0xF
@@ -122,7 +184,10 @@ def step(code: jax.Array, s: ISSState) -> ISSState:
     # LOAD: word RMW for sub-word
     def do_load():
         addr = (a + imm_i).astype(I32)
-        word = s.mem[_u(addr).astype(I32) >> 2]
+        widx = _u(addr).astype(I32) >> 2
+        if mem_len is not None:          # per-program clamp-on-read
+            widx = jnp.clip(widx, 0, mem_len - 1)
+        word = s.mem[widx]
         sh8 = ((addr & 3) * 8).astype(U32)
         byte = (_u(word) >> sh8).astype(I32) & 0xFF
         half_sh = ((addr & 2) * 8).astype(U32)
@@ -140,7 +205,9 @@ def step(code: jax.Array, s: ISSState) -> ISSState:
     def do_store():
         addr = (a + imm_s).astype(I32)
         widx = _u(addr).astype(I32) >> 2
-        word = s.mem[widx]
+        ridx = widx if mem_len is None \
+            else jnp.clip(widx, 0, mem_len - 1)
+        word = s.mem[ridx]
         sh8 = ((addr & 3) * 8).astype(U32)
         sh16 = ((addr & 2) * 8).astype(U32)
         bmask = (jnp.asarray(0xFF, U32) << sh8).astype(I32)
@@ -152,6 +219,8 @@ def step(code: jax.Array, s: ISSState) -> ISSState:
                                         ).astype(I32) & hmask),
             lambda: b,
         ])
+        if mem_len is not None:          # per-program drop-on-write
+            neww = jnp.where(widx < mem_len, neww, s.mem[widx])
         return jnp.zeros((), I32), pc4, s.mem.at[widx].set(neww), False
 
     def do_branch():
@@ -464,13 +533,20 @@ def opcode_subset(code) -> frozenset:
 
 def step_branchless(code: jax.Array, s: ISSState,
                     subset: frozenset = None,
-                    active: jax.Array = None) -> ISSState:
+                    active: jax.Array = None, *,
+                    instr: jax.Array = None,
+                    mem_len: jax.Array = None) -> ISSState:
     """One branchless step: bit-exact with `step`, no lax.switch/cond.
 
     `subset` (static) keeps only those opcode classes in the traced graph;
     it must be a superset of `opcode_subset(code)` for bit-exactness.
     `active=False` freezes the state entirely (used by the segment loop to
-    park halted lanes without a pytree-wide post-select).
+    park halted lanes without a pytree-wide post-select). `instr`
+    overrides the fetch (the packed runtime fetches from a program bank
+    with `fetch_banked`) and `mem_len` bounds the memory ports at the
+    lane's own word count (clamp-on-read / drop-on-write at the
+    program's boundary even when the pool's memory is padded wider);
+    the commit pipeline is shared either way.
 
     Bit-exactness is defined over programs whose fetched words decode to
     RV32E opcodes (everything asm.py / FlexiBench emit). For a word whose
@@ -478,18 +554,28 @@ def step_branchless(code: jax.Array, s: ISSState,
     clamped searchsorted dispatches to an arbitrary neighboring class,
     this one retires a no-op — and neither behavior is contractual.
     """
-    instr = code[(_u(s.pc) >> 2).astype(I32)].astype(U32)
+    if instr is None:
+        instr = code[(_u(s.pc) >> 2).astype(I32)].astype(U32)
     d = decode_fields(instr)
     a = s.regs[d.rs1]
     b = s.regs[d.rs2]
     live = jnp.ones((), bool) if active is None else active
 
     def read_word(widx):
+        if mem_len is not None:
+            widx = jnp.clip(widx, 0, mem_len - 1)
         return s.mem[widx]
 
     def write_word(widx, word, neww, is_store):
         # non-stores write word back to itself at index 0: a no-op,
-        # so the scatter needs no predication beyond the value select
+        # so the scatter needs no predication beyond the value select.
+        # With a per-lane mem bound, a store past the lane's OWN word
+        # count also degrades to the no-op write-back (the padded pool
+        # drop-on-write); the clamped-read `word` may land in the pad
+        # region then, which nothing — port, fetch, or demux — ever
+        # reads back.
+        if mem_len is not None:
+            is_store = is_store & (widx < mem_len)
         return s.mem.at[widx].set(jnp.where(is_store, neww, word))
 
     next_pc, wr, writes_rd, mem, halt, two_stage, mix_idx = \
@@ -570,6 +656,69 @@ def run_segment_lanes(code: jax.Array, states: ISSState, seg_steps: int,
     return out
 
 
+def step_lanes_banked(bank: jax.Array, code_len: jax.Array,
+                      states: ISSState, prog_id: jax.Array,
+                      subset: frozenset = None,
+                      active: jax.Array = None,
+                      mem_len: jax.Array = None) -> ISSState:
+    """Branchless step over lanes executing *different* programs.
+
+    One batched bank fetch (`fetch_banked`, per-program pc clamp), then
+    the exact `step_branchless` commit pipeline per lane — so a lane
+    retires precisely what it would retire in a single-program pool
+    running its own program. `subset` must cover the union of the bank's
+    opcode subsets for bit-exactness; `mem_len` (per-LANE word counts)
+    bounds each lane's memory ports at its own program's size.
+    """
+    instr = fetch_banked(bank, code_len, prog_id, states.pc)
+    act = jnp.ones(states.pc.shape, bool) if active is None else active
+    if mem_len is None:
+        return jax.vmap(
+            lambda i, a, s: step_branchless(bank, s, subset, active=a,
+                                            instr=i)
+        )(instr, act, states)
+    return jax.vmap(
+        lambda i, a, m, s: step_branchless(bank, s, subset, active=a,
+                                           instr=i, mem_len=m)
+    )(instr, act, mem_len, states)
+
+
+def run_segment_lanes_banked(bank: jax.Array, code_len: jax.Array,
+                             ps: PackedState, seg_steps: int,
+                             subset: frozenset = None,
+                             mem_len: jax.Array = None) -> PackedState:
+    """Packed segment: up to `seg_steps` banked steps for every lane.
+
+    The packed-runtime counterpart of `run_segment_lanes`: one
+    while_loop over the whole heterogeneous lane pool. Each lane runs
+    its own program (`prog_id`) against its own retirement budget
+    (`ps.max_steps`, a traced per-lane array rather than a static int,
+    because groups in one pool have different budgets); lanes that halt
+    or exhaust their budget are frozen by the `active` mask exactly as
+    in the homogeneous segment loop. `mem_len` (per-PROGRAM word
+    counts, like `code_len`) keeps each lane's memory semantics at its
+    own program's boundary when the pool memory is padded wider.
+    """
+    lane_mlen = None if mem_len is None else mem_len[ps.prog_id]
+
+    def active_of(st: ISSState) -> jax.Array:
+        return (~st.halted) & (st.n_instr < ps.max_steps)
+
+    def cond(c):
+        k, st = c
+        return (k < seg_steps) & active_of(st).any()
+
+    def body(c):
+        k, st = c
+        return k + 1, step_lanes_banked(bank, code_len, st, ps.prog_id,
+                                        subset, active=active_of(st),
+                                        mem_len=lane_mlen)
+
+    _, out = lax.while_loop(cond, body, (jnp.zeros((), I32), ps.lanes))
+    return PackedState(lanes=out, prog_id=ps.prog_id,
+                       max_steps=ps.max_steps)
+
+
 @functools.partial(jax.jit, static_argnums=(2,))
 def run(code: jax.Array, mem: jax.Array, max_steps: int) -> ISSState:
     """Run to ecall or max_steps. code: (P,) uint32; mem: (M,) int32."""
@@ -599,6 +748,31 @@ def run_segment(code: jax.Array, s: ISSState, seg_steps: int,
     def body(c):
         k, st = c
         return k + 1, step(code, st)
+
+    _, out = lax.while_loop(cond, body, (jnp.zeros((), I32), s))
+    return out
+
+
+def run_segment_banked(bank: jax.Array, code_len: jax.Array,
+                       prog_id: jax.Array, max_steps: jax.Array,
+                       s: ISSState, seg_steps: int,
+                       mem_len: jax.Array = None) -> ISSState:
+    """Banked `run_segment`: the lax.switch interpreter fetching from a
+    program bank (scalar state; the packed engine vmaps it per lane).
+    `max_steps` is a traced scalar — each lane brings its own budget;
+    `mem_len` (per-program word counts) bounds the lane's memory ports
+    at its own program's size.
+    """
+    ml = None if mem_len is None else mem_len[prog_id]
+
+    def cond(c):
+        k, st = c
+        return (~st.halted) & (k < seg_steps) & (st.n_instr < max_steps)
+
+    def body(c):
+        k, st = c
+        instr = fetch_banked(bank, code_len, prog_id, st.pc)
+        return k + 1, step(bank, st, instr=instr, mem_len=ml)
 
     _, out = lax.while_loop(cond, body, (jnp.zeros((), I32), s))
     return out

@@ -1,4 +1,4 @@
-"""Fused-segment Pallas ISS stepper (DESIGN.md §9.7).
+"""Fused-segment Pallas ISS stepper (DESIGN.md §9.7, packed bank §9.8).
 
 `iss.run_segment_lanes` is plain XLA: every architectural step of the
 segment `while_loop` re-materializes the full lane-pool `ISSState`
@@ -7,7 +7,7 @@ re-dispatches the step body as dozens of separate HLO ops. This kernel
 executes ALL `seg_steps` architectural steps of a lane tile inside ONE
 `pl.pallas_call` invocation:
 
-- the program text and the tile's regs/pc/mem/halted/counters are read
+- the program *bank* and the tile's regs/pc/mem/halted/counters are read
   from their refs once, live in kernel-resident values (VMEM on TPU) for
   the whole segment, and are written back once at the end;
 - the step body is the branchless one-hot commit scheme ported from
@@ -22,13 +22,24 @@ executes ALL `seg_steps` architectural steps of a lane tile inside ONE
   exits as soon as its own lanes are all halted, mirroring the per-device
   early exit of the shard_map path (§9.6) at tile granularity.
 
+The packed fleet runtime (§9.8) generalizes the fetch: the kernel holds
+the whole multi-program bank resident, every lane carries its `prog_id`
+and its own `max_steps` budget, and the instruction fetch is a one-hot
+reduction over the *flattened* bank at index `prog_id * bank_width +
+clamp(pc >> 2, 0, code_len[prog_id] - 1)` — the per-program clamp of
+`iss.fetch_banked`, so each lane retires exactly what it would retire in
+a single-program pool running its own program. The single-program entry
+point `iss_segment` is the 1-row special case of the same kernel, so the
+two paths cannot drift.
+
 Bit-exactness contract: identical to `step_branchless` (and therefore to
 `iss.step`/`iss.run`) for programs whose fetched words decode to RV32E
 opcodes — including the clamp-on-read / drop-on-write behavior of jax
 gathers and scatters at out-of-range addresses, which the one-hot ports
 reproduce explicitly (clipped match for the read port, unclipped match
 for the write port). Pinned by the instruction-soup and segment-parity
-tests in `tests/test_stepper.py`.
+tests in `tests/test_stepper.py` and the packed-parity tests in
+`tests/test_packed.py`.
 
 The CPU fallback follows the package convention (`bitplane_matmul.py`,
 `ssd_scan.py`): off-TPU the kernel defaults to `interpret=True`, so it
@@ -47,7 +58,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from repro.flexibits import iss
-from repro.flexibits.iss import I32, U32, ISSState, _u
+from repro.flexibits.iss import I32, U32, ISSState, PackedState, _u
 
 
 def _pick_lane_tile(n_lanes: int, want: Optional[int]) -> int:
@@ -59,8 +70,8 @@ def _pick_lane_tile(n_lanes: int, want: Optional[int]) -> int:
     return 1
 
 
-def _step_tile(code, regs, pc, mem, halted, n_instr, n_two, mix,
-               active, subset):
+def _step_tile(bank_flat, lane_base, lane_len, lane_mlen, regs, pc, mem,
+               halted, n_instr, n_two, mix, active, subset):
     """One branchless architectural step over a (TL,)-lane tile.
 
     Lane-vectorized port of `iss.step_branchless`: the opcode-gated
@@ -69,21 +80,29 @@ def _step_tile(code, regs, pc, mem, halted, n_instr, n_two, mix,
     semantics cannot drift. What this function owns is only the data
     movement: instruction fetch, register reads, and the memory word
     ports are masked one-hot reductions/selects, so the kernel body
-    contains no gather/scatter at all. `active=False` freezes a lane
-    completely. `subset` is static — opcode classes outside it are
-    dropped from the kernel at build time.
+    contains no gather/scatter at all. The fetch indexes the flattened
+    program bank through each lane's `lane_base`/`lane_len` (both
+    segment-constant), reproducing the per-program pc clamp of
+    `iss.fetch_banked`; `lane_mlen` bounds the memory word ports at each
+    lane's OWN word count, so clamp-on-read / drop-on-write happen at
+    the lane's program boundary even when the pool memory is padded
+    wider. `active=False` freezes a lane completely. `subset` is static
+    — opcode classes outside it are dropped from the kernel at build
+    time.
     """
     n_lanes = pc.shape[0]
-    n_code = code.shape[0]
+    n_bank = bank_flat.shape[0]
     mem_words = mem.shape[1]
-    iota_code = jnp.arange(n_code, dtype=I32)
+    iota_bank = jnp.arange(n_bank, dtype=I32)
     iota_mem = jnp.arange(mem_words, dtype=I32)
     iota_reg = jnp.arange(16, dtype=I32)
 
-    # ---- fetch: clipped one-hot == jax's clamp-on-read gather semantics
+    # ---- fetch: per-program clipped one-hot over the flattened bank ==
+    # jax's clamp-on-read gather against each lane's own program
     pword = (_u(pc) >> 2).astype(I32)
-    fsel = jnp.clip(pword, 0, n_code - 1)[:, None] == iota_code[None, :]
-    ii = jnp.sum(jnp.where(fsel, code[None, :], 0), axis=1)
+    flat = lane_base + jnp.clip(pword, 0, lane_len - 1)
+    fsel = flat[:, None] == iota_bank[None, :]
+    ii = jnp.sum(jnp.where(fsel, bank_flat[None, :], 0), axis=1)
     d = iss.decode_fields(ii.astype(U32))
 
     # ---- register read port: one-hot over the 16-entry file
@@ -99,12 +118,13 @@ def _step_tile(code, regs, pc, mem, halted, n_instr, n_two, mix,
     # jax gathers) and an UNCLIPPED one-hot write select (out-of-range
     # stores drop, as jax scatters)
     def read_word(widx):
-        rsel = jnp.clip(widx, 0, mem_words - 1)[:, None] \
+        rsel = jnp.clip(widx, 0, lane_mlen - 1)[:, None] \
             == iota_mem[None, :]
         return jnp.sum(jnp.where(rsel, mem, 0), axis=1)
 
     def write_word(widx, word, neww, is_store):
-        wsel = (widx[:, None] == iota_mem[None, :]) & is_store[:, None]
+        wsel = (widx[:, None] == iota_mem[None, :]) \
+            & (is_store & (widx < lane_mlen))[:, None]
         return jnp.where(wsel, neww[:, None], mem)
 
     next_pc, wr, writes_rd, new_mem, halt, two_stage, mix_idx = \
@@ -128,18 +148,32 @@ def _step_tile(code, regs, pc, mem, halted, n_instr, n_two, mix,
             mix + mix_onehot)
 
 
-def _segment_kernel(code_ref, regs_ref, pc_ref, mem_ref, halt_ref,
+def _segment_kernel(bank_ref, clen_ref, mlen_ref, pid_ref, ms_ref,
+                    regs_ref, pc_ref, mem_ref, halt_ref,
                     ni_ref, n2_ref, mix_ref,
                     oregs_ref, opc_ref, omem_ref, ohalt_ref,
                     oni_ref, on2_ref, omix_ref, *,
-                    seg_steps: int, max_steps: int, subset):
+                    seg_steps: int, subset):
     """Mega-step: all `seg_steps` architectural steps of one lane tile.
 
     State is read from the refs ONCE, carried through the segment loop as
     kernel-resident values, and written back ONCE — the per-step state
-    round-trip of the XLA steppers never leaves the kernel.
+    round-trip of the XLA steppers never leaves the kernel. The bank,
+    each lane's flat fetch base/length, memory bound, and step budget
+    are segment constants, hoisted out of the loop.
     """
-    code = code_ref[...]
+    bank = bank_ref[...]
+    clen = clen_ref[...]
+    mlen = mlen_ref[...]
+    pid = pid_ref[...]
+    max_steps = ms_ref[...]
+    n_progs, bank_width = bank.shape
+    psel = pid[:, None] == jnp.arange(n_progs, dtype=I32)[None, :]
+    lane_len = jnp.sum(jnp.where(psel, clen[None, :], 0), axis=1)
+    lane_mlen = jnp.sum(jnp.where(psel, mlen[None, :], 0), axis=1)
+    lane_base = pid * bank_width
+    bank_flat = bank.reshape(-1)
+
     carry = (jnp.zeros((), I32), regs_ref[...], pc_ref[...], mem_ref[...],
              halt_ref[...], ni_ref[...], n2_ref[...], mix_ref[...])
 
@@ -154,7 +188,8 @@ def _segment_kernel(code_ref, regs_ref, pc_ref, mem_ref, halt_ref,
         k, regs, pc, mem, halted, n_instr, n2, mix = c
         act = active_of(halted, n_instr)
         regs, pc, mem, halted, n_instr, n2, mix = _step_tile(
-            code, regs, pc, mem, halted, n_instr, n2, mix, act, subset)
+            bank_flat, lane_base, lane_len, lane_mlen, regs, pc, mem,
+            halted, n_instr, n2, mix, act, subset)
         return k + 1, regs, pc, mem, halted, n_instr, n2, mix
 
     _, regs, pc, mem, halted, n_instr, n2, mix = \
@@ -168,33 +203,34 @@ def _segment_kernel(code_ref, regs_ref, pc_ref, mem_ref, halt_ref,
     omix_ref[...] = mix
 
 
-def iss_segment(code: jax.Array, state: ISSState, *, seg_steps: int,
-                max_steps: int, subset=None,
-                lane_tile: Optional[int] = None,
-                interpret: Optional[bool] = None) -> ISSState:
-    """Fused-segment stepper: up to `seg_steps` steps for every lane.
+def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
+                       state: PackedState, *, seg_steps: int,
+                       subset=None, mem_len: Optional[jax.Array] = None,
+                       lane_tile: Optional[int] = None,
+                       interpret: Optional[bool] = None) -> PackedState:
+    """Fused packed segment: every lane runs ITS OWN bank program.
 
-    Drop-in replacement for `iss.run_segment_lanes` — bit-exact with it
-    (and with `iss.run`) over RV32E programs. The grid runs over lane
-    tiles of `lane_tile` lanes (default: largest divisor of the lane
-    count <= 128); each tile's segment executes inside a single kernel
-    invocation with state resident for the whole segment. State buffers
-    are aliased input->output, so the caller's donated lane pool is
-    updated in place rather than reallocated per segment.
-
-    `subset` is the static opcode subset (`iss.opcode_subset`): classes
-    outside it are never emitted into the kernel. `interpret=None`
-    resolves by backend — the compiled Mosaic kernel on TPU, the
-    run-anywhere interpreter fallback elsewhere (the package's CPU
-    convention); pass an explicit bool to override. Not jitted here —
-    the fleet engine jits (and donates through) the wrapped call.
+    The packed-runtime counterpart of `iss_segment` (and the fused form
+    of `iss.run_segment_lanes_banked`, bit-exact with it): the whole
+    (n_progs, width) program bank is resident in the kernel, each lane
+    tile carries its lanes' `prog_id` and per-lane `max_steps` budget,
+    and the fetch is a per-program-clamped one-hot over the flattened
+    bank. `mem_len` (per-program word counts, like `code_len`) bounds
+    each lane's memory ports at its own program's size; None means the
+    padded pool width is every program's true size. `subset` must cover
+    the union of the bank's opcode subsets. State buffers are aliased
+    input->output; `prog_id`/`max_steps` are segment constants and pass
+    through untouched.
     """
     if seg_steps < 1:
         raise ValueError("seg_steps must be >= 1")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    n_lanes, mem_words = state.mem.shape
-    n_code = code.shape[0]
+    lanes = state.lanes
+    n_lanes, mem_words = lanes.mem.shape
+    n_progs, bank_width = bank.shape
+    if mem_len is None:
+        mem_len = jnp.full((n_progs,), mem_words, I32)
     tile = _pick_lane_tile(n_lanes, 128 if lane_tile is None else lane_tile)
     n_mix = len(iss.MIX_CLASSES)
     sub = None if subset is None else frozenset(subset)
@@ -205,12 +241,19 @@ def iss_segment(code: jax.Array, state: ISSState, *, seg_steps: int,
     def row2(i):
         return (i, 0)
 
+    def whole(i):
+        return (0,)
+
     out = pl.pallas_call(
         functools.partial(_segment_kernel, seg_steps=seg_steps,
-                          max_steps=max_steps, subset=sub),
+                          subset=sub),
         grid=(n_lanes // tile,),
         in_specs=[
-            pl.BlockSpec((n_code,), lambda i: (0,)),
+            pl.BlockSpec((n_progs, bank_width), lambda i: (0, 0)),
+            pl.BlockSpec((n_progs,), whole),
+            pl.BlockSpec((n_progs,), whole),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile, 16), row2),
             pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile, mem_words), row2),
@@ -237,9 +280,53 @@ def iss_segment(code: jax.Array, state: ISSState, *, seg_steps: int,
             jax.ShapeDtypeStruct((n_lanes,), I32),
             jax.ShapeDtypeStruct((n_lanes, n_mix), I32),
         ],
-        # state buffers update in place (code, input 0, is read-only)
-        input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3, 5: 4, 6: 5, 7: 6},
+        # state buffers update in place (bank/code_len/mem_len/prog_id/
+        # max_steps, inputs 0-4, are read-only segment constants)
+        input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3, 9: 4, 10: 5,
+                              11: 6},
         interpret=interpret,
-    )(code, state.regs, state.pc, state.mem, state.halted,
-      state.n_instr, state.n_two_stage, state.mix)
-    return ISSState(*out)
+    )(bank, code_len, mem_len, state.prog_id, state.max_steps,
+      lanes.regs, lanes.pc, lanes.mem, lanes.halted,
+      lanes.n_instr, lanes.n_two_stage, lanes.mix)
+    return PackedState(lanes=ISSState(*out), prog_id=state.prog_id,
+                       max_steps=state.max_steps)
+
+
+def iss_segment(code: jax.Array, state: ISSState, *, seg_steps: int,
+                max_steps: int, subset=None,
+                lane_tile: Optional[int] = None,
+                interpret: Optional[bool] = None) -> ISSState:
+    """Fused-segment stepper: up to `seg_steps` steps for every lane.
+
+    Drop-in replacement for `iss.run_segment_lanes` — bit-exact with it
+    (and with `iss.run`) over RV32E programs. The grid runs over lane
+    tiles of `lane_tile` lanes (default: largest divisor of the lane
+    count <= 128); each tile's segment executes inside a single kernel
+    invocation with state resident for the whole segment. State buffers
+    are aliased input->output, so the caller's donated lane pool is
+    updated in place rather than reallocated per segment.
+
+    Implemented as the 1-row special case of the packed-bank kernel
+    (`iss_segment_banked`): a singleton bank, every lane on row 0 with a
+    uniform `max_steps` budget — the flat one-hot fetch then clamps to
+    `n_code - 1` exactly as the dedicated single-program fetch did, so
+    the single- and multi-program paths share one kernel and cannot
+    drift.
+
+    `subset` is the static opcode subset (`iss.opcode_subset`): classes
+    outside it are never emitted into the kernel. `interpret=None`
+    resolves by backend — the compiled Mosaic kernel on TPU, the
+    run-anywhere interpreter fallback elsewhere (the package's CPU
+    convention); pass an explicit bool to override. Not jitted here —
+    the fleet engine jits (and donates through) the wrapped call.
+    """
+    n_lanes = state.pc.shape[0]
+    packed = PackedState(
+        lanes=state,
+        prog_id=jnp.zeros((n_lanes,), I32),
+        max_steps=jnp.full((n_lanes,), max_steps, I32))
+    out = iss_segment_banked(
+        code[None, :], jnp.asarray([code.shape[0]], I32), packed,
+        seg_steps=seg_steps, subset=subset, lane_tile=lane_tile,
+        interpret=interpret)
+    return out.lanes

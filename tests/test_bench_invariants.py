@@ -1,0 +1,60 @@
+"""Fast-tier gate over the committed BENCH_fleet.json artifact.
+
+The fleet benchmark itself runs on main only (CI full tier), which used
+to mean a regression in a recorded perf invariant — the §9.7 fusion
+proof, the §9.8 packed-runtime win — only surfaced after merge, as an
+artifact nobody opened. This gate validates the *committed* numbers on
+every push: whoever regenerates BENCH_fleet.json with a regressed
+tentpole metric fails fast-tier CI right in their PR. (Wall-clock rows
+are machine-dependent; the gates below are exactly the invariants the
+benchmark itself enforces on exit, evaluated on the recorded run.)
+"""
+import json
+import os
+
+import pytest
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+_BENCH = os.path.join(_ROOT, "BENCH_fleet.json")
+
+
+@pytest.fixture(scope="module")
+def bench():
+    assert os.path.exists(_BENCH), (
+        "BENCH_fleet.json missing at the repo root — regenerate with "
+        "PYTHONPATH=src python benchmarks/fleet.py")
+    with open(_BENCH) as f:
+        return json.load(f)
+
+
+def test_bench_has_all_studies(bench):
+    for key in ("streaming_vs_monolithic", "stepper_ab", "fusion_proof",
+                "packed_vs_sequential"):
+        assert key in bench, f"BENCH_fleet.json lost the {key} study"
+
+
+def test_fusion_proof_invariant(bench):
+    """§9.7: the fused-segment module's top level must stay >=10x
+    smaller than the branchless step body x seg_steps it replaces."""
+    fp = bench["fusion_proof"]
+    assert float(fp["top_level_ratio"]) >= 10.0, fp["top_level_ratio"]
+    assert int(fp["pallas"]["entry_ops"]) < \
+        int(fp["branchless"]["dispatched_ops_per_segment"])
+
+
+def test_packed_runtime_invariant(bench):
+    """§9.8: on the skewed-group-size plan the packed stream must not be
+    slower than the sequential group drain, must be bit-exact, and must
+    retire strictly fewer segments and lane-step slots."""
+    pk = bench["packed_vs_sequential"]
+    assert pk["bit_exact"] is True
+    assert float(pk["packed_wall_s"]) <= float(pk["sequential_wall_s"]), (
+        pk["packed_wall_s"], pk["sequential_wall_s"])
+    assert int(pk["packed_segments"]) < int(pk["sequential_segments"])
+    assert int(pk["packed_lane_steps"]) < int(pk["sequential_lane_steps"])
+
+
+def test_stepper_ab_invariant(bench):
+    """§9.5: the branchless stepper must stay ahead of the legacy
+    lax.switch interpreter per retired instruction."""
+    assert float(bench["stepper_ab"]["stepper_speedup"]) > 1.0

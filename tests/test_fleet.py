@@ -93,6 +93,59 @@ def test_workload_source_deterministic_and_o_chunk():
     assert whole.shape == (32, w.total_mem_words)
 
 
+def test_workload_source_refill_boundary_invariance_across_blocks():
+    """The batched generator quantizes on fixed ALIGNED blocks, so a
+    request is invariant under ANY refill slicing — including slicings
+    that straddle generation-block boundaries, land on them exactly, or
+    re-read earlier items after the block cache moved on."""
+    w = get("WQ")
+    for gen_block in (1, 7, 64):
+        src = workload_source(w, seed=9, gen_block=gen_block)
+        start, count = 3 * gen_block - 2, 4 * gen_block + 5
+        whole = src(start, count)
+        # every contiguous partition of [start, start+count) agrees
+        for cuts in ([1], [gen_block], [2, gen_block - 1, gen_block],
+                     [count - 1]):
+            parts, i = [], start
+            k = 0
+            while i < start + count:
+                step = min(cuts[k % len(cuts)], start + count - i)
+                parts.append(src(i, step))
+                i += step
+                k += 1
+            np.testing.assert_array_equal(
+                whole, np.concatenate(parts), err_msg=f"{gen_block}/{cuts}")
+        # backward re-read (cache was evicted forward): still identical
+        np.testing.assert_array_equal(whole[:5], src(start, 5))
+        # separate source objects with the same (seed, gen_block) agree
+        np.testing.assert_array_equal(
+            whole, workload_source(w, seed=9, gen_block=gen_block)(
+                start, count))
+
+
+def test_workload_source_batches_generation_calls():
+    """The prefetcher host hot path calls gen_inputs once per aligned
+    block, not once per item."""
+    w = get("WQ")
+    calls = []
+
+    def counting_gen(rng, n):
+        calls.append(n)
+        return w.gen_inputs(rng, n)
+
+    import dataclasses as dc
+    w2 = dc.replace(w, gen_inputs=counting_gen)
+    src = workload_source(w2, seed=0, gen_block=64)
+    src(0, 256)
+    assert calls == [64, 64, 64, 64]
+    calls.clear()
+    src(256, 32)        # quarter block: still ONE vectorized call
+    assert calls == [64]
+    calls.clear()
+    src(288, 32)        # same aligned block: served from the cache
+    assert calls == []
+
+
 def test_heterogeneous_plan_smoke():
     """Two (workload, core) groups through one engine: per-group tallies,
     carbon totals, and engine accounting all populated."""
@@ -116,6 +169,77 @@ def test_heterogeneous_plan_smoke():
     assert rep.simulation_kg() > 0
     text = rep.format()
     assert "WQ" in text and "MC" in text and "lane-steps" in text
+
+
+def test_group_report_closed_form():
+    """GroupReport's operational/embodied/energy fields pinned against
+    hand-computed values from the paper's model constants (cycles.py
+    Table 7 cores + Table 8 memory coefficients), not just cross-group
+    sums: mean instruction counts over items, bit-serial cycle/runtime
+    conversion, power x runtime energy, lifetime x frequency operational
+    kg, and per-item embodied kg scaled to the group."""
+    import dataclasses as dc
+
+    from repro.core.carbon import KG_PER_MM2
+    from repro.flexibits.cycles import (AREA_UNIT_MM2, CORES,
+                                        LPROM_AREA_PER_KB, SRAM_AREA_BASE,
+                                        SRAM_AREA_PER_KB, SRAM_MW_BASE,
+                                        SRAM_MW_PER_KB)
+    from repro.fleet.engine import FleetResult
+    from repro.fleet.report import build_group_report
+
+    w = get("WQ")
+    core = CORES["HERV"]
+    n_items, clock_hz, intensity = 4, 10_000.0, 0.5
+    lifetime_s, execs_per_day = 86_400.0 * 10, 24.0
+    n_instr = np.array([10, 12, 14, 16], np.int64)
+    n_two = np.array([2, 3, 4, 5], np.int64)
+    res = FleetResult(
+        n_items=n_items, n_instr=n_instr, n_two_stage=n_two,
+        halted=np.ones(n_items, bool), out=np.zeros(n_items, np.int32),
+        mix=np.zeros(8, np.int64), lane_steps=64, n_segments=1, chunk=4,
+        seg_steps=64, wall_s=0.1)
+    rep = build_group_report(
+        group=None, workload=w, core=core, result=res,
+        lifetime_s=lifetime_s, execs_per_day=execs_per_day,
+        intensity=intensity, clock_hz=clock_hz)
+
+    # ---- hand computation, from first principles
+    mean_one = (10 + 12 + 14 + 16 - 2 - 3 - 4 - 5) / 4     # 9.5
+    mean_two = (2 + 3 + 4 + 5) / 4                         # 3.5
+    assert rep.profile.n_one_stage == pytest.approx(mean_one)
+    assert rep.profile.n_two_stage == pytest.approx(mean_two)
+    cycles = (mean_one * (32.0 / 8 + 3.65)                 # HERV one-stage
+              + mean_two * (64.0 / 8 + 6.2))               # HERV two-stage
+    assert rep.cycles_per_item == pytest.approx(cycles)
+    vm_kb = w.vm_kb()
+    p_mw = 24.99 + max(SRAM_MW_BASE + SRAM_MW_PER_KB * vm_kb, 0.05)
+    e_exec = p_mw * 1e-3 * cycles / clock_hz
+    assert rep.energy_j_per_exec == pytest.approx(e_exec, rel=1e-12)
+    assert rep.fleet_exec_kwh == pytest.approx(
+        e_exec * n_items / 3.6e6, rel=1e-12)
+    n_exec = execs_per_day * lifetime_s / 86_400.0         # 240 execs
+    assert rep.operational_kg == pytest.approx(
+        e_exec * n_exec / 3.6e6 * intensity * n_items, rel=1e-12)
+    area = (4.50
+            + max(SRAM_AREA_BASE + SRAM_AREA_PER_KB * vm_kb, 0.1)
+            * AREA_UNIT_MM2
+            + LPROM_AREA_PER_KB * w.nvm_kb * AREA_UNIT_MM2)
+    assert rep.embodied_kg == pytest.approx(
+        area * KG_PER_MM2 * n_items, rel=1e-12)
+    assert rep.total_kg == pytest.approx(
+        rep.operational_kg + rep.embodied_kg, rel=1e-12)
+    assert rep.recommended_core in ("SERV", "QERV", "HERV")
+
+    # n_items=0 must not divide by zero (profile means fall back to n=1)
+    res0 = dc.replace(res, n_items=0, n_instr=np.zeros(0, np.int64),
+                      n_two_stage=np.zeros(0, np.int64),
+                      halted=np.zeros(0, bool), out=np.zeros(0, np.int32))
+    rep0 = build_group_report(
+        group=None, workload=w, core=core, result=res0,
+        lifetime_s=lifetime_s, execs_per_day=execs_per_day,
+        intensity=intensity, clock_hz=clock_hz)
+    assert rep0.operational_kg == 0.0 and rep0.embodied_kg == 0.0
 
 
 def test_engine_chunk_larger_than_fleet():

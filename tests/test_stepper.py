@@ -267,6 +267,28 @@ def test_pallas_prime_chunk_rounds_to_wide_tiles():
     np.testing.assert_array_equal(a.n_instr, b.n_instr)
 
 
+def test_prefetcher_exhaustion_reports_cursor_and_counts():
+    """Over-draining the stream raises a diagnostic error naming the
+    cursor, the requested count, and n_items (regression: the bare
+    'source stream exhausted' gave nothing to debug a plan/source
+    n_items mismatch with) — in both sync and background modes."""
+    from repro.fleet.engine import _Prefetcher
+
+    def source(start, count):
+        return np.zeros((count, 1), np.int32)
+
+    for background in (True, False):
+        pref = _Prefetcher(source, 10, block=4, background=background)
+        pref.take(7)
+        with pytest.raises(RuntimeError) as exc:
+            pref.take(5)
+        msg = str(exc.value)
+        assert "requested 5" in msg and "cursor 7" in msg
+        assert "10 item(s)" in msg and "3 item(s) remaining" in msg
+        pref.take(3)          # the remainder is still deliverable
+        pref.close()
+
+
 def test_prefetcher_close_drains_inflight_fetch():
     """close() must cancel or drain the background fetch: a leaked
     worker thread must never still be inside the source after close()
