@@ -1,6 +1,6 @@
 """Streaming fleet engine benchmarks (DESIGN.md §9).
 
-Five studies on a skewed halt-time distribution (the paper's regime:
+Six studies on a skewed halt-time distribution (the paper's regime:
 most items run short data-dependent paths, a tail runs long ones):
 
 - streaming vs monolithic: total simulated lane-steps; the monolithic
@@ -19,6 +19,12 @@ most items run short data-dependent paths, a tail runs long ones):
   backfilled from any pending group) vs draining the same groups
   sequentially, on 16x-skewed group sizes — bit-exact per group, and
   packed must not be slower.
+- resident vs host refill (§9.9): the device-resident runtime
+  (on-device retire/refill, one async stats read per segment, adaptive
+  supersteps) against the PR-4 host-refill loop on the same 16x-skewed
+  plan — bit-exact, strictly fewer blocking host syncs, and wall-clock
+  no worse (those two are the gates; the committed run records a
+  >=1.2x win).
 - device scaling (§9.6): items/s of the shard_map'd engine as the host
   device count grows (subprocesses with forced CPU device counts).
 
@@ -328,6 +334,90 @@ def fleet_packed_vs_sequential(chunk: int = 128, seg_steps: int = 256,
     return rows, derived
 
 
+def fleet_resident_vs_host(chunk: int = 256, seg_steps: int = 512,
+                           max_steps: int = 100_000):
+    """Resident runtime vs host-refill baseline (DESIGN.md §9.9).
+
+    The same 16x-skewed group-size plan as the §9.8 study, with a
+    churnier halt distribution (short items halt in ~50 steps against a
+    512-step segment bound), run through `run_packed` twice: once with
+    the PR-4 host-refill loop at fixed supersteps — a blocking
+    done-count read per segment plus O(done)-row harvest pulls, host
+    demux/rebuild, and a device_put on every finishing segment — and
+    once device-resident with adaptive supersteps: retire/refill as one
+    donated on-device op against an asynchronously staged batch, ONE
+    small stats read per segment overlapped with the next segment's
+    execution, and the superstep controller shrinking segments while
+    churn is high. Gates: bit-exact per-group results, strictly fewer
+    blocking host syncs, resident wall-clock <= host-refill wall-clock
+    (best of `reps` each, after warm-up).
+    """
+    from repro.fleet import engine
+
+    prog = skew_program()
+    reps = 3
+    sizes = (8 * chunk, chunk, chunk // 2, chunk // 2)
+    gspecs = []
+    for gi, n in enumerate(sizes):
+        mems = skew_fleet(prog, n, short_iters=24,
+                          long_iters=4096 + 512 * gi,
+                          long_frac=0.06 + 0.04 * gi, seed=17 + gi)
+        gspecs.append(engine.PackedGroup(
+            code=prog.code, source=array_source(mems), n_items=n,
+            max_steps=max_steps, mem_words=32, out_addr=1))
+
+    def run(refill, adaptive):
+        best = None
+        for i in range(reps + 1):             # first rep is the warm-up
+            t0 = time.perf_counter()
+            outs, stats = engine.run_packed(
+                gspecs, chunk=chunk, seg_steps=seg_steps, refill=refill,
+                adaptive=adaptive)
+            wall = time.perf_counter() - t0
+            if i > 0 and (best is None or wall < best[0]):
+                best = (wall, outs, stats)
+        return best
+
+    h_wall, h_res, h_stats = run("host", False)
+    d_wall, d_res, d_stats = run("device", True)
+    for a, b in zip(h_res, d_res):           # bit-exact demux per group
+        np.testing.assert_array_equal(a.n_instr, b.n_instr)
+        np.testing.assert_array_equal(a.out, b.out)
+        np.testing.assert_array_equal(a.mix, b.mix)
+
+    speedup = h_wall / max(d_wall, 1e-12)
+    rows = [
+        ("fleet/resident_wall_s", round(d_wall, 3), round(h_wall, 3)),
+        ("fleet/resident_syncs", d_stats.host_syncs, h_stats.host_syncs),
+        ("fleet/resident_lane_steps", d_stats.lane_steps,
+         h_stats.lane_steps),
+        ("fleet/resident_busy_frac",
+         round(d_stats.device_busy_frac, 3),
+         round(h_stats.device_busy_frac, 3)),
+    ]
+    derived = {
+        "group_sizes": list(sizes),
+        "resident_wall_s": d_wall,
+        "host_refill_wall_s": h_wall,
+        "resident_speedup": speedup,
+        "resident_syncs": d_stats.host_syncs,
+        "host_refill_syncs": h_stats.host_syncs,
+        "resident_segments": d_stats.n_segments,
+        "host_refill_segments": h_stats.n_segments,
+        "resident_lane_steps": d_stats.lane_steps,
+        "host_refill_lane_steps": h_stats.lane_steps,
+        "resident_busy_frac": d_stats.device_busy_frac,
+        "host_refill_busy_frac": h_stats.device_busy_frac,
+        "resident_sync_wait_s": d_stats.sync_wait_s,
+        "host_refill_sync_wait_s": h_stats.sync_wait_s,
+        "adaptive_rungs": sorted(set(d_stats.seg_schedule)),
+        "bit_exact": True,
+        "target": "resident wall <= host-refill wall, strictly fewer "
+                  "blocking host syncs",
+    }
+    return rows, derived
+
+
 def _scaling_worker(n_items: int, chunk: int, seg_steps: int) -> dict:
     """One scaling point: run the sharded engine over ALL host devices.
     Invoked in a subprocess with XLA_FLAGS forcing the device count."""
@@ -440,6 +530,16 @@ def main():
           f"sequential group drain on group sizes {pk['group_sizes']} "
           f"(bit-exact per-group demux)")
 
+    rh_rows, rh = fleet_resident_vs_host(chunk=max(args.chunk, 256))
+    bench["resident_vs_host_refill"] = rh
+    print(f"\n{'metric':<26} {'resident':>14} {'host-refill':>14}")
+    for name, d, h in rh_rows:
+        print(f"{name:<26} {d:>14} {h:>14}")
+    print(f"resident runtime: {rh['resident_speedup']:.2f}x wall-clock, "
+          f"{rh['resident_syncs']} vs {rh['host_refill_syncs']} blocking "
+          f"host syncs (adaptive rungs {rh['adaptive_rungs']}, "
+          f"bit-exact)")
+
     if not args.skip_scaling:
         sc_rows, sc = fleet_device_scaling(
             n_items=args.items, chunk=args.chunk,
@@ -467,6 +567,14 @@ def main():
         failures.append(f"packed runtime target NOT met: "
                         f"{pk['packed_wall_s']:.3f}s packed > "
                         f"{pk['sequential_wall_s']:.3f}s sequential")
+    if rh["resident_wall_s"] > rh["host_refill_wall_s"]:
+        failures.append(f"resident runtime target NOT met: "
+                        f"{rh['resident_wall_s']:.3f}s resident > "
+                        f"{rh['host_refill_wall_s']:.3f}s host-refill")
+    if rh["resident_syncs"] >= rh["host_refill_syncs"]:
+        failures.append(f"resident sync target NOT met: "
+                        f"{rh['resident_syncs']} syncs >= "
+                        f"{rh['host_refill_syncs']} host-refill syncs")
     if derived["cycles_saved_ratio"] < 2.0 and args.items < 4 * args.chunk:
         print(f"note: fleet too small to exploit skew "
               f"(--items {args.items} < 4x --chunk {args.chunk}); "

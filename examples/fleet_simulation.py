@@ -14,7 +14,7 @@ import argparse
 
 import numpy as np
 
-from repro.fleet import STEPPERS, FleetGroup, FleetPlan, run_plan
+from repro.fleet import REFILLS, STEPPERS, FleetGroup, FleetPlan, run_plan
 from repro.launch.mesh import make_host_mesh
 
 
@@ -31,6 +31,16 @@ def main():
                     help="run all groups in one packed multi-program "
                          "stream (DESIGN.md §9.8); --no-packed drains "
                          "groups sequentially (the A/B baseline)")
+    ap.add_argument("--refill", choices=REFILLS, default="device",
+                    help="stream loop (DESIGN.md §9.9): 'device' = "
+                         "resident runtime (on-device retire/refill, "
+                         "async sync), 'host' = PR-4 host-refill A/B "
+                         "baseline")
+    ap.add_argument("--adaptive", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="adaptive supersteps: pick each segment's step "
+                         "bound from the observed halt cadence "
+                         "(DESIGN.md §9.9)")
     args = ap.parse_args()
 
     # three sub-fleets: malodor classification on the 1-bit core (long
@@ -41,14 +51,21 @@ def main():
         FleetGroup(workload="WQ", core="QERV", n_items=args.items, seed=1),
         FleetGroup(workload="SI", core="HERV", n_items=args.items, seed=2),
     ), chunk=args.chunk, seg_steps=args.seg_steps, stepper=args.stepper,
-        packed=args.packed)
+        packed=args.packed, refill=args.refill, adaptive=args.adaptive)
 
     mesh = make_host_mesh()
     report = run_plan(plan, mesh=mesh)
 
     mode = "packed" if args.packed else "sequential"
     print(f"[fleet] {report.n_items} items on mesh {dict(mesh.shape)} "
-          f"({mode} runtime)")
+          f"({mode} runtime, {args.refill} refill"
+          f"{', adaptive supersteps' if args.adaptive else ''})")
+    if report.packed is not None:
+        p = report.packed
+        print(f"[fleet] sync: {p.host_syncs} blocking host syncs over "
+              f"{p.n_segments} segments, refill host work "
+              f"{p.refill_wall_s * 1e3:.1f} ms, device busy "
+              f"{100.0 * p.device_busy_frac:.1f}%")
     mc = report.groups[0].result
     print(f"[fleet] MC malodor score histogram: "
           f"{np.bincount(mc.out, minlength=5)}")

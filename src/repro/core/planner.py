@@ -64,34 +64,46 @@ def plan_grid(*, n_params: float, kv_bytes_per_token: float,
               intensity: float = 0.367,
               variants: Sequence[ServeVariant] = VARIANTS) -> Dict:
     """For every (lifetime, qps) cell pick (variant, chips) minimizing total
-    carbon subject to meeting qps. Returns argmin maps + totals."""
-    nl, nq = len(lifetimes_days), len(qps_grid)
-    best = np.full((nl, nq), -1, np.int32)
-    best_chips = np.zeros((nl, nq), np.int32)
-    best_kg = np.full((nl, nq), np.inf)
-    options = []
+    carbon subject to meeting qps. Returns argmin maps + totals.
+
+    One (lifetime, qps, option) broadcast, like `selection.total_grid`:
+    the per-option anchors (prep carbon, chips, tokens/s) are vectors,
+    embodied carbon broadcasts over lifetimes, operational over
+    lifetime x qps, infeasible options mask to +inf, and the option
+    axis argmin takes the first minimum — the same tie-break as the
+    strict `<` scan it replaces (tests/test_planner.py pins exact
+    array equality against the loop form).
+    """
+    days = np.asarray(lifetimes_days, float)          # (nl,)
+    qps = np.asarray(qps_grid, float)                 # (nq,)
+    opt_vi, opt_chips, opt_tps = [], [], []
     for vi, v in enumerate(variants):
         for chips in chips_options:
-            tps = tokens_per_s_per_chip(n_params, v.weight_bits,
-                                        kv_bytes_per_token, chips) * chips
-            options.append((vi, chips, tps))
+            opt_vi.append(vi)
+            opt_chips.append(chips)
+            opt_tps.append(tokens_per_s_per_chip(
+                n_params, v.weight_bits, kv_bytes_per_token, chips)
+                * chips)
+    opt_vi = np.asarray(opt_vi, np.int32)             # (K,)
+    opt_chips = np.asarray(opt_chips, float)
+    opt_tps = np.asarray(opt_tps, float)
+    opt_prep = np.asarray([variants[v].prep_kg for v in opt_vi])
 
-    for li, days in enumerate(lifetimes_days):
-        for qi, qps in enumerate(qps_grid):
-            for vi, chips, tps in options:
-                if tps < qps:
-                    continue
-                emb = chips * TPU_EMBODIED_KG * \
-                    min(days / (3 * 365.0), 1.0)   # amortize 3y chip life
-                # energy: chips run at utilization qps/tps
-                util = qps / tps
-                kwh = chips * CHIP_POWER_W * PUE * util \
-                    * days * 24.0 / 1000.0
-                op = kwh * intensity
-                total = variants[vi].prep_kg + emb + op
-                if total < best_kg[li, qi]:
-                    best_kg[li, qi] = total
-                    best[li, qi] = vi
-                    best_chips[li, qi] = chips
+    feasible = opt_tps[None, None, :] >= qps[None, :, None]
+    # amortize 3y chip life
+    emb = (opt_chips[None, None, :] * TPU_EMBODIED_KG
+           * np.minimum(days / (3 * 365.0), 1.0)[:, None, None])
+    # energy: chips run at utilization qps/tps
+    util = qps[None, :, None] / opt_tps[None, None, :]
+    kwh = (opt_chips[None, None, :] * CHIP_POWER_W * PUE * util
+           * days[:, None, None] * 24.0 / 1000.0)
+    total = opt_prep[None, None, :] + emb + kwh * intensity
+    total = np.where(feasible, total, np.inf)         # (nl, nq, K)
+
+    k = np.argmin(total, axis=2)                      # first min wins
+    best_kg = np.take_along_axis(total, k[..., None], axis=2)[..., 0]
+    met = np.isfinite(best_kg)
+    best = np.where(met, opt_vi[k], -1).astype(np.int32)
+    best_chips = np.where(met, opt_chips[k], 0).astype(np.int32)
     return {"variant_idx": best, "chips": best_chips, "total_kg": best_kg,
             "variants": [v.name for v in variants]}

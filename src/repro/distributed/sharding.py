@@ -75,6 +75,28 @@ def bank_specs(mesh: Mesh, tree):
     return jax.tree.map(lambda _: P(), tree)
 
 
+def stage_specs(mesh: Mesh, tree):
+    """Staged-refill-buffer layout: replicate every leaf on every device.
+
+    The resident fleet runtime (DESIGN.md §9.9) uploads the next refill
+    batch — item memory images, program rows, budgets, result slots —
+    while the current segment runs, and the on-device refill assigns
+    staged rows to freed lanes by pool-wide rank, so ANY lane on ANY
+    device may consume ANY staged row. The batch is O(chunk) and read
+    once per refill, so replication (like `bank_specs`) keeps the swap
+    collective-free; only the result scatter inside the refill op —
+    which sits OUTSIDE the segment while_loop — pays cross-device
+    traffic under GSPMD.
+    """
+    return bank_specs(mesh, tree)
+
+
+def stage_shardings(mesh: Mesh, tree):
+    """NamedShardings for `stage_specs` (device_put-ready)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        stage_specs(mesh, tree))
+
+
 def lane_shardings(mesh: Mesh, state):
     """NamedShardings for `lane_specs` (device_put-ready)."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s),

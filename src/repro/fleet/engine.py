@@ -24,6 +24,15 @@ This engine fixes both (DESIGN.md §9):
   budget, and freed lanes are backfilled with items from ANY pending
   group, so one group's halt-time tail hides behind the others' backlog
   and the whole plan runs as one stream.
+
+- **Resident runtime** (`refill="device"`, the default; DESIGN.md §9.9).
+  Retire/refill runs as one donated on-device op against an
+  asynchronously staged batch, the per-segment host sync collapses to
+  one small stats read overlapped with the next segment's execution,
+  and an optional superstep controller (`adaptive=True`) adapts each
+  segment's step bound to the observed halt cadence. The PR-4
+  host-refill loop survives as `refill="host"` for A/B runs — results
+  are bit-exact either way.
 """
 from __future__ import annotations
 
@@ -31,7 +40,7 @@ import concurrent.futures
 import dataclasses
 import functools
 import time
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +54,13 @@ from repro.flexibits import iss
 from repro.kernels import iss_stepper
 
 STEPPERS = ("branchless", "pallas", "switch")
+REFILLS = ("device", "host")   # resident on-device refill (§9.9) vs A/B
+
+# resident-runtime safety bounds (see run_packed): past either, the
+# engine falls back to the host-refill loop rather than risking int32
+# mix-counter overflow or an O(fleet) keep_state device allocation
+_RESIDENT_MIX_LIMIT = 2**31 - 1
+_RESIDENT_KEEP_STATE_WORDS = 1 << 27   # ~512 MB of int32 device rows
 
 # source protocol: source(start, count) -> (count, mem_words) int32
 Source = Callable[[int, int], np.ndarray]
@@ -269,7 +285,8 @@ def run_stream(code: np.ndarray, source: Source, *, n_items: int,
                mesh: Optional[Mesh] = None,
                stepper: str = "branchless",
                subset: Optional[frozenset] = None,
-               prefetch: bool = True) -> FleetResult:
+               prefetch: bool = True, refill: str = "device",
+               adaptive: bool = False) -> FleetResult:
     """Stream `n_items` memory images from `source` through `chunk` lanes.
 
     Returns per-item scalars in item order. With `keep_state=True` the
@@ -294,15 +311,19 @@ def run_stream(code: np.ndarray, source: Source, *, n_items: int,
     loop serves both, so the sync/harvest/refill subtleties exist in
     exactly one place — with the run's whole-pool accounting (lane-step
     slots including padding lanes, segment count, measured wall clock)
-    folded back into the returned `FleetResult`. Host<->device sync per
-    segment stays one scalar: the done-lane count.
+    folded back into the returned `FleetResult`. `refill`/`adaptive`
+    pick the resident runtime and superstep controller exactly as in
+    `run_packed` (DESIGN.md §9.9); with the default resident loop the
+    per-segment host sync is one small async stats read, with
+    `refill="host"` it is the PR-4 blocking done-count scalar.
     """
     results, stats = run_packed(
         [PackedGroup(code=code, source=source, n_items=n_items,
                      max_steps=max_steps, mem_words=mem_words,
                      out_addr=out_addr)],
         chunk=chunk, seg_steps=seg_steps, keep_state=keep_state,
-        mesh=mesh, stepper=stepper, subset=subset, prefetch=prefetch)
+        mesh=mesh, stepper=stepper, subset=subset, prefetch=prefetch,
+        refill=refill, adaptive=adaptive)
     return dataclasses.replace(
         results[0], lane_steps=stats.lane_steps,
         n_segments=stats.n_segments, chunk=stats.chunk,
@@ -341,7 +362,18 @@ class PackedGroup:
 class PackedStats:
     """Whole-run accounting of one packed stream (the per-group
     `FleetResult`s carry only the lane-step slots attributable to their
-    own active lanes; idle/padding slots belong to the run)."""
+    own active lanes; idle/padding slots belong to the run).
+
+    The sync-stats fields (DESIGN.md §9.9) make the host<->device
+    cadence a first-class output: `host_syncs` counts every blocking
+    device->host read the run performed, `sync_wait_s` the host time
+    spent inside them, `refill_wall_s` the host time spent assembling/
+    staging refills, and `device_busy_frac` estimates the fraction of
+    the wall clock during which the device had work in flight (1 minus
+    the host-only intervals where the device queue was observed empty).
+    `seg_schedule` records the seg_steps actually used per segment —
+    constant for a fixed run, the controller's trace for an adaptive
+    one (pinned deterministic by tests/test_resident.py)."""
     n_groups: int
     n_progs: int
     bank_width: int
@@ -352,6 +384,88 @@ class PackedStats:
     wall_s: float
     stepper: str
     n_devices: int
+    refill: str = "host"          # "device" (resident, §9.9) or "host"
+    adaptive: bool = False
+    host_syncs: int = 0           # blocking device->host reads
+    sync_wait_s: float = 0.0      # host time blocked in those reads
+    refill_wall_s: float = 0.0    # host time assembling/staging refills
+    device_busy_frac: float = 1.0
+    seg_schedule: tuple = ()      # seg_steps used, one entry per segment
+
+
+class _SyncClock:
+    """Counts/times every blocking device->host read plus the host-side
+    refill work, and accumulates device-idle intervals for the
+    `device_busy_frac` estimate (DESIGN.md §9.9)."""
+
+    def __init__(self):
+        self.host_syncs = 0
+        self.sync_wait_s = 0.0
+        self.refill_wall_s = 0.0
+        self.idle_s = 0.0
+
+    def fetch(self, x) -> np.ndarray:
+        t0 = time.perf_counter()
+        out = np.asarray(x)
+        self.sync_wait_s += time.perf_counter() - t0
+        self.host_syncs += 1
+        return out
+
+    def busy_frac(self, wall_s: float) -> float:
+        if wall_s <= 0.0:
+            return 1.0
+        return max(0.0, 1.0 - self.idle_s / wall_s)
+
+
+class _SuperstepController:
+    """Adaptive superstep sizing (DESIGN.md §9.9).
+
+    Tracks an EMA of the pool's finish hazard (retirements per executed
+    pool-step) and picks the next segment length from a small
+    power-of-two ladder below the configured `seg_steps`: when churn is
+    high, shorter segments return finished lanes to the admission
+    scheduler sooner (a lane that halts early in a long segment sits
+    frozen — wasted occupancy — until the segment ends); when the pool
+    is all long-lived tails the hazard decays and segments grow back to
+    the cap, keeping the sync count low. The ladder is bounded (<= 6
+    values), so the lru-cached segment runners stay bounded too — one
+    compile per ladder rung, ever. Decisions are a pure function of the
+    observed (retired, steps) sequence, so a plan+seed reruns to an
+    identical segment schedule.
+    """
+
+    LADDER_SPAN = 16       # smallest rung = seg_steps / 16
+    TARGET_FRAC = 0.25     # aim for ~chunk/4 retirements per segment
+    EMA = 0.5
+
+    def __init__(self, seg_steps: int, chunk: int, enabled: bool):
+        base = max(1, seg_steps)
+        rungs = {base}
+        v = base
+        while v > max(1, base // self.LADDER_SPAN):
+            v = max(1, v // 2)
+            rungs.add(v)
+        self.ladder = tuple(sorted(rungs))
+        self.base = base
+        self.enabled = enabled
+        self.target = max(1.0, self.TARGET_FRAC * chunk)
+        self.rate = 0.0            # EMA of retirements per pool-step
+        self.schedule = []
+
+    def record(self, n_retired: int, steps: int):
+        if steps > 0:
+            self.rate = (self.EMA * (n_retired / steps)
+                         + (1.0 - self.EMA) * self.rate)
+
+    def next_seg(self) -> int:
+        seg = self.base
+        if self.enabled:
+            for s in self.ladder:  # smallest rung meeting the target
+                if self.rate * s >= self.target:
+                    seg = s
+                    break
+        self.schedule.append(seg)
+        return seg
 
 
 def _apportion(slots: int, remaining) -> np.ndarray:
@@ -461,11 +575,114 @@ def _packed_segment_runner(stepper: str, chunk: int, seg_steps: int,
     return jax.jit(fn, donate_argnums=(3,))
 
 
+class ResidentAcc(NamedTuple):
+    """On-device result accumulators of the resident runtime (§9.9).
+
+    Per-ITEM scalars are indexed by the item's global result row
+    (`slot_base[group] + item index`), scattered once when the item's
+    lane retires and fetched once at drain — per-item scalar results
+    stay O(fleet) exactly as the host collectors did, they just live on
+    the device until the stream ends. Per-GROUP mix totals accumulate
+    in int32 (sound below 2^31 retired instructions per group per mix
+    class; past that bound — or past the keep_state device-row budget —
+    `run_packed` falls back to the host loop, whose collectors are
+    int64 in host RAM). `prev_instr` is the per-lane retired-count
+    snapshot at the
+    last refill — the device-side form of the host path's `prev_instr`
+    array, from which each segment's max step delta is measured. The
+    keep_state leaves are None unless full final state was requested.
+    """
+    n_instr: jax.Array             # (total_items,) i32
+    n_two: jax.Array               # (total_items,) i32
+    halted: jax.Array              # (total_items,) bool
+    out: jax.Array                 # (total_items,) i32
+    mix_g: jax.Array               # (n_groups, 8) i32
+    prev_instr: jax.Array          # (chunk,) i32
+    mems: Optional[jax.Array]      # (total_items, mem_words) i32
+    regs: Optional[jax.Array]      # (total_items, 16) i32
+    pc: Optional[jax.Array]        # (total_items,) i32
+    mix_items: Optional[jax.Array]  # (total_items, 8) i32
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",),
+                   donate_argnums=(0, 1, 2))
+def _refill_resident(state: iss.PackedState, item_slot, acc: ResidentAcc,
+                     staged_mems, staged_prog, staged_ms, staged_slot,
+                     n_staged, out_addr, *, use_pallas: bool):
+    """Retire + refill, entirely on device (DESIGN.md §9.9).
+
+    One donated op replaces the host path's demux->rebuild->device_put
+    cycle: finished lanes are detected against their own budgets
+    (`iss.retire_mask`), their tallies scattered into the `ResidentAcc`
+    rows of the items they carried (dropped-out-of-range scatter — only
+    retiring lanes write), and fresh items swapped in from the staged
+    batch in lane-rank order (`iss.refill_take` + `iss.refill_lanes`,
+    or the banked Pallas swap `iss_stepper.iss_refill` when the fused
+    stepper runs single-device). The lane state never leaves the
+    device.
+
+    Returns the refreshed (state, item_slot, acc) plus a small int32
+    stats vector — [n_retired, n_consumed, max step delta,
+    active-lanes-per-group...] — describing the segment that just ran;
+    that vector is the ONLY thing the host reads per segment, fetched
+    asynchronously while the next segment executes.
+    """
+    lanes = state.lanes
+    n_groups = out_addr.shape[0]
+    active = item_slot >= 0
+    retired = iss.retire_mask(state, item_slot)
+
+    # ---- accounting of the segment that just ran (host-free)
+    delta = jnp.max(lanes.n_instr - acc.prev_instr, initial=0)
+    act_g = jnp.zeros((n_groups,), iss.I32).at[state.prog_id].add(
+        active.astype(iss.I32))
+
+    # ---- retire: scatter finished lanes' tallies at their item rows
+    n_total = acc.n_instr.shape[0]
+    slot = jnp.where(retired, item_slot, n_total)   # OOB rows drop
+
+    def put(buf, val):
+        return None if buf is None else buf.at[slot].set(val, mode="drop")
+
+    col = out_addr[state.prog_id]
+    out_val = jnp.take_along_axis(
+        lanes.mem, jnp.clip(col, 0, lanes.mem.shape[1] - 1)[:, None],
+        axis=1)[:, 0]
+    out_val = jnp.where(col >= 0, out_val, 0)
+    acc = acc._replace(
+        n_instr=put(acc.n_instr, lanes.n_instr),
+        n_two=put(acc.n_two, lanes.n_two_stage),
+        halted=put(acc.halted, lanes.halted),
+        out=put(acc.out, out_val),
+        mix_g=acc.mix_g.at[state.prog_id].add(
+            jnp.where(retired[:, None], lanes.mix, 0)),
+        mems=put(acc.mems, lanes.mem),
+        regs=put(acc.regs, lanes.regs),
+        pc=put(acc.pc, lanes.pc),
+        mix_items=put(acc.mix_items, lanes.mix))
+
+    # ---- refill freed lanes from the staged batch, in lane-rank order
+    free = retired | ~active
+    take, src = iss.refill_take(free, n_staged)
+    swap = iss_stepper.iss_refill if use_pallas else iss.refill_lanes
+    new_state = swap(state, take, src, staged_mems, staged_prog,
+                     staged_ms)
+    new_slot = jnp.where(take, staged_slot[src],
+                         jnp.where(retired, -1, item_slot))
+    acc = acc._replace(prev_instr=jnp.where(take, 0, lanes.n_instr))
+    stats = jnp.concatenate([
+        jnp.stack([retired.sum().astype(iss.I32),
+                   take.sum().astype(iss.I32), delta.astype(iss.I32)]),
+        act_g])
+    return new_state, new_slot, acc, stats
+
+
 def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
                keep_state: bool = False, mesh: Optional[Mesh] = None,
                stepper: str = "branchless",
                subset: Optional[frozenset] = None,
-               prefetch: bool = True):
+               prefetch: bool = True, refill: str = "device",
+               adaptive: bool = False):
     """Execute every `PackedGroup` through ONE packed stream.
 
     Returns `(results, stats)`: `results[g]` is a per-group `FleetResult`
@@ -490,6 +707,20 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
     whole-run wall clock proportionally to retired instructions (the
     sums over groups match the run, up to idle-lane slots, which belong
     to `stats`).
+
+    `refill` picks the stream loop (DESIGN.md §9.9): "device" (the
+    default) is the *resident* runtime — retire/refill happens in one
+    donated on-device op against a staged batch that was uploaded
+    asynchronously while the previous segment ran, and the only
+    per-segment host read is one small stats vector fetched while the
+    NEXT segment executes — while "host" keeps the PR-4 loop (blocking
+    done-count read, host demux/rebuild, device_put) as the A/B
+    baseline. Per-group results are bit-exact either way
+    (tests/test_resident.py pins full-state parity). `adaptive` turns
+    on the superstep controller (§9.9): each segment's step bound is
+    picked from a bounded power-of-two ladder under `seg_steps` by the
+    observed halt cadence — deterministic for a given plan, bit-exact
+    with any fixed schedule.
     """
     groups = list(groups)
     if not groups:
@@ -500,10 +731,30 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
         raise ValueError("chunk must be >= 1")
     if stepper not in STEPPERS:
         raise ValueError(f"stepper must be one of {STEPPERS}")
+    if refill not in REFILLS:
+        raise ValueError(f"refill must be one of {REFILLS}")
 
     n_groups = len(groups)
     counts = np.array([g.n_items for g in groups], np.int64)
     total_items = int(counts.sum())
+    if refill == "device" and groups:
+        # resident-safety fallback: the on-device per-group mix
+        # counters are int32 (a group's per-class retired count is
+        # bounded by n_items x max_steps), and keep_state scatters full
+        # final state into O(fleet) device rows — past either bound the
+        # host loop (int64 collectors, host-RAM state) is the correct
+        # runtime, so fall back rather than overflow/OOM silently; the
+        # returned PackedStats.refill reports what actually ran.
+        mix_bound = max(int(g.n_items) * int(g.max_steps)
+                        for g in groups)
+        ks_words = 0
+        if keep_state:
+            ks_words = total_items * (
+                max(g.mem_words for g in groups) + 16 + 1
+                + len(iss.MIX_CLASSES))
+        if mix_bound > _RESIDENT_MIX_LIMIT \
+                or ks_words > _RESIDENT_KEEP_STATE_WORDS:
+            refill = "host"
     if total_items == 0:
         empty = [FleetResult(
             n_items=0, n_instr=np.zeros(0, np.int64),
@@ -515,7 +766,8 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
         return empty, PackedStats(
             n_groups=n_groups, n_progs=n_groups, bank_width=0,
             lane_steps=0, n_segments=0, chunk=0, seg_steps=seg_steps,
-            wall_s=0.0, stepper=stepper, n_devices=1)
+            wall_s=0.0, stepper=stepper, n_devices=1, refill=refill,
+            adaptive=adaptive)
     mem_words = max(g.mem_words for g in groups)
     bank_np, code_len_np = iss.pack_programs([g.code for g in groups])
     if subset is None:
@@ -542,11 +794,62 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
     if round_to > 1:
         chunk = -(-chunk // round_to) * round_to
 
-    seg_fn = _packed_segment_runner(stepper, chunk, seg_steps, mem_words,
-                                    n_groups, bank_np.shape[1], mesh,
-                                    subset)
+    clock = _SyncClock()
+    controller = _SuperstepController(seg_steps, chunk, adaptive)
+    loop = _stream_resident if refill == "device" else _stream_host
+    t0 = time.perf_counter()
+    prefs = [_Prefetcher(g.source, g.n_items,
+                         block=max(1, min(chunk, g.n_items)),
+                         background=prefetch)
+             for g in groups]
+    try:
+        out = loop(groups, prefs, counts, ms_of, bank, code_len, mem_len,
+                   bank_np, chunk, keep_state, mesh, stepper, subset,
+                   mem_words, controller, clock)
+    finally:
+        for p in prefs:
+            p.close()
 
-    # per-group per-item collectors (scalars: O(fleet))
+    wall_s = time.perf_counter() - t0
+    busy = np.array([r.sum() for r in out["r_instr"]], np.float64)
+    busy_share = busy / max(busy.sum(), 1.0)
+    results = []
+    for g, grp in enumerate(groups):
+        results.append(FleetResult(
+            n_items=grp.n_items, n_instr=out["r_instr"][g],
+            n_two_stage=out["r_two"][g],
+            halted=out["r_halt"][g], out=out["r_out"][g],
+            mix=out["r_mix"][g],
+            lane_steps=int(out["g_lane_steps"][g]),
+            n_segments=int(out["g_segments"][g]),
+            chunk=chunk, seg_steps=seg_steps,
+            wall_s=wall_s * float(busy_share[g]),
+            stepper=stepper, n_devices=n_dev,
+            mems=out["r_mem"][g] if keep_state else None,
+            regs=out["r_regs"][g] if keep_state else None,
+            pc=out["r_pc"][g] if keep_state else None,
+            mix_items=out["r_mix_items"][g] if keep_state else None,
+        ))
+    stats = PackedStats(
+        n_groups=n_groups, n_progs=bank_np.shape[0],
+        bank_width=bank_np.shape[1], lane_steps=out["lane_steps"],
+        n_segments=out["n_segments"], chunk=chunk, seg_steps=seg_steps,
+        wall_s=wall_s, stepper=stepper, n_devices=n_dev, refill=refill,
+        adaptive=adaptive, host_syncs=clock.host_syncs,
+        sync_wait_s=clock.sync_wait_s, refill_wall_s=clock.refill_wall_s,
+        device_busy_frac=clock.busy_frac(wall_s),
+        seg_schedule=tuple(controller.schedule[:out["n_segments"]]))
+    return results, stats
+
+
+def _stream_host(groups, prefs, counts, ms_of, bank, code_len, mem_len,
+                 bank_np, chunk, keep_state, mesh, stepper, subset,
+                 mem_words, controller: _SuperstepController,
+                 clock: _SyncClock):
+    """The PR-4 host-refill stream loop (the `refill="host"` A/B path):
+    blocking single-scalar done-count sync per segment, host-side
+    demux + refill rebuild + device_put on finishing segments."""
+    n_groups = len(groups)
     r_instr = [np.zeros(n, np.int64) for n in counts]
     r_two = [np.zeros(n, np.int64) for n in counts]
     r_halt = [np.zeros(n, bool) for n in counts]
@@ -554,6 +857,7 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
     r_mix = [np.zeros(len(iss.MIX_CLASSES), np.int64) for _ in groups]
     g_lane_steps = np.zeros(n_groups, np.int64)
     g_segments = np.zeros(n_groups, np.int64)
+    r_mem = r_regs = r_pc = r_mix_items = None
     if keep_state:
         r_mem = [np.zeros((n, g.mem_words), np.int32)
                  for n, g in zip(counts, groups)]
@@ -562,154 +866,336 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
         r_mix_items = [np.zeros((n, len(iss.MIX_CLASSES)), np.int32)
                        for n in counts]
 
-    t0 = time.perf_counter()
-    prefs = [_Prefetcher(g.source, g.n_items,
-                         block=max(1, min(chunk, g.n_items)),
-                         background=prefetch)
-             for g in groups]
-    try:
-        cursor = np.zeros(n_groups, np.int64)   # next item per group
-        ids = np.full(chunk, -1, np.int64)      # item index within group
-        lane_group = np.full(chunk, -1, np.int64)
-        lane_ms = np.zeros(chunk, np.int64)     # host copy of budgets
+    cursor = np.zeros(n_groups, np.int64)   # next item per group
+    ids = np.full(chunk, -1, np.int64)      # item index within group
+    lane_group = np.full(chunk, -1, np.int64)
+    lane_ms = np.zeros(chunk, np.int64)     # host copy of budgets
 
-        def admit(state, free_lanes):
-            """Backfill `free_lanes` with items from any pending group."""
-            take = _apportion(len(free_lanes), counts - cursor)
-            n_new = int(take.sum())
-            if n_new == 0:
-                return state, 0
-            new_mems = np.zeros((chunk, mem_words), np.int32)
-            new_prog = np.zeros(chunk, np.int32)
-            new_ms = np.zeros(chunk, np.int32)
-            replace = np.zeros(chunk, bool)
-            off = 0
-            for g in np.nonzero(take)[0]:
-                k = int(take[g])
-                lanes = free_lanes[off:off + k]
-                off += k
-                new_mems[lanes, :groups[g].mem_words] = prefs[g].take(k)
-                new_prog[lanes] = g
-                new_ms[lanes] = ms_of[g]
-                replace[lanes] = True
-                ids[lanes] = np.arange(cursor[g], cursor[g] + k)
-                lane_group[lanes] = g
-                lane_ms[lanes] = ms_of[g]
-                cursor[g] += k
-            if state is None:
-                return (new_mems, replace, new_prog, new_ms), n_new
-            return _refill_packed(state, jnp.asarray(replace),
-                                  jnp.asarray(new_mems),
-                                  jnp.asarray(new_prog),
-                                  jnp.asarray(new_ms)), n_new
+    def admit(state, free_lanes):
+        """Backfill `free_lanes` with items from any pending group."""
+        take = _apportion(len(free_lanes), counts - cursor)
+        n_new = int(take.sum())
+        if n_new == 0:
+            return state, 0
+        new_mems = np.zeros((chunk, mem_words), np.int32)
+        new_prog = np.zeros(chunk, np.int32)
+        new_ms = np.zeros(chunk, np.int32)
+        replace = np.zeros(chunk, bool)
+        off = 0
+        for g in np.nonzero(take)[0]:
+            k = int(take[g])
+            lanes = free_lanes[off:off + k]
+            off += k
+            new_mems[lanes, :groups[g].mem_words] = prefs[g].take(k)
+            new_prog[lanes] = g
+            new_ms[lanes] = ms_of[g]
+            replace[lanes] = True
+            ids[lanes] = np.arange(cursor[g], cursor[g] + k)
+            lane_group[lanes] = g
+            lane_ms[lanes] = ms_of[g]
+            cursor[g] += k
+        if state is None:
+            return (new_mems, replace, new_prog, new_ms), n_new
+        return _refill_packed(state, jnp.asarray(replace),
+                              jnp.asarray(new_mems),
+                              jnp.asarray(new_prog),
+                              jnp.asarray(new_ms)), n_new
 
-        # initial fill (admit into a fresh pool; padding lanes carry
-        # budget 0 and stay parked forever)
-        (first, active0, prog0, ms0), _ = admit(None, np.arange(chunk))
-        state = _fresh_packed(first, active0, prog0, ms0)
-        if mesh is not None:
-            state = jax.tree.map(jax.device_put, state,
-                                 dsharding.lane_shardings(mesh, state))
+    # initial fill (admit into a fresh pool; padding lanes carry
+    # budget 0 and stay parked forever)
+    (first, active0, prog0, ms0), _ = admit(None, np.arange(chunk))
+    state = _fresh_packed(first, active0, prog0, ms0)
+    if mesh is not None:
+        state = jax.tree.map(jax.device_put, state,
+                             dsharding.lane_shardings(mesh, state))
 
-        prev_instr = np.zeros(chunk, np.int64)
-        lane_steps = 0
-        n_segments = 0
+    prev_instr = np.zeros(chunk, np.int64)
+    lane_steps = 0
+    n_segments = 0
+    expected_done = chunk - int((ids >= 0).sum())
+
+    while (ids >= 0).any():
+        seg_steps = controller.next_seg()
+        seg_fn = _packed_segment_runner(stepper, chunk, seg_steps,
+                                        mem_words, n_groups,
+                                        bank_np.shape[1], mesh, subset)
+        state = seg_fn(bank, code_len, mem_len, state)
+        n_segments += 1
+        active = ids >= 0
+        act_per_group = np.bincount(lane_group[active],
+                                    minlength=n_groups)
+        g_segments += act_per_group > 0
+
+        # single-scalar sync, as in run_stream: if no lane finished,
+        # every active lane ran exactly seg_steps
+        if int(clock.fetch(_done_count_packed(state))) == expected_done:
+            lane_steps += chunk * seg_steps
+            g_lane_steps += act_per_group * seg_steps
+            prev_instr[active] += seg_steps
+            controller.record(0, seg_steps)
+            continue
+
+        t_harvest = time.perf_counter()
+        wait_before = clock.sync_wait_s
+        halted = clock.fetch(state.lanes.halted)
+        n_instr = clock.fetch(state.lanes.n_instr).astype(np.int64)
+        delta = int((n_instr - prev_instr).max(initial=0))
+        lane_steps += chunk * delta
+        g_lane_steps += act_per_group * delta
+        prev_instr = n_instr
+
+        done = active & (halted | (n_instr >= lane_ms))
+        idx = np.nonzero(done)[0]
+        if idx.size:
+            jidx = jnp.asarray(idx)
+            two = clock.fetch(state.lanes.n_two_stage).astype(np.int64)
+            mix_rows = clock.fetch(state.lanes.mix[jidx]).astype(np.int64)
+            # one O(done x mem_words) row gather serves every
+            # group's out-word read (and the keep_state memories) —
+            # not a full O(chunk) column pull per group
+            need_mem = keep_state or any(
+                g.out_addr is not None for g in groups)
+            if need_mem:
+                mem_rows = clock.fetch(state.lanes.mem[jidx])
+            if keep_state:
+                regs_rows = clock.fetch(state.lanes.regs[jidx])
+                pc_rows = clock.fetch(state.lanes.pc)[idx]
+            for g in np.unique(lane_group[idx]):
+                sel = lane_group[idx] == g
+                lg = idx[sel]
+                items = ids[lg]
+                r_instr[g][items] = n_instr[lg]
+                r_two[g][items] = two[lg]
+                r_halt[g][items] = halted[lg]
+                r_mix[g] += mix_rows[sel].sum(0)
+                if groups[g].out_addr is not None:
+                    r_out[g][items] = \
+                        mem_rows[sel][:, groups[g].out_addr]
+                if keep_state:
+                    r_mem[g][items] = \
+                        mem_rows[sel][:, :groups[g].mem_words]
+                    r_regs[g][items] = regs_rows[sel]
+                    r_pc[g][items] = pc_rows[sel]
+                    r_mix_items[g][items] = mix_rows[sel]
+
+            # retire done lanes, then backfill from any pending group
+            ids[idx] = -1
+            lane_group[idx] = -1
+            lane_ms[idx] = 0
+            state, _ = admit(state, idx)
+            # refilled lanes restart at n_instr=0; retired-but-empty
+            # lanes keep their frozen device counters
+            prev_instr[idx] = np.where(ids[idx] >= 0, 0,
+                                       prev_instr[idx])
+        controller.record(int(idx.size), seg_steps)
+        # the whole harvest+rebuild runs with the segment finished and
+        # nothing dispatched: device-idle host work, minus the transfer
+        # time already booked as sync wait
+        dt = time.perf_counter() - t_harvest
+        clock.refill_wall_s += dt
+        clock.idle_s += max(0.0, dt - (clock.sync_wait_s - wait_before))
         expected_done = chunk - int((ids >= 0).sum())
 
-        while (ids >= 0).any():
-            state = seg_fn(bank, code_len, mem_len, state)
+    return {"r_instr": r_instr, "r_two": r_two, "r_halt": r_halt,
+            "r_out": r_out, "r_mix": r_mix, "r_mem": r_mem,
+            "r_regs": r_regs, "r_pc": r_pc, "r_mix_items": r_mix_items,
+            "g_lane_steps": g_lane_steps, "g_segments": g_segments,
+            "lane_steps": lane_steps, "n_segments": n_segments}
+
+
+def _stream_resident(groups, prefs, counts, ms_of, bank, code_len,
+                     mem_len, bank_np, chunk, keep_state, mesh, stepper,
+                     subset, mem_words,
+                     controller: _SuperstepController,
+                     clock: _SyncClock):
+    """The resident stream loop (DESIGN.md §9.9, `refill="device"`).
+
+    Pipeline per iteration, in device-queue order:
+
+        refill_i  — donated on-device op: retire finished lanes into
+                    the `ResidentAcc` rows, swap in staged items
+        seg_i     — the segment, at the controller's step bound
+        (host)    — async-fetch refill_i's stats vector, which blocks
+                    only until refill_i is done — seg_i is already
+                    executing behind it; then restock the staged batch
+                    for refill_{i+1} (prefetcher take + async
+                    device_put), all overlapped with seg_i
+
+    The host therefore performs exactly ONE small read per segment and
+    the device queue never drains while the stream has backlog. The
+    loop exits after the refill that retires the last item; the final
+    trailing segment dispatch sees an all-parked pool and its
+    while_loop exits without stepping. Per-item results and final
+    state are fetched ONCE, at drain.
+    """
+    n_groups = len(groups)
+    total = int(counts.sum())
+    slot_base = np.zeros(n_groups, np.int64)
+    np.cumsum(counts[:-1], out=slot_base[1:])
+    out_addr_np = np.asarray(
+        [-1 if g.out_addr is None else g.out_addr for g in groups],
+        np.int32)
+    # the banked Pallas swap is the single-device fused-stepper path;
+    # under a mesh the (bit-identical) jnp swap partitions with GSPMD
+    use_pallas = stepper == "pallas" and mesh is None
+
+    # ---- host mirror of the staged batch (stream order, FIFO)
+    st_mems = np.zeros((chunk, mem_words), np.int32)
+    st_prog = np.zeros(chunk, np.int32)
+    st_ms = np.zeros(chunk, np.int32)
+    st_slot = np.zeros(chunk, np.int32)
+    staged = {"n": 0, "dirty": True, "dev": None}
+    staged_cursor = np.zeros(n_groups, np.int64)
+    stage_sh = None
+    if mesh is not None:
+        stage_sh = dsharding.stage_shardings(
+            mesh, (st_mems, st_prog, st_ms, st_slot))
+
+    def restock():
+        take = _apportion(chunk - staged["n"], counts - staged_cursor)
+        off = staged["n"]
+        for g in np.nonzero(take)[0]:
+            k = int(take[g])
+            st_mems[off:off + k] = 0
+            st_mems[off:off + k, :groups[g].mem_words] = prefs[g].take(k)
+            st_prog[off:off + k] = g
+            st_ms[off:off + k] = ms_of[g]
+            st_slot[off:off + k] = slot_base[g] + np.arange(
+                staged_cursor[g], staged_cursor[g] + k)
+            staged_cursor[g] += k
+            off += k
+        if off != staged["n"]:
+            staged["n"] = off
+            staged["dirty"] = True
+
+    def consume(k):
+        if k <= 0:
+            return
+        keep = staged["n"] - k
+        for buf in (st_mems, st_prog, st_ms, st_slot):
+            buf[:keep] = buf[k:staged["n"]].copy()
+        staged["n"] = keep
+        staged["dirty"] = True
+
+    def upload():
+        """Async-stage the batch to device (device_put returns before
+        the transfer completes, so this overlaps the running segment)."""
+        if not staged["dirty"] and staged["dev"] is not None:
+            return
+        arrs = (st_mems.copy(), st_prog.copy(), st_ms.copy(),
+                st_slot.copy())
+        if mesh is None:
+            staged["dev"] = tuple(jax.device_put(a) for a in arrs)
+        else:
+            staged["dev"] = tuple(jax.device_put(a, s)
+                                  for a, s in zip(arrs, stage_sh))
+        staged["dirty"] = False
+
+    # ---- device state: an all-parked pool + result accumulators
+    state = _fresh_packed(np.zeros((chunk, mem_words), np.int32),
+                          np.zeros(chunk, bool),
+                          np.zeros(chunk, np.int32),
+                          np.zeros(chunk, np.int32))
+    item_slot = jnp.full((chunk,), -1, iss.I32)
+    if mesh is not None:
+        state = jax.tree.map(jax.device_put, state,
+                             dsharding.lane_shardings(mesh, state))
+        item_slot = jax.device_put(
+            item_slot, dsharding.lane_shardings(mesh, item_slot))
+    n_mix = len(iss.MIX_CLASSES)
+    acc = ResidentAcc(
+        n_instr=jnp.zeros(total, iss.I32),
+        n_two=jnp.zeros(total, iss.I32),
+        halted=jnp.zeros(total, bool),
+        out=jnp.zeros(total, iss.I32),
+        mix_g=jnp.zeros((n_groups, n_mix), iss.I32),
+        prev_instr=jnp.zeros(chunk, iss.I32),
+        mems=jnp.zeros((total, mem_words), iss.I32) if keep_state
+        else None,
+        regs=jnp.zeros((total, 16), iss.I32) if keep_state else None,
+        pc=jnp.zeros(total, iss.I32) if keep_state else None,
+        mix_items=jnp.zeros((total, n_mix), iss.I32) if keep_state
+        else None)
+    out_addr_dev = jnp.asarray(out_addr_np)
+
+    g_lane_steps = np.zeros(n_groups, np.int64)
+    g_segments = np.zeros(n_groups, np.int64)
+    lane_steps = 0
+    n_segments = 0
+    retired = 0
+    prev_seg = 0
+
+    restock()
+    while retired < total:
+        upload()
+        state, item_slot, acc, stats = _refill_resident(
+            state, item_slot, acc, *staged["dev"],
+            jnp.asarray(staged["n"], iss.I32), out_addr_dev,
+            use_pallas=use_pallas)
+        seg_steps = controller.next_seg()
+        seg_fn = _packed_segment_runner(stepper, chunk, seg_steps,
+                                        mem_words, n_groups,
+                                        bank_np.shape[1], mesh, subset)
+        state = seg_fn(bank, code_len, mem_len, state)
+        if hasattr(stats, "copy_to_host_async"):
+            stats.copy_to_host_async()
+        # blocks until refill_i only — seg_i is already running
+        sv = clock.fetch(stats)
+        n_ret, n_con, delta = int(sv[0]), int(sv[1]), int(sv[2])
+        act = sv[3:].astype(np.int64)
+        if (act > 0).any():
             n_segments += 1
-            active = ids >= 0
-            act_per_group = np.bincount(lane_group[active],
-                                        minlength=n_groups)
-            g_segments += act_per_group > 0
-
-            # single-scalar sync, as in run_stream: if no lane finished,
-            # every active lane ran exactly seg_steps
-            if int(_done_count_packed(state)) == expected_done:
-                lane_steps += chunk * seg_steps
-                g_lane_steps += act_per_group * seg_steps
-                prev_instr[active] += seg_steps
-                continue
-
-            halted = np.asarray(state.lanes.halted)
-            n_instr = np.asarray(state.lanes.n_instr, np.int64)
-            delta = int((n_instr - prev_instr).max(initial=0))
+            g_segments += act > 0
+            g_lane_steps += act * delta
             lane_steps += chunk * delta
-            g_lane_steps += act_per_group * delta
-            prev_instr = n_instr
+        controller.record(n_ret, prev_seg)
+        prev_seg = seg_steps
+        retired += n_ret
+        t_refill = time.perf_counter()
+        consume(n_con)
+        restock()
+        dt = time.perf_counter() - t_refill
+        clock.refill_wall_s += dt
+        try:
+            if state.lanes.regs.is_ready():   # segment already done:
+                clock.idle_s += dt            # restock was device-idle
+        except AttributeError:
+            pass
 
-            done = active & (halted | (n_instr >= lane_ms))
-            idx = np.nonzero(done)[0]
-            if idx.size:
-                jidx = jnp.asarray(idx)
-                two = np.asarray(state.lanes.n_two_stage, np.int64)
-                mix_rows = np.asarray(state.lanes.mix[jidx], np.int64)
-                # one O(done x mem_words) row gather serves every
-                # group's out-word read (and the keep_state memories) —
-                # not a full O(chunk) column pull per group
-                need_mem = keep_state or any(
-                    g.out_addr is not None for g in groups)
-                if need_mem:
-                    mem_rows = np.asarray(state.lanes.mem[jidx])
-                if keep_state:
-                    regs_rows = np.asarray(state.lanes.regs[jidx])
-                    pc_rows = np.asarray(state.lanes.pc)[idx]
-                for g in np.unique(lane_group[idx]):
-                    sel = lane_group[idx] == g
-                    lg = idx[sel]
-                    items = ids[lg]
-                    r_instr[g][items] = n_instr[lg]
-                    r_two[g][items] = two[lg]
-                    r_halt[g][items] = halted[lg]
-                    r_mix[g] += mix_rows[sel].sum(0)
-                    if groups[g].out_addr is not None:
-                        r_out[g][items] = \
-                            mem_rows[sel][:, groups[g].out_addr]
-                    if keep_state:
-                        r_mem[g][items] = \
-                            mem_rows[sel][:, :groups[g].mem_words]
-                        r_regs[g][items] = regs_rows[sel]
-                        r_pc[g][items] = pc_rows[sel]
-                        r_mix_items[g][items] = mix_rows[sel]
+    # ---- drain: ONE demux of the on-device accumulators
+    res_instr = clock.fetch(acc.n_instr).astype(np.int64)
+    res_two = clock.fetch(acc.n_two).astype(np.int64)
+    res_halt = clock.fetch(acc.halted)
+    res_out = clock.fetch(acc.out)
+    res_mix_g = clock.fetch(acc.mix_g).astype(np.int64)
+    if keep_state:
+        res_mems = clock.fetch(acc.mems)
+        res_regs = clock.fetch(acc.regs)
+        res_pc = clock.fetch(acc.pc)
+        res_mix_items = clock.fetch(acc.mix_items)
 
-                # retire done lanes, then backfill from any pending group
-                ids[idx] = -1
-                lane_group[idx] = -1
-                lane_ms[idx] = 0
-                state, _ = admit(state, idx)
-                # refilled lanes restart at n_instr=0; retired-but-empty
-                # lanes keep their frozen device counters
-                prev_instr[idx] = np.where(ids[idx] >= 0, 0,
-                                           prev_instr[idx])
-            expected_done = chunk - int((ids >= 0).sum())
-    finally:
-        for p in prefs:
-            p.close()
-
-    wall_s = time.perf_counter() - t0
-    busy = np.array([r.sum() for r in r_instr], np.float64)
-    busy_share = busy / max(busy.sum(), 1.0)
-    results = []
+    r_instr, r_two, r_halt, r_out, r_mix = [], [], [], [], []
+    r_mem = r_regs = r_pc = r_mix_items = None
+    if keep_state:
+        r_mem, r_regs, r_pc, r_mix_items = [], [], [], []
     for g, grp in enumerate(groups):
-        results.append(FleetResult(
-            n_items=grp.n_items, n_instr=r_instr[g], n_two_stage=r_two[g],
-            halted=r_halt[g], out=r_out[g], mix=r_mix[g],
-            lane_steps=int(g_lane_steps[g]), n_segments=int(g_segments[g]),
-            chunk=chunk, seg_steps=seg_steps,
-            wall_s=wall_s * float(busy_share[g]),
-            stepper=stepper, n_devices=n_dev,
-            mems=r_mem[g] if keep_state else None,
-            regs=r_regs[g] if keep_state else None,
-            pc=r_pc[g] if keep_state else None,
-            mix_items=r_mix_items[g] if keep_state else None,
-        ))
-    stats = PackedStats(
-        n_groups=n_groups, n_progs=bank_np.shape[0],
-        bank_width=bank_np.shape[1], lane_steps=lane_steps,
-        n_segments=n_segments, chunk=chunk, seg_steps=seg_steps,
-        wall_s=wall_s, stepper=stepper, n_devices=n_dev)
-    return results, stats
+        sl = slice(int(slot_base[g]), int(slot_base[g] + counts[g]))
+        r_instr.append(res_instr[sl])
+        r_two.append(res_two[sl])
+        r_halt.append(res_halt[sl])
+        r_out.append(res_out[sl])
+        r_mix.append(res_mix_g[g])
+        if keep_state:
+            r_mem.append(res_mems[sl, :grp.mem_words].copy())
+            r_regs.append(res_regs[sl])
+            r_pc.append(res_pc[sl])
+            r_mix_items.append(res_mix_items[sl])
+
+    return {"r_instr": r_instr, "r_two": r_two, "r_halt": r_halt,
+            "r_out": r_out, "r_mix": r_mix, "r_mem": r_mem,
+            "r_regs": r_regs, "r_pc": r_pc, "r_mix_items": r_mix_items,
+            "g_lane_steps": g_lane_steps, "g_segments": g_segments,
+            "lane_steps": lane_steps, "n_segments": n_segments}
 
 
 def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,
@@ -718,7 +1204,8 @@ def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,
                         keep_state: bool = False,
                         mesh: Optional[Mesh] = None,
                         stepper: str = "branchless",
-                        prefetch: bool = True) -> FleetResult:
+                        prefetch: bool = True, refill: str = "device",
+                        adaptive: bool = False) -> FleetResult:
     """Convenience wrapper: stream a FlexiBench workload end to end.
 
     The branchless/pallas steppers' opcode subset is derived from the
@@ -731,4 +1218,5 @@ def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,
         max_steps=w.max_steps if max_steps is None else max_steps,
         chunk=chunk,
         seg_steps=seg_steps, out_addr=w.out_addr, keep_state=keep_state,
-        mesh=mesh, stepper=stepper, prefetch=prefetch)
+        mesh=mesh, stepper=stepper, prefetch=prefetch, refill=refill,
+        adaptive=adaptive)

@@ -55,7 +55,17 @@ class FleetPlan:
     bank + per-lane prog_id, freed lanes backfilled from any pending
     group (§9.8) — instead of draining groups sequentially. Per-group
     results are bit-exact either way (pinned by tests/test_packed.py);
-    `packed=False` keeps the sequential path as the A/B baseline."""
+    `packed=False` keeps the sequential path as the A/B baseline.
+
+    `refill` picks the stream loop (§9.9): "device" (default) is the
+    resident runtime — on-device retire/refill, one small async stats
+    read per segment — and "host" the PR-4 blocking host-refill loop,
+    kept for A/B runs; results are bit-exact either way
+    (tests/test_resident.py). `adaptive` turns on the superstep
+    controller: each segment's step bound is picked from a bounded
+    ladder under `seg_steps` by the observed halt cadence
+    (deterministic for a given plan, bit-exact with fixed
+    segmentation)."""
     groups: Sequence[FleetGroup]
     chunk: int = 256
     seg_steps: int = 4096
@@ -64,6 +74,8 @@ class FleetPlan:
     stepper: str = "branchless"
     prefetch: bool = True
     packed: bool = True
+    refill: str = "device"
+    adaptive: bool = False
 
     @property
     def n_items(self) -> int:
@@ -104,7 +116,8 @@ def run_plan(plan: FleetPlan, mesh: Optional[Mesh] = None,
         results, stats = engine.run_packed(
             lowered, chunk=plan.chunk, seg_steps=plan.seg_steps,
             keep_state=keep_state, mesh=mesh, stepper=plan.stepper,
-            prefetch=plan.prefetch)
+            prefetch=plan.prefetch, refill=plan.refill,
+            adaptive=plan.adaptive)
         group_reports = [
             build_group_report(
                 group=g, workload=w, core=core, result=res,
@@ -122,7 +135,8 @@ def run_plan(plan: FleetPlan, mesh: Optional[Mesh] = None,
             w, g.n_items, seed=g.seed, chunk=plan.chunk,
             seg_steps=plan.seg_steps, max_steps=g.max_steps,
             keep_state=keep_state, mesh=mesh, stepper=plan.stepper,
-            prefetch=plan.prefetch)
+            prefetch=plan.prefetch, refill=plan.refill,
+            adaptive=plan.adaptive)
         group_reports.append(build_group_report(
             group=g, workload=w, core=core, result=res,
             lifetime_s=lifetime_s, execs_per_day=execs_per_day,

@@ -162,4 +162,11 @@ class FleetReport:
                 f"(bank {p.n_progs}x{p.bank_width} words), "
                 f"{p.n_segments} segments, {p.lane_steps:,} lane-step "
                 f"slots incl. idle, chunk {p.chunk}")
+            mode = f"{p.refill}-refill" \
+                + (", adaptive supersteps" if p.adaptive else "")
+            lines.append(
+                f"sync stats ({mode}): {p.host_syncs} blocking host "
+                f"syncs ({p.sync_wait_s:.3f}s waited), refill host work "
+                f"{p.refill_wall_s:.3f}s, device busy "
+                f"{100.0 * p.device_busy_frac:.1f}%")
         return "\n".join(lines)

@@ -719,6 +719,76 @@ def run_segment_lanes_banked(bank: jax.Array, code_len: jax.Array,
                        max_steps=ps.max_steps)
 
 
+# ---------------------------------------------------------------------------
+# Device-side refill / compaction helpers (DESIGN.md §9.9)
+#
+# The resident packed runtime never ships lane state to the host between
+# segments: retired lanes are detected, their tallies scattered into
+# on-device result accumulators, and fresh items swapped in from a staged
+# buffer — all inside one jitted, donated op (fleet/engine.py). The
+# *semantics* of that swap live here, `branchless_commits`-style: one
+# shape-polymorphic definition shared by every stepper, with a banked
+# Pallas variant (`kernels/iss_stepper.py::iss_refill`) that reproduces
+# the same swap through one-hot ports and must stay bit-identical
+# (pinned by tests/test_resident.py).
+# ---------------------------------------------------------------------------
+
+
+def retire_mask(ps: PackedState, item_slot: jax.Array) -> jax.Array:
+    """Lanes whose item just finished: occupied (`item_slot >= 0`) and
+    halted or out of their OWN step budget. Parked lanes (slot -1) are
+    free but have nothing to retire; padding lanes stay parked forever.
+    """
+    return (item_slot >= 0) & (ps.lanes.halted
+                               | (ps.lanes.n_instr >= ps.max_steps))
+
+
+def refill_take(free: jax.Array, n_staged: jax.Array):
+    """Deterministic staged->lane assignment for an on-device refill.
+
+    Free lanes are ranked in lane order (a cumsum compaction — the
+    device-side analogue of the host path's `np.nonzero(done)` index
+    walk); the first `n_staged` of them take staged rows 0..n_staged-1
+    in order, so the host — which built the staged batch and will learn
+    only the *count* consumed — always knows exactly which item went
+    where it matters (into the stream) without reading any lane state.
+
+    Returns `(take, src)`: `take[l]` marks lanes that swap in a fresh
+    item, `src[l]` is the staged row a taking lane reads (clipped for
+    non-taking lanes, whose gathers are discarded).
+    """
+    rank = jnp.cumsum(free.astype(I32)) - 1
+    take = free & (rank < n_staged)
+    src = jnp.clip(rank, 0, free.shape[0] - 1)
+    return take, src
+
+
+def refill_lanes(ps: PackedState, take: jax.Array, src: jax.Array,
+                 staged_mems: jax.Array, staged_prog: jax.Array,
+                 staged_ms: jax.Array) -> PackedState:
+    """Swap fresh items into `take` lanes from staged rows `src`.
+
+    The jnp form of the resident swap (gather staged rows, masked
+    reset of the architectural state) — used by the branchless and
+    switch steppers; the Pallas stepper's variant
+    (`kernels/iss_stepper.py::iss_refill`) expresses the same gather
+    as a one-hot reduction and is bit-identical.
+    """
+    t1 = take[:, None]
+    lanes = ps.lanes
+    return PackedState(
+        lanes=ISSState(
+            regs=jnp.where(t1, 0, lanes.regs),
+            pc=jnp.where(take, 0, lanes.pc),
+            mem=jnp.where(t1, staged_mems[src], lanes.mem),
+            halted=jnp.where(take, False, lanes.halted),
+            n_instr=jnp.where(take, 0, lanes.n_instr),
+            n_two_stage=jnp.where(take, 0, lanes.n_two_stage),
+            mix=jnp.where(t1, 0, lanes.mix)),
+        prog_id=jnp.where(take, staged_prog[src], ps.prog_id),
+        max_steps=jnp.where(take, staged_ms[src], ps.max_steps))
+
+
 @functools.partial(jax.jit, static_argnums=(2,))
 def run(code: jax.Array, mem: jax.Array, max_steps: int) -> ISSState:
     """Run to ecall or max_steps. code: (P,) uint32; mem: (M,) int32."""

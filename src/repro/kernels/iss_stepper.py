@@ -292,6 +292,125 @@ def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
                        max_steps=state.max_steps)
 
 
+def _refill_kernel(take_ref, src_ref, smem_ref, sprog_ref, sms_ref,
+                   regs_ref, pc_ref, mem_ref, halt_ref, ni_ref, n2_ref,
+                   mix_ref, pid_ref, ms_ref,
+                   oregs_ref, opc_ref, omem_ref, ohalt_ref, oni_ref,
+                   on2_ref, omix_ref, opid_ref, oms_ref):
+    """One-hot staged->lane swap for a lane tile (DESIGN.md §9.9).
+
+    The resident runtime's compaction/scatter expressed the way the
+    fused stepper expresses its ports: each taking lane's staged row is
+    selected by a masked one-hot reduction over the staged axis instead
+    of a row gather, so the kernel body is pure elementwise/reduction
+    work. The take/src assignment itself (`iss.refill_take`, a pool-wide
+    cumsum) is computed outside — ranks cross lane tiles, exactly like
+    the host path's pool-wide free-lane walk. Bit-identical to
+    `iss.refill_lanes`.
+    """
+    take = take_ref[...]
+    src = src_ref[...]
+    smem = smem_ref[...]
+    n_staged_rows = smem.shape[0]
+    onehot = (src[:, None] == jnp.arange(n_staged_rows, dtype=I32)[None, :]) \
+        & take[:, None]
+    o32 = onehot.astype(I32)
+
+    def pick(rows):
+        return jnp.sum(jnp.where(onehot, rows[None, :], 0), axis=1)
+
+    new_mem = jnp.sum(o32[:, :, None] * smem[None, :, :], axis=1)
+    t1 = take[:, None]
+    oregs_ref[...] = jnp.where(t1, 0, regs_ref[...])
+    opc_ref[...] = jnp.where(take, 0, pc_ref[...])
+    omem_ref[...] = jnp.where(t1, new_mem, mem_ref[...])
+    ohalt_ref[...] = jnp.where(take, False, halt_ref[...])
+    oni_ref[...] = jnp.where(take, 0, ni_ref[...])
+    on2_ref[...] = jnp.where(take, 0, n2_ref[...])
+    omix_ref[...] = jnp.where(t1, 0, mix_ref[...])
+    opid_ref[...] = jnp.where(take, pick(sprog_ref[...]), pid_ref[...])
+    oms_ref[...] = jnp.where(take, pick(sms_ref[...]), ms_ref[...])
+
+
+def iss_refill(state: PackedState, take: jax.Array, src: jax.Array,
+               staged_mems: jax.Array, staged_prog: jax.Array,
+               staged_ms: jax.Array, *, lane_tile: Optional[int] = None,
+               interpret: Optional[bool] = None) -> PackedState:
+    """Banked Pallas variant of `iss.refill_lanes` — same swap, one-hot
+    ports, gridded over lane tiles with state aliased input->output so
+    the donated lane pool updates in place. The staged batch is small
+    (<= chunk rows), so it is replicated to every tile like the program
+    bank in `iss_segment_banked`."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    lanes = state.lanes
+    n_lanes, mem_words = lanes.mem.shape
+    n_rows = staged_mems.shape[0]
+    tile = _pick_lane_tile(n_lanes, 128 if lane_tile is None else lane_tile)
+    n_mix = len(iss.MIX_CLASSES)
+
+    def row(i):
+        return (i,)
+
+    def row2(i):
+        return (i, 0)
+
+    def whole(i):
+        return (0,)
+
+    out = pl.pallas_call(
+        _refill_kernel,
+        grid=(n_lanes // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((n_rows, mem_words), lambda i: (0, 0)),
+            pl.BlockSpec((n_rows,), whole),
+            pl.BlockSpec((n_rows,), whole),
+            pl.BlockSpec((tile, 16), row2),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile, mem_words), row2),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile, n_mix), row2),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, 16), row2),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile, mem_words), row2),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile, n_mix), row2),
+            pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_lanes, 16), I32),
+            jax.ShapeDtypeStruct((n_lanes,), I32),
+            jax.ShapeDtypeStruct((n_lanes, mem_words), I32),
+            jax.ShapeDtypeStruct((n_lanes,), jnp.bool_),
+            jax.ShapeDtypeStruct((n_lanes,), I32),
+            jax.ShapeDtypeStruct((n_lanes,), I32),
+            jax.ShapeDtypeStruct((n_lanes, n_mix), I32),
+            jax.ShapeDtypeStruct((n_lanes,), I32),
+            jax.ShapeDtypeStruct((n_lanes,), I32),
+        ],
+        # lane-pool state updates in place (take/src/staged, inputs 0-4,
+        # are read-only refill constants)
+        input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3, 9: 4, 10: 5,
+                              11: 6, 12: 7, 13: 8},
+        interpret=interpret,
+    )(take, src, staged_mems, staged_prog, staged_ms,
+      lanes.regs, lanes.pc, lanes.mem, lanes.halted, lanes.n_instr,
+      lanes.n_two_stage, lanes.mix, state.prog_id, state.max_steps)
+    return PackedState(lanes=ISSState(*out[:7]), prog_id=out[7],
+                       max_steps=out[8])
+
+
 def iss_segment(code: jax.Array, state: ISSState, *, seg_steps: int,
                 max_steps: int, subset=None,
                 lane_tile: Optional[int] = None,

@@ -29,7 +29,7 @@ def bench():
 
 def test_bench_has_all_studies(bench):
     for key in ("streaming_vs_monolithic", "stepper_ab", "fusion_proof",
-                "packed_vs_sequential"):
+                "packed_vs_sequential", "resident_vs_host_refill"):
         assert key in bench, f"BENCH_fleet.json lost the {key} study"
 
 
@@ -58,3 +58,16 @@ def test_stepper_ab_invariant(bench):
     """§9.5: the branchless stepper must stay ahead of the legacy
     lax.switch interpreter per retired instruction."""
     assert float(bench["stepper_ab"]["stepper_speedup"]) > 1.0
+
+
+def test_resident_runtime_invariant(bench):
+    """§9.9: on the 16x-skewed churny plan the resident runtime must be
+    bit-exact with the host-refill baseline, no slower on wall-clock,
+    and must perform strictly fewer blocking host syncs."""
+    rh = bench["resident_vs_host_refill"]
+    assert rh["bit_exact"] is True
+    assert float(rh["resident_wall_s"]) <= \
+        float(rh["host_refill_wall_s"]), (
+        rh["resident_wall_s"], rh["host_refill_wall_s"])
+    assert int(rh["resident_syncs"]) < int(rh["host_refill_syncs"]), (
+        rh["resident_syncs"], rh["host_refill_syncs"])

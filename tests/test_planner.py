@@ -1,7 +1,11 @@
-"""Serving-fleet planner: embodied-vs-operational crossover properties."""
+"""Serving-fleet planner: embodied-vs-operational crossover properties,
+and exact equality of the broadcast `plan_grid` with the scalar loop
+formulation it vectorized."""
 import numpy as np
 
-from repro.core.planner import VARIANTS, plan_grid, tokens_per_s_per_chip
+from repro.core.planner import (CHIP_POWER_W, PUE, TPU_EMBODIED_KG,
+                                VARIANTS, plan_grid,
+                                tokens_per_s_per_chip)
 
 
 def _plan(lifetimes, qps):
@@ -36,3 +40,59 @@ def test_total_carbon_monotone_in_qps():
     plan = _plan([365], np.logspace(2, 6, 9))
     kg = plan["total_kg"][0]
     assert np.all(np.diff(kg) > 0)
+
+
+def _plan_grid_loop(*, n_params, kv_bytes_per_token, lifetimes_days,
+                    qps_grid, chips_options=(8, 16, 32, 64, 128, 256),
+                    intensity=0.367, variants=VARIANTS):
+    """Scalar reference: the triple-nested loop `plan_grid` replaced
+    with one broadcast — kept here verbatim as the equality oracle."""
+    nl, nq = len(lifetimes_days), len(qps_grid)
+    best = np.full((nl, nq), -1, np.int32)
+    best_chips = np.zeros((nl, nq), np.int32)
+    best_kg = np.full((nl, nq), np.inf)
+    options = []
+    for vi, v in enumerate(variants):
+        for chips in chips_options:
+            tps = tokens_per_s_per_chip(n_params, v.weight_bits,
+                                        kv_bytes_per_token, chips) * chips
+            options.append((vi, chips, tps))
+    for li, days in enumerate(lifetimes_days):
+        for qi, qps in enumerate(qps_grid):
+            for vi, chips, tps in options:
+                if tps < qps:
+                    continue
+                emb = chips * TPU_EMBODIED_KG * \
+                    min(days / (3 * 365.0), 1.0)
+                util = qps / tps
+                kwh = chips * CHIP_POWER_W * PUE * util \
+                    * days * 24.0 / 1000.0
+                op = kwh * intensity
+                total = variants[vi].prep_kg + emb + op
+                if total < best_kg[li, qi]:
+                    best_kg[li, qi] = total
+                    best[li, qi] = vi
+                    best_chips[li, qi] = chips
+    return {"variant_idx": best, "chips": best_chips,
+            "total_kg": best_kg}
+
+
+def test_plan_grid_broadcast_equals_loop_exactly():
+    """The vectorized `plan_grid` is closed-form equal to the scalar
+    loop — same floats (identical op order), same argmin tie-breaks
+    (first strict minimum), same infeasible markers — across a grid
+    that exercises feasible, infeasible, and tied regions."""
+    kv = 32 * 8 * 128 * 2 * 2
+    kw = dict(n_params=8e9, kv_bytes_per_token=kv,
+              lifetimes_days=np.array([1.0, 7.0, 90.0, 3 * 365.0,
+                                       10 * 365.0]),
+              qps_grid=np.logspace(1, 12, 23))
+    got = plan_grid(**kw)
+    ref = _plan_grid_loop(**kw)
+    np.testing.assert_array_equal(got["variant_idx"],
+                                  ref["variant_idx"])
+    np.testing.assert_array_equal(got["chips"], ref["chips"])
+    np.testing.assert_array_equal(got["total_kg"], ref["total_kg"])
+    assert got["variant_idx"].dtype == ref["variant_idx"].dtype
+    assert got["chips"].dtype == ref["chips"].dtype
+    assert (got["variant_idx"] == -1).any()        # infeasible cells hit
