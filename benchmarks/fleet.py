@@ -1,6 +1,6 @@
 """Streaming fleet engine benchmarks (DESIGN.md §9).
 
-Six studies on a skewed halt-time distribution (the paper's regime:
+Seven studies on a skewed halt-time distribution (the paper's regime:
 most items run short data-dependent paths, a tail runs long ones):
 
 - streaming vs monolithic: total simulated lane-steps; the monolithic
@@ -25,6 +25,9 @@ most items run short data-dependent paths, a tail runs long ones):
   plan — bit-exact, strictly fewer blocking host syncs, and wall-clock
   no worse (those two are the gates; the committed run records a
   >=1.2x win).
+- timing overhead (§9.10): segment wall-clock of the same stream with
+  the per-lane cycle layer off (cost=None, DCE'd graph) vs on with full
+  dynamic cost rows — bit-exact architectural state, <=1.5x overhead.
 - device scaling (§9.6): items/s of the shard_map'd engine as the host
   device count grows (subprocesses with forced CPU device counts).
 
@@ -418,6 +421,66 @@ def fleet_resident_vs_host(chunk: int = 256, seg_steps: int = 512,
     return rows, derived
 
 
+def fleet_timing_overhead(chunk: int = 128, seg_steps: int = 256,
+                          max_steps: int = 100_000):
+    """Cost of the per-lane timing layer (DESIGN.md §9.10).
+
+    The same skewed stream run twice: cycles-off (cost=None — the
+    timing graph is dead-code-eliminated, identical to the pre-§9.10
+    engine) and cycles-on with a full *dynamic* cost row (base table
+    plus taken-branch refetch, serial shift, subword RMW — the most
+    expensive configuration). The timing layer adds one one-hot dot
+    product and an int32 accumulate per lane-step, so the segment wall
+    clock should move very little; gates: architectural results
+    bit-exact on vs off, per-lane tallies populated only when on, and
+    the recorded overhead ratio under 1.5x (best-of-`reps` each, after
+    a compile warm-up per mode).
+    """
+    from repro.flexibits.cycles import QERV, TICKS_PER_CYCLE, cost_row
+
+    prog = skew_program()
+    reps = 3
+    n_items = 8 * chunk
+    mems = skew_fleet(prog, n_items, short_iters=48, long_iters=2048,
+                      long_frac=0.1, seed=23)
+    cost = cost_row(QERV, dynamic=True)
+    kw = dict(n_items=n_items, mem_words=32, max_steps=max_steps,
+              chunk=chunk, seg_steps=seg_steps, out_addr=1)
+
+    def run(c):
+        best = None
+        for i in range(reps + 1):             # first rep is the warm-up
+            r = run_stream(prog.code, array_source(mems), cost=c, **kw)
+            if i > 0 and (best is None or r.wall_s < best.wall_s):
+                best = r
+        return best
+
+    off = run(None)
+    on = run(cost)
+    np.testing.assert_array_equal(off.n_instr, on.n_instr)
+    np.testing.assert_array_equal(off.out, on.out)
+    assert off.n_cycles is None and on.n_cycles is not None
+    overhead = on.wall_s / max(off.wall_s, 1e-12)
+    mean_cycles = float(on.n_cycles.sum()) / n_items / TICKS_PER_CYCLE
+    rows = [
+        ("fleet/timing_wall_s", round(on.wall_s, 3), round(off.wall_s, 3)),
+        ("fleet/timing_overhead", round(overhead, 3), "<=1.5x"),
+        ("fleet/timing_cyc_per_item", round(mean_cycles, 1), "-"),
+    ]
+    derived = {
+        "cycles_on_wall_s": on.wall_s,
+        "cycles_off_wall_s": off.wall_s,
+        "overhead_ratio": overhead,
+        "mean_cycles_per_item": mean_cycles,
+        "core": "QERV",
+        "dynamic": True,
+        "bit_exact": True,
+        "target": "cycles-on segment wall <= 1.5x cycles-off "
+                  "(dynamic rows, worst case)",
+    }
+    return rows, derived
+
+
 def _scaling_worker(n_items: int, chunk: int, seg_steps: int) -> dict:
     """One scaling point: run the sharded engine over ALL host devices.
     Invoked in a subprocess with XLA_FLAGS forcing the device count."""
@@ -540,6 +603,16 @@ def main():
           f"host syncs (adaptive rungs {rh['adaptive_rungs']}, "
           f"bit-exact)")
 
+    to_rows, to = fleet_timing_overhead(chunk=max(args.chunk, 64),
+                                        seg_steps=args.seg_steps)
+    bench["timing_overhead"] = to
+    print(f"\n{'metric':<26} {'cycles-on':>14} {'cycles-off':>14}")
+    for name, on_v, off_v in to_rows:
+        print(f"{name:<26} {on_v:>14} {off_v:>14}")
+    print(f"timing layer: {to['overhead_ratio']:.3f}x segment wall with "
+          f"dynamic {to['core']} rows on ({to['mean_cycles_per_item']:.0f} "
+          f"measured cycles/item, bit-exact architectural state)")
+
     if not args.skip_scaling:
         sc_rows, sc = fleet_device_scaling(
             n_items=args.items, chunk=args.chunk,
@@ -575,6 +648,9 @@ def main():
         failures.append(f"resident sync target NOT met: "
                         f"{rh['resident_syncs']} syncs >= "
                         f"{rh['host_refill_syncs']} host-refill syncs")
+    if to["overhead_ratio"] > 1.5:
+        failures.append(f"timing overhead target NOT met: "
+                        f"{to['overhead_ratio']:.3f}x > 1.5x")
     if derived["cycles_saved_ratio"] < 2.0 and args.items < 4 * args.chunk:
         print(f"note: fleet too small to exploit skew "
               f"(--items {args.items} < 4x --chunk {args.chunk}); "

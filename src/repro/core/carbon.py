@@ -12,10 +12,10 @@ TinyML footprint, [37]/[58] battery LCAs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
-from repro.flexibits.cycles import (Core, sram_power_mw, system_area_mm2,
-                                    system_power_mw)
+from repro.flexibits.cycles import (Core, event_cycles, sram_power_mw,
+                                    system_area_mm2, system_power_mw)
 
 # ---- energy sources, kg CO2e / kWh ([109] EIA 2023, [118] Wind Vision)
 ENERGY_SOURCES: Dict[str, float] = {
@@ -41,11 +41,21 @@ SILICON_TINYML_SYSTEM_KG = 2.66      # full silicon TinyML system [85]
 
 @dataclasses.dataclass(frozen=True)
 class DeviceProfile:
-    """Per-(workload, core) numbers the carbon model consumes."""
+    """Per-(workload, core) numbers the carbon model consumes.
+
+    `events` optionally carries the (N_COST,) timing-event vector the
+    PyISS cycle oracle records (DESIGN.md §9.10). With it, runtime is
+    priced per-event through `cycles.event_cycles` instead of the
+    two-bucket analytic model; `dynamic=False` (the base case) is
+    *exactly* the two-bucket number, `dynamic=True` additionally prices
+    taken-branch refetch, serial shift, and subword read-modify-write.
+    """
     n_one_stage: float               # one-stage instructions / execution
     n_two_stage: float
     vm_kb: float
     nvm_kb: float
+    events: Optional[Tuple[float, ...]] = None   # mean per-exec events
+    dynamic: bool = False            # price the dynamic timing terms
 
 
 def embodied_kg(area_mm2: float) -> float:
@@ -57,20 +67,29 @@ def soc_embodied_kg(core: Core, prof: DeviceProfile) -> float:
 
 
 def runtime_s(core: Core, prof: DeviceProfile, clock_hz=10_000.0) -> float:
+    if prof.events is not None:
+        return event_cycles(prof.events, core, prof.dynamic) / clock_hz
     return core.runtime_s(prof.n_one_stage, prof.n_two_stage, clock_hz)
 
 
 def energy_per_exec_j(core: Core, prof: DeviceProfile,
-                      clock_hz=10_000.0) -> float:
+                      clock_hz=10_000.0,
+                      cycles: Optional[float] = None) -> float:
+    """Energy of one execution. `cycles` overrides the profile's runtime
+    with a *measured* per-execution cycle count (the fleet engine's
+    per-lane `n_cycles` tally, §9.10)."""
     p_mw = system_power_mw(core, prof.vm_kb)
-    return p_mw * 1e-3 * runtime_s(core, prof, clock_hz)
+    t = cycles / clock_hz if cycles is not None \
+        else runtime_s(core, prof, clock_hz)
+    return p_mw * 1e-3 * t
 
 
 def operational_kg(core: Core, prof: DeviceProfile, *, lifetime_s: float,
                    execs_per_day: float, intensity: float = 0.367,
-                   clock_hz: float = 10_000.0) -> float:
+                   clock_hz: float = 10_000.0,
+                   cycles: Optional[float] = None) -> float:
     n_exec = execs_per_day * lifetime_s / 86_400.0
-    kwh = energy_per_exec_j(core, prof, clock_hz) * n_exec / 3.6e6
+    kwh = energy_per_exec_j(core, prof, clock_hz, cycles) * n_exec / 3.6e6
     return kwh * intensity
 
 

@@ -51,6 +51,7 @@ from jax.sharding import Mesh
 from repro.distributed import sharding as dsharding
 from repro.flexibench.base import Workload
 from repro.flexibits import iss
+from repro.flexibits.cycles import N_COST
 from repro.kernels import iss_stepper
 
 STEPPERS = ("branchless", "pallas", "switch")
@@ -231,6 +232,9 @@ class FleetResult:
     regs: Optional[np.ndarray] = None    # (n, 16)
     pc: Optional[np.ndarray] = None      # (n,)
     mix_items: Optional[np.ndarray] = None  # (n, 8)
+    # per-item accumulated timing ticks (§9.10) — populated when the
+    # group ran with a cycle-cost row, None for cycles-off runs
+    n_cycles: Optional[np.ndarray] = None   # (n,)
 
     @property
     def busy_steps(self) -> int:
@@ -262,6 +266,7 @@ def _refill(state: iss.ISSState, replace, new_mems) -> iss.ISSState:
         n_instr=jnp.where(replace, 0, state.n_instr),
         n_two_stage=jnp.where(replace, 0, state.n_two_stage),
         mix=jnp.where(rep1, 0, state.mix),
+        n_cycles=jnp.where(replace, 0, state.n_cycles),
     )
 
 
@@ -275,6 +280,7 @@ def _fresh_chunk(mems: np.ndarray, active: np.ndarray) -> iss.ISSState:
         n_instr=jnp.zeros((n,), iss.I32),
         n_two_stage=jnp.zeros((n,), iss.I32),
         mix=jnp.zeros((n, len(iss.MIX_CLASSES)), iss.I32),
+        n_cycles=jnp.zeros((n,), iss.I32),
     )
 
 
@@ -286,7 +292,8 @@ def run_stream(code: np.ndarray, source: Source, *, n_items: int,
                stepper: str = "branchless",
                subset: Optional[frozenset] = None,
                prefetch: bool = True, refill: str = "device",
-               adaptive: bool = False) -> FleetResult:
+               adaptive: bool = False,
+               cost: Optional[np.ndarray] = None) -> FleetResult:
     """Stream `n_items` memory images from `source` through `chunk` lanes.
 
     Returns per-item scalars in item order. With `keep_state=True` the
@@ -316,11 +323,16 @@ def run_stream(code: np.ndarray, source: Source, *, n_items: int,
     `run_packed` (DESIGN.md §9.9); with the default resident loop the
     per-segment host sync is one small async stats read, with
     `refill="host"` it is the PR-4 blocking done-count scalar.
+
+    `cost` optionally turns on the per-lane timing layer (DESIGN.md
+    §9.10): an (N_COST,) int32 cycle-cost row (`cycles.cost_row`) priced
+    per retired instruction into each item's `n_cycles` tally.
+    Architectural results are bit-identical with and without it.
     """
     results, stats = run_packed(
         [PackedGroup(code=code, source=source, n_items=n_items,
                      max_steps=max_steps, mem_words=mem_words,
-                     out_addr=out_addr)],
+                     out_addr=out_addr, cost=cost)],
         chunk=chunk, seg_steps=seg_steps, keep_state=keep_state,
         mesh=mesh, stepper=stepper, subset=subset, prefetch=prefetch,
         refill=refill, adaptive=adaptive)
@@ -356,6 +368,9 @@ class PackedGroup:
     max_steps: int
     mem_words: int
     out_addr: Optional[int] = None
+    # optional (N_COST,) int32 cycle-cost row (cycles.cost_row) — turns
+    # on per-lane n_cycles accounting for this group's items (§9.10)
+    cost: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -541,38 +556,42 @@ def _packed_state_specs(mesh: Mesh, mem_words: int):
 @functools.lru_cache(maxsize=None)
 def _packed_segment_runner(stepper: str, chunk: int, seg_steps: int,
                            mem_words: int, n_progs: int, bank_width: int,
-                           mesh: Optional[Mesh], subset):
+                           mesh: Optional[Mesh], subset, timing: bool):
     """Compiled packed segment runner, cached per engine configuration.
 
-    The bank, per-program code lengths, and per-program memory bounds
-    are traced *inputs* (not closure constants), so two plans that share
-    shapes and opcode subset reuse one compiled callable even with
-    different programs. Per-lane `max_steps` lives in the state, so the
-    budget never appears in the cache key at all — one compiled runner
-    serves every heterogeneous budget mix.
+    The bank, per-program code lengths, per-program memory bounds, and
+    per-program cycle-cost rows are traced *inputs* (not closure
+    constants), so two plans that share shapes and opcode subset reuse
+    one compiled callable even with different programs. Per-lane
+    `max_steps` lives in the state, so the budget never appears in the
+    cache key at all — one compiled runner serves every heterogeneous
+    budget mix. `timing` is static: with it off the cost operand is a
+    dead argument and the compiled segment is the cycles-off graph.
     """
-    def seg(bank, code_len, mem_len, state):
+    def seg(bank, code_len, mem_len, cost, state):
+        cr = cost if timing else None
         if stepper == "switch":
             lanes = jax.vmap(
                 lambda p, m, l: iss.run_segment_banked(
-                    bank, code_len, p, m, l, seg_steps, mem_len)
+                    bank, code_len, p, m, l, seg_steps, mem_len, cr)
             )(state.prog_id, state.max_steps, state.lanes)
             return iss.PackedState(lanes=lanes, prog_id=state.prog_id,
                                    max_steps=state.max_steps)
         if stepper == "pallas":
             return iss_stepper.iss_segment_banked(
                 bank, code_len, state, seg_steps=seg_steps, subset=subset,
-                mem_len=mem_len)
+                mem_len=mem_len, cost=cr)
         return iss.run_segment_lanes_banked(bank, code_len, state,
-                                            seg_steps, subset, mem_len)
+                                            seg_steps, subset, mem_len,
+                                            cr)
 
     if mesh is None:
-        return jax.jit(seg, donate_argnums=(3,))
+        return jax.jit(seg, donate_argnums=(4,))
     specs = _packed_state_specs(mesh, mem_words)
-    bspecs = dsharding.bank_specs(mesh, (0, 0, 0))
+    bspecs = dsharding.bank_specs(mesh, (0, 0, 0, 0))
     fn = shard_map(seg, mesh=mesh, in_specs=(*bspecs, specs),
                    out_specs=specs, check_rep=False)
-    return jax.jit(fn, donate_argnums=(3,))
+    return jax.jit(fn, donate_argnums=(4,))
 
 
 class ResidentAcc(NamedTuple):
@@ -594,6 +613,7 @@ class ResidentAcc(NamedTuple):
     """
     n_instr: jax.Array             # (total_items,) i32
     n_two: jax.Array               # (total_items,) i32
+    n_cycles: jax.Array            # (total_items,) i32 timing ticks
     halted: jax.Array              # (total_items,) bool
     out: jax.Array                 # (total_items,) i32
     mix_g: jax.Array               # (n_groups, 8) i32
@@ -652,6 +672,7 @@ def _refill_resident(state: iss.PackedState, item_slot, acc: ResidentAcc,
     acc = acc._replace(
         n_instr=put(acc.n_instr, lanes.n_instr),
         n_two=put(acc.n_two, lanes.n_two_stage),
+        n_cycles=put(acc.n_cycles, lanes.n_cycles),
         halted=put(acc.halted, lanes.halted),
         out=put(acc.out, out_val),
         mix_g=acc.mix_g.at[state.prog_id].add(
@@ -762,7 +783,9 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
             out=np.zeros(0, np.int32),
             mix=np.zeros(len(iss.MIX_CLASSES), np.int64), lane_steps=0,
             n_segments=0, chunk=0, seg_steps=seg_steps, wall_s=0.0,
-            stepper=stepper) for _ in groups]
+            stepper=stepper,
+            n_cycles=None if g.cost is None else np.zeros(0, np.int64))
+            for g in groups]
         return empty, PackedStats(
             n_groups=n_groups, n_progs=n_groups, bank_width=0,
             lane_steps=0, n_segments=0, chunk=0, seg_steps=seg_steps,
@@ -780,6 +803,15 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
     # the pool memory is padded to the largest group's
     mem_len = jnp.asarray([g.mem_words for g in groups], iss.I32)
     ms_of = np.array([g.max_steps for g in groups], np.int64)
+    # per-program cycle-cost rows (§9.10): the timing layer is ON iff
+    # any group carries a cost row. Cost-less groups in a mixed plan get
+    # a zero row — their lanes share the timing-on graph but tally 0.
+    timing = any(g.cost is not None for g in groups)
+    cost_np = np.zeros((n_groups, N_COST), np.int32)
+    for i, g in enumerate(groups):
+        if g.cost is not None:
+            cost_np[i] = np.asarray(g.cost, np.int32)
+    cost = jnp.asarray(cost_np)
 
     chunk = min(chunk, max(total_items, 1))
     n_dev = 1
@@ -804,8 +836,8 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
              for g in groups]
     try:
         out = loop(groups, prefs, counts, ms_of, bank, code_len, mem_len,
-                   bank_np, chunk, keep_state, mesh, stepper, subset,
-                   mem_words, controller, clock)
+                   cost, timing, bank_np, chunk, keep_state, mesh,
+                   stepper, subset, mem_words, controller, clock)
     finally:
         for p in prefs:
             p.close()
@@ -829,6 +861,7 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
             regs=out["r_regs"][g] if keep_state else None,
             pc=out["r_pc"][g] if keep_state else None,
             mix_items=out["r_mix_items"][g] if keep_state else None,
+            n_cycles=out["r_cycles"][g] if grp.cost is not None else None,
         ))
     stats = PackedStats(
         n_groups=n_groups, n_progs=bank_np.shape[0],
@@ -843,8 +876,8 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
 
 
 def _stream_host(groups, prefs, counts, ms_of, bank, code_len, mem_len,
-                 bank_np, chunk, keep_state, mesh, stepper, subset,
-                 mem_words, controller: _SuperstepController,
+                 cost, timing, bank_np, chunk, keep_state, mesh, stepper,
+                 subset, mem_words, controller: _SuperstepController,
                  clock: _SyncClock):
     """The PR-4 host-refill stream loop (the `refill="host"` A/B path):
     blocking single-scalar done-count sync per segment, host-side
@@ -852,6 +885,7 @@ def _stream_host(groups, prefs, counts, ms_of, bank, code_len, mem_len,
     n_groups = len(groups)
     r_instr = [np.zeros(n, np.int64) for n in counts]
     r_two = [np.zeros(n, np.int64) for n in counts]
+    r_cycles = [np.zeros(n, np.int64) for n in counts]
     r_halt = [np.zeros(n, bool) for n in counts]
     r_out = [np.zeros(n, np.int32) for n in counts]
     r_mix = [np.zeros(len(iss.MIX_CLASSES), np.int64) for _ in groups]
@@ -918,8 +952,9 @@ def _stream_host(groups, prefs, counts, ms_of, bank, code_len, mem_len,
         seg_steps = controller.next_seg()
         seg_fn = _packed_segment_runner(stepper, chunk, seg_steps,
                                         mem_words, n_groups,
-                                        bank_np.shape[1], mesh, subset)
-        state = seg_fn(bank, code_len, mem_len, state)
+                                        bank_np.shape[1], mesh, subset,
+                                        timing)
+        state = seg_fn(bank, code_len, mem_len, cost, state)
         n_segments += 1
         active = ids >= 0
         act_per_group = np.bincount(lane_group[active],
@@ -950,6 +985,8 @@ def _stream_host(groups, prefs, counts, ms_of, bank, code_len, mem_len,
             jidx = jnp.asarray(idx)
             two = clock.fetch(state.lanes.n_two_stage).astype(np.int64)
             mix_rows = clock.fetch(state.lanes.mix[jidx]).astype(np.int64)
+            if timing:   # one extra pull, only when the layer is on
+                cyc = clock.fetch(state.lanes.n_cycles).astype(np.int64)
             # one O(done x mem_words) row gather serves every
             # group's out-word read (and the keep_state memories) —
             # not a full O(chunk) column pull per group
@@ -966,6 +1003,8 @@ def _stream_host(groups, prefs, counts, ms_of, bank, code_len, mem_len,
                 items = ids[lg]
                 r_instr[g][items] = n_instr[lg]
                 r_two[g][items] = two[lg]
+                if timing:
+                    r_cycles[g][items] = cyc[lg]
                 r_halt[g][items] = halted[lg]
                 r_mix[g] += mix_rows[sel].sum(0)
                 if groups[g].out_addr is not None:
@@ -999,13 +1038,14 @@ def _stream_host(groups, prefs, counts, ms_of, bank, code_len, mem_len,
     return {"r_instr": r_instr, "r_two": r_two, "r_halt": r_halt,
             "r_out": r_out, "r_mix": r_mix, "r_mem": r_mem,
             "r_regs": r_regs, "r_pc": r_pc, "r_mix_items": r_mix_items,
+            "r_cycles": r_cycles,
             "g_lane_steps": g_lane_steps, "g_segments": g_segments,
             "lane_steps": lane_steps, "n_segments": n_segments}
 
 
 def _stream_resident(groups, prefs, counts, ms_of, bank, code_len,
-                     mem_len, bank_np, chunk, keep_state, mesh, stepper,
-                     subset, mem_words,
+                     mem_len, cost, timing, bank_np, chunk, keep_state,
+                     mesh, stepper, subset, mem_words,
                      controller: _SuperstepController,
                      clock: _SyncClock):
     """The resident stream loop (DESIGN.md §9.9, `refill="device"`).
@@ -1106,6 +1146,7 @@ def _stream_resident(groups, prefs, counts, ms_of, bank, code_len,
     acc = ResidentAcc(
         n_instr=jnp.zeros(total, iss.I32),
         n_two=jnp.zeros(total, iss.I32),
+        n_cycles=jnp.zeros(total, iss.I32),
         halted=jnp.zeros(total, bool),
         out=jnp.zeros(total, iss.I32),
         mix_g=jnp.zeros((n_groups, n_mix), iss.I32),
@@ -1135,8 +1176,9 @@ def _stream_resident(groups, prefs, counts, ms_of, bank, code_len,
         seg_steps = controller.next_seg()
         seg_fn = _packed_segment_runner(stepper, chunk, seg_steps,
                                         mem_words, n_groups,
-                                        bank_np.shape[1], mesh, subset)
-        state = seg_fn(bank, code_len, mem_len, state)
+                                        bank_np.shape[1], mesh, subset,
+                                        timing)
+        state = seg_fn(bank, code_len, mem_len, cost, state)
         if hasattr(stats, "copy_to_host_async"):
             stats.copy_to_host_async()
         # blocks until refill_i only — seg_i is already running
@@ -1165,6 +1207,8 @@ def _stream_resident(groups, prefs, counts, ms_of, bank, code_len,
     # ---- drain: ONE demux of the on-device accumulators
     res_instr = clock.fetch(acc.n_instr).astype(np.int64)
     res_two = clock.fetch(acc.n_two).astype(np.int64)
+    res_cycles = clock.fetch(acc.n_cycles).astype(np.int64) if timing \
+        else np.zeros(total, np.int64)
     res_halt = clock.fetch(acc.halted)
     res_out = clock.fetch(acc.out)
     res_mix_g = clock.fetch(acc.mix_g).astype(np.int64)
@@ -1175,6 +1219,7 @@ def _stream_resident(groups, prefs, counts, ms_of, bank, code_len,
         res_mix_items = clock.fetch(acc.mix_items)
 
     r_instr, r_two, r_halt, r_out, r_mix = [], [], [], [], []
+    r_cycles = []
     r_mem = r_regs = r_pc = r_mix_items = None
     if keep_state:
         r_mem, r_regs, r_pc, r_mix_items = [], [], [], []
@@ -1182,6 +1227,7 @@ def _stream_resident(groups, prefs, counts, ms_of, bank, code_len,
         sl = slice(int(slot_base[g]), int(slot_base[g] + counts[g]))
         r_instr.append(res_instr[sl])
         r_two.append(res_two[sl])
+        r_cycles.append(res_cycles[sl])
         r_halt.append(res_halt[sl])
         r_out.append(res_out[sl])
         r_mix.append(res_mix_g[g])
@@ -1194,6 +1240,7 @@ def _stream_resident(groups, prefs, counts, ms_of, bank, code_len,
     return {"r_instr": r_instr, "r_two": r_two, "r_halt": r_halt,
             "r_out": r_out, "r_mix": r_mix, "r_mem": r_mem,
             "r_regs": r_regs, "r_pc": r_pc, "r_mix_items": r_mix_items,
+            "r_cycles": r_cycles,
             "g_lane_steps": g_lane_steps, "g_segments": g_segments,
             "lane_steps": lane_steps, "n_segments": n_segments}
 
@@ -1205,7 +1252,8 @@ def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,
                         mesh: Optional[Mesh] = None,
                         stepper: str = "branchless",
                         prefetch: bool = True, refill: str = "device",
-                        adaptive: bool = False) -> FleetResult:
+                        adaptive: bool = False,
+                        cost: Optional[np.ndarray] = None) -> FleetResult:
     """Convenience wrapper: stream a FlexiBench workload end to end.
 
     The branchless/pallas steppers' opcode subset is derived from the
@@ -1219,4 +1267,4 @@ def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,
         chunk=chunk,
         seg_steps=seg_steps, out_addr=w.out_addr, keep_state=keep_state,
         mesh=mesh, stepper=stepper, prefetch=prefetch, refill=refill,
-        adaptive=adaptive)
+        adaptive=adaptive, cost=cost)

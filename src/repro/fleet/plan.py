@@ -16,7 +16,7 @@ from typing import Optional, Sequence, Tuple
 from jax.sharding import Mesh
 
 from repro.flexibench import base as fb
-from repro.flexibits.cycles import CORES, Core
+from repro.flexibits.cycles import CORES, Core, cost_row
 from repro.fleet import engine
 from repro.fleet.report import FleetReport, build_group_report
 
@@ -65,7 +65,17 @@ class FleetPlan:
     controller: each segment's step bound is picked from a bounded
     ladder under `seg_steps` by the observed halt cadence
     (deterministic for a given plan, bit-exact with fixed
-    segmentation)."""
+    segmentation).
+
+    `timing` turns on the per-lane cycle layer (DESIGN.md §9.10): each
+    group's lanes accumulate ticks from its core's cost row
+    (`cycles.cost_row`) and the carbon report prices the group from the
+    *measured* mean cycles instead of the two-bucket analytic model.
+    "base" prices only the per-(stage, class) table — numerically
+    identical to the analytic model, an end-to-end consistency mode —
+    while "dynamic" additionally prices taken-branch refetch, serial
+    shift amount, and subword read-modify-write. None (default) keeps
+    the cycles-off graphs and analytic pricing."""
     groups: Sequence[FleetGroup]
     chunk: int = 256
     seg_steps: int = 4096
@@ -76,10 +86,20 @@ class FleetPlan:
     packed: bool = True
     refill: str = "device"
     adaptive: bool = False
+    timing: Optional[str] = None          # None | "base" | "dynamic"
 
     @property
     def n_items(self) -> int:
         return sum(g.n_items for g in self.groups)
+
+
+def _group_cost(plan: FleetPlan, core: Core):
+    """The group's engine cost row under the plan's timing mode."""
+    if plan.timing is None:
+        return None
+    if plan.timing not in ("base", "dynamic"):
+        raise ValueError('timing must be None, "base", or "dynamic"')
+    return cost_row(core, dynamic=plan.timing == "dynamic")
 
 
 def _packed_groups(plan: FleetPlan):
@@ -96,7 +116,8 @@ def _packed_groups(plan: FleetPlan):
             n_items=g.n_items,
             max_steps=g.max_steps if g.max_steps is not None
             else w.max_steps,
-            mem_words=w.total_mem_words, out_addr=w.out_addr))
+            mem_words=w.total_mem_words, out_addr=w.out_addr,
+            cost=_group_cost(plan, core)))
     return lowered, resolved
 
 
@@ -136,7 +157,7 @@ def run_plan(plan: FleetPlan, mesh: Optional[Mesh] = None,
             seg_steps=plan.seg_steps, max_steps=g.max_steps,
             keep_state=keep_state, mesh=mesh, stepper=plan.stepper,
             prefetch=plan.prefetch, refill=plan.refill,
-            adaptive=plan.adaptive)
+            adaptive=plan.adaptive, cost=_group_cost(plan, core))
         group_reports.append(build_group_report(
             group=g, workload=w, core=core, result=res,
             lifetime_s=lifetime_s, execs_per_day=execs_per_day,

@@ -17,7 +17,7 @@ from repro.core import carbon
 from repro.core.planner import CHIP_POWER_W, PUE
 from repro.core.selection import optimal_core
 from repro.flexibench.base import Workload
-from repro.flexibits.cycles import Core
+from repro.flexibits.cycles import TICKS_PER_CYCLE, Core
 from repro.fleet.engine import FleetResult, PackedStats
 
 
@@ -36,9 +36,16 @@ class GroupReport:
     embodied_kg: float                 # whole group (SoC only)
     total_kg: float
     recommended_core: str              # carbon-argmin core for this point
+    # mean measured cycles/execution from the engine's per-lane n_cycles
+    # tallies (§9.10); None when the group ran cycles-off
+    measured_cycles: Optional[float] = None
 
     @property
     def cycles_per_item(self) -> float:
+        """Measured mean cycles when the run carried the timing layer,
+        the two-bucket analytic number otherwise."""
+        if self.measured_cycles is not None:
+            return self.measured_cycles
         return self.core.cycles(self.profile.n_one_stage,
                                 self.profile.n_two_stage)
 
@@ -53,10 +60,18 @@ def build_group_report(*, group: Any, workload: Workload, core: Core,
     vm_kb = workload.vm_kb()
     prof = carbon.DeviceProfile(n_one_stage=mean_one, n_two_stage=mean_two,
                                 vm_kb=vm_kb, nvm_kb=workload.nvm_kb)
-    e_exec = carbon.energy_per_exec_j(core, prof, clock_hz)
+    # timing layer on -> price the group from its accumulated per-lane
+    # tick tallies instead of the two-bucket model ("base" cost rows
+    # reproduce the analytic number exactly; "dynamic" adds the terms
+    # the two-bucket model cannot see, §9.10)
+    cycles = None
+    if result.n_cycles is not None:
+        cycles = float(result.n_cycles.sum()) / n / TICKS_PER_CYCLE
+    e_exec = carbon.energy_per_exec_j(core, prof, clock_hz, cycles)
     op_kg = carbon.operational_kg(
         core, prof, lifetime_s=lifetime_s, execs_per_day=execs_per_day,
-        intensity=intensity, clock_hz=clock_hz) * result.n_items
+        intensity=intensity, clock_hz=clock_hz,
+        cycles=cycles) * result.n_items
     emb_kg = carbon.soc_embodied_kg(core, prof) * result.n_items
     best, _ = optimal_core(prof, lifetime_s=lifetime_s,
                            execs_per_day=execs_per_day, intensity=intensity)
@@ -66,7 +81,8 @@ def build_group_report(*, group: Any, workload: Workload, core: Core,
         energy_j_per_exec=e_exec,
         fleet_exec_kwh=e_exec * result.n_items / 3.6e6,
         operational_kg=op_kg, embodied_kg=emb_kg,
-        total_kg=op_kg + emb_kg, recommended_core=best.name)
+        total_kg=op_kg + emb_kg, recommended_core=best.name,
+        measured_cycles=cycles)
 
 
 def simulation_footprint_kg(wall_s: float, n_chips: int = 1,

@@ -17,7 +17,16 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
+import numpy as np
+
 CLOCK_HZ = 10_000.0          # 10 kHz operating point (paper §4.4)
+
+# Fig. 2a instruction-mix categories — the canonical order for every mix
+# vector in the codebase: iss.ISSState.mix, PyISS.events, and the
+# per-(stage, class) blocks of `cost_row`. Lives here (not iss.py) so the
+# pure-python oracle and the cost table need no jax import.
+MIX_CLASSES = ("loads", "stores", "branches", "jumps", "shifts", "I-type",
+               "R-type", "system")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +69,77 @@ HERV = Core("HERV", 8, area_mm2=4.50, power_mw=24.99, gates=3903,
             a=3.65, b=6.2)
 
 CORES: Dict[str, Core] = {"SERV": SERV, "QERV": QERV, "HERV": HERV}
+
+
+# ----------------------------------------------------- cycle-cost table
+# Per-lane timing layer (DESIGN.md §9.10). Integer fixed point: costs are
+# expressed in TICKS (TICKS_PER_CYCLE ticks = 1 cycle) so every stepper
+# accumulates exact int32 tallies — TICKS_PER_CYCLE is chosen so that
+# 32/w, 64/w, and the Table-7 overheads a_w/b_w are all whole numbers of
+# ticks for every core (20*a and 20*b are integral for SERV/QERV/HERV).
+TICKS_PER_CYCLE = 20
+
+# Flattened cost row consumed by iss.timing_ticks / PyISS.events:
+#   [0:8]   one-stage base ticks per mix class (MIX_CLASSES order)
+#   [8:16]  two-stage base ticks per mix class
+#   [16]    taken-branch refetch          (dynamic)
+#   [17]    per-shift-amount-bit serial shift cost (dynamic)
+#   [18]    subword load/store read-modify-write   (dynamic)
+N_COST = 2 * len(MIX_CLASSES) + 3
+TAKEN_IDX = 2 * len(MIX_CLASSES)
+SHIFT_IDX = TAKEN_IDX + 1
+SUBWORD_IDX = TAKEN_IDX + 2
+
+
+def base_ticks(core: Core) -> "tuple[int, int]":
+    """(one-stage, two-stage) base cost in ticks.
+
+    Exactly TICKS_PER_CYCLE * Core.cycles_one_stage()/cycles_two_stage()
+    for every Table-7 core: 640/w and 1280/w are integral for w in
+    {1, 4, 8} and so are 20*a_w / 20*b_w.
+    """
+    one = 640 // core.width + round(TICKS_PER_CYCLE * core.a)
+    two = 1280 // core.width + round(TICKS_PER_CYCLE * core.b)
+    return one, two
+
+
+def cost_row(core: Core, dynamic: bool = False) -> np.ndarray:
+    """(N_COST,) int32 cycle-cost row for `core`, in ticks.
+
+    With dynamic=False (the table's BASE case) only the per-(stage, mix
+    class) entries are populated, and accumulated ticks equal
+    TICKS_PER_CYCLE * Core.cycles(n_one, n_two) exactly — the SERV 38/70
+    pins and the Table-7 geomeans are preserved by construction.
+
+    dynamic=True additionally prices the events the two-bucket model
+    cannot see (ROADMAP "cycle-accurate core timing beyond 1 CPI"):
+    a taken branch refetches (one extra 32-bit fetch pass, 32/w cycles),
+    serial shifters pay one datapath pass per shift-amount bit (1/w
+    cycles per bit), and subword loads/stores pay an extra word pass for
+    the read-modify-write (32/w cycles).
+    """
+    one, two = base_ticks(core)
+    row = np.zeros(N_COST, np.int32)
+    row[:len(MIX_CLASSES)] = one
+    row[len(MIX_CLASSES):2 * len(MIX_CLASSES)] = two
+    if dynamic:
+        row[TAKEN_IDX] = 640 // core.width
+        row[SHIFT_IDX] = 20 // core.width
+        row[SUBWORD_IDX] = 640 // core.width
+    return row
+
+
+def event_cycles(events, core: Core, dynamic: bool = False) -> float:
+    """Cycles for an (N_COST,) timing-event vector priced on `core`.
+
+    Events are core-independent (PyISS tracks them once per program);
+    pricing is a dot product against the core's cost row, so one
+    profiling run serves every candidate core. With dynamic=False this
+    equals `Core.cycles(n_one, n_two)` exactly.
+    """
+    ev = np.asarray(events, np.float64)
+    return float(ev @ cost_row(core, dynamic).astype(np.float64)) \
+        / TICKS_PER_CYCLE
 
 
 # ------------------------------------------------------------------ memory

@@ -28,7 +28,13 @@ pool on top of this.
 
 Cycle accounting implements the paper's bit-serial timing model
 (cycles.py): per retired instruction, one-stage or two-stage cost for the
-configured datapath width.
+configured datapath width. On top of the two-bucket counts every stepper
+can carry a per-lane cycle tally (`ISSState.n_cycles`, DESIGN.md §9.10):
+pass a `cost` row (cycles.cost_row) and each retired instruction adds its
+(stage, mix-class) base ticks plus the dynamic terms the bucket model
+cannot see — taken-branch refetch, per-bit serial shift, subword RMW.
+With `cost=None` (the default) the timing layer is dropped from the
+traced graph entirely and `n_cycles` passes through untouched.
 """
 from __future__ import annotations
 
@@ -41,13 +47,13 @@ import numpy as np
 from jax import lax
 
 from repro.flexibits import isa
+from repro.flexibits.cycles import (MIX_CLASSES, SHIFT_IDX, SUBWORD_IDX,
+                                    TAKEN_IDX)
 
 I32 = jnp.int32
 U32 = jnp.uint32
 
-# mix categories (Fig. 2a)
-MIX_CLASSES = ("loads", "stores", "branches", "jumps", "shifts", "I-type",
-               "R-type", "system")
+# mix categories (Fig. 2a) — canonical order lives in cycles.MIX_CLASSES
 _MIX_IDX = {c: i for i, c in enumerate(MIX_CLASSES)}
 
 _OPCODES = (isa.OP_LUI, isa.OP_AUIPC, isa.OP_JAL, isa.OP_JALR,
@@ -63,6 +69,7 @@ class ISSState(NamedTuple):
     n_instr: jax.Array     # () int32
     n_two_stage: jax.Array  # () int32
     mix: jax.Array         # (8,) int32 per-category retired counts
+    n_cycles: jax.Array    # () int32 accumulated timing ticks (§9.10)
 
 
 class PackedState(NamedTuple):
@@ -122,6 +129,7 @@ def init_state(mem: jax.Array) -> ISSState:
         n_instr=jnp.zeros((), I32),
         n_two_stage=jnp.zeros((), I32),
         mix=jnp.zeros(len(MIX_CLASSES), I32),
+        n_cycles=jnp.zeros((), I32),
     )
 
 
@@ -135,12 +143,14 @@ def _u(v):
 
 
 def step(code: jax.Array, s: ISSState, *,
-         instr: jax.Array = None, mem_len: jax.Array = None) -> ISSState:
+         instr: jax.Array = None, mem_len: jax.Array = None,
+         cost: jax.Array = None) -> ISSState:
     # `instr` overrides the fetch (banked runtimes fetch from a program
     # bank via `fetch_banked`); `mem_len` bounds the data-memory ports at
     # the lane's OWN word count, so a lane in a pool padded to a larger
     # memory keeps jax's clamp-on-read / drop-on-write semantics at ITS
-    # program's boundary. Everything else is identical.
+    # program's boundary; `cost` (an (N_COST,) cycles.cost_row) turns on
+    # the per-lane timing tally. Everything else is identical.
     if instr is None:
         instr = code[(_u(s.pc) >> 2).astype(I32)].astype(U32)
     ii = instr.astype(I32)
@@ -283,6 +293,12 @@ def step(code: jax.Array, s: ISSState, *,
          _MIX_IDX["R-type"]],
         _MIX_IDX["system"])
 
+    n_cycles = s.n_cycles
+    if cost is not None:
+        taken, shamt, subword = dynamic_terms(op, f3, a, b, imm_i)
+        n_cycles = n_cycles + timing_ticks(cost, two_stage, mix_idx,
+                                           taken, shamt, subword)
+
     return ISSState(
         regs=regs,
         pc=next_pc.astype(I32),
@@ -291,6 +307,7 @@ def step(code: jax.Array, s: ISSState, *,
         n_instr=s.n_instr + 1,
         n_two_stage=s.n_two_stage + two_stage.astype(I32),
         mix=s.mix.at[mix_idx].add(1),
+        n_cycles=n_cycles,
     )
 
 
@@ -405,7 +422,7 @@ def store_word(word, addr, b, f3):
 
 
 def branchless_commits(d: DecodedInstr, a, b, pc, subset, live, *,
-                       read_word, write_word):
+                       read_word, write_word, cost=None):
     """Opcode-gated commit pipeline shared by `step_branchless` and the
     Pallas tile stepper (kernels/iss_stepper.py).
 
@@ -422,8 +439,11 @@ def branchless_commits(d: DecodedInstr, a, b, pc, subset, live, *,
     `live=False` freezes stores, rd writes, and counters. All arithmetic
     is shape-polymorphic over () and (lanes,) operands.
 
-    Returns (next_pc, wr, writes_rd, mem, halt, two_stage, mix_idx);
-    `mem` is None when the subset contains no stores.
+    Returns (next_pc, wr, writes_rd, mem, halt, two_stage, mix_idx,
+    ticks); `mem` is None when the subset contains no stores, and
+    `ticks` is None when `cost` is None (the timing layer contributes
+    nothing to the traced graph when off — cycles-off is the unchanged
+    PR-5 graph, not a zeroed tally).
     """
     sub = FULL_SUBSET if subset is None else frozenset(subset)
 
@@ -489,7 +509,13 @@ def branchless_commits(d: DecodedInstr, a, b, pc, subset, live, *,
         & (op != isa.OP_SYSTEM) & (rd != 0) & live
     halt = (op == isa.OP_SYSTEM) if on(isa.OP_SYSTEM) else false
     two_stage, mix_idx = classify(op, f3)
-    return next_pc, wr, writes_rd, mem, halt, two_stage, mix_idx
+    ticks = None
+    if cost is not None:
+        taken, shamt, subword = dynamic_terms(op, f3, a, b, d.imm_i,
+                                              subset)
+        ticks = timing_ticks(cost, two_stage, mix_idx, taken, shamt,
+                             subword)
+    return next_pc, wr, writes_rd, mem, halt, two_stage, mix_idx, ticks
 
 
 def classify(op, f3):
@@ -517,6 +543,68 @@ def classify(op, f3):
     return two_stage, mix_idx
 
 
+def dynamic_terms(op, f3, a, b, imm_i, subset: frozenset = None):
+    """Per-instruction dynamic timing events (DESIGN.md §9.10).
+
+    The microarchitectural events the two-bucket model cannot see,
+    mirrored verbatim by the PyISS oracle:
+
+      taken   — a BRANCH whose condition held (refetch; jumps always
+                redirect and are priced in their base class instead)
+      shamt   — effective shift amount of a serial shift (0 otherwise)
+      subword — lb/lh/lbu/lhu/sb/sh (read-modify-write word pass)
+
+    `subset` drops the classes from the traced graph exactly like
+    `branchless_commits` does. Shape-polymorphic over () and (lanes,).
+    """
+    sub = FULL_SUBSET if subset is None else frozenset(subset)
+
+    def on(*ops):
+        return any(o in sub for o in ops)
+
+    false = jnp.zeros_like(op, bool)
+    zero = jnp.zeros_like(op)
+
+    taken = ((op == isa.OP_BRANCH) & branch_taken(a, b, f3)) \
+        if on(isa.OP_BRANCH) else false
+
+    shamt = zero
+    if on(isa.OP_IMM, isa.OP_REG):
+        is_shift = (((op == isa.OP_IMM) | (op == isa.OP_REG))
+                    & ((f3 == 1) | (f3 == 5)))
+        shamt = jnp.where(is_shift,
+                          jnp.where(op == isa.OP_REG, b, imm_i) & 31, 0)
+
+    subword = false
+    if on(isa.OP_LOAD):
+        lf3 = jnp.clip(f3, 0, 5)       # matches load_value's clip
+        subword = subword | ((op == isa.OP_LOAD)
+                             & (lf3 != 2) & (lf3 != 3))
+    if on(isa.OP_STORE):
+        sf3 = jnp.clip(f3, 0, 2)       # matches store_word's clip
+        subword = subword | ((op == isa.OP_STORE) & (sf3 != 2))
+    return taken, shamt, subword
+
+
+def timing_ticks(cost, two_stage, mix_idx, taken, shamt, subword):
+    """Ticks retired by one instruction under cost row(s) `cost`.
+
+    `cost` is (..., N_COST): one shared row, or per-lane rows gathered
+    from a per-program cost bank. The (stage, mix-class) base entry is
+    selected with a one-hot reduction over the 8 classes (no gathers —
+    the same trick as the register/mix commits, so the Pallas stepper
+    runs it unchanged), then the dynamic entries are added in.
+    """
+    n = len(MIX_CLASSES)
+    oh = jnp.arange(n, dtype=I32) == mix_idx[..., None]
+    one_base = jnp.sum(jnp.where(oh, cost[..., :n], 0), axis=-1)
+    two_base = jnp.sum(jnp.where(oh, cost[..., n:2 * n], 0), axis=-1)
+    base = jnp.where(two_stage, two_base, one_base)
+    return (base + taken.astype(I32) * cost[..., TAKEN_IDX]
+            + shamt * cost[..., SHIFT_IDX]
+            + subword.astype(I32) * cost[..., SUBWORD_IDX])
+
+
 def opcode_subset(code) -> frozenset:
     """Static host-side decode: the opcode classes present in a program.
 
@@ -535,7 +623,8 @@ def step_branchless(code: jax.Array, s: ISSState,
                     subset: frozenset = None,
                     active: jax.Array = None, *,
                     instr: jax.Array = None,
-                    mem_len: jax.Array = None) -> ISSState:
+                    mem_len: jax.Array = None,
+                    cost: jax.Array = None) -> ISSState:
     """One branchless step: bit-exact with `step`, no lax.switch/cond.
 
     `subset` (static) keeps only those opcode classes in the traced graph;
@@ -578,9 +667,10 @@ def step_branchless(code: jax.Array, s: ISSState,
             is_store = is_store & (widx < mem_len)
         return s.mem.at[widx].set(jnp.where(is_store, neww, word))
 
-    next_pc, wr, writes_rd, mem, halt, two_stage, mix_idx = \
+    next_pc, wr, writes_rd, mem, halt, two_stage, mix_idx, ticks = \
         branchless_commits(d, a, b, s.pc, subset, live,
-                           read_word=read_word, write_word=write_word)
+                           read_word=read_word, write_word=write_word,
+                           cost=cost)
     mem = s.mem if mem is None else mem
 
     # one-hot commit instead of a scatter: an elementwise select over the
@@ -600,29 +690,34 @@ def step_branchless(code: jax.Array, s: ISSState,
         n_instr=s.n_instr + one,
         n_two_stage=s.n_two_stage + (two_stage & live).astype(I32),
         mix=s.mix + mix_onehot,
+        n_cycles=s.n_cycles if ticks is None else s.n_cycles + ticks * one,
     )
 
 
 def step_lanes(code: jax.Array, states: ISSState,
                subset: frozenset = None,
-               active: jax.Array = None) -> ISSState:
+               active: jax.Array = None,
+               cost: jax.Array = None) -> ISSState:
     """Branchless step over a batch of lanes (leading lane axis).
 
     Decodes once per lane with pure bit ops; every opcode class commits
     via masked where/select, so vmap pays one shared gather + scatter
     instead of per-branch memory ports. Bit-exact with vmap(step).
+    `cost` is one shared (N_COST,) row — homogeneous pools run one
+    program on one core, so it closes over the vmap unbatched.
     """
     if active is None:
         return jax.vmap(
-            lambda s: step_branchless(code, s, subset))(states)
+            lambda s: step_branchless(code, s, subset, cost=cost))(states)
     return jax.vmap(
-        lambda a, s: step_branchless(code, s, subset, active=a)
+        lambda a, s: step_branchless(code, s, subset, active=a, cost=cost)
     )(active, states)
 
 
 def run_segment_lanes(code: jax.Array, states: ISSState, seg_steps: int,
                       max_steps: int, subset: frozenset = None,
-                      unroll: int = 1) -> ISSState:
+                      unroll: int = 1,
+                      cost: jax.Array = None) -> ISSState:
     """Lane-parallel segment: up to `seg_steps` branchless steps per lane.
 
     One while_loop over the whole lane pool (not vmap of scalar loops):
@@ -649,7 +744,7 @@ def run_segment_lanes(code: jax.Array, states: ISSState, seg_steps: int,
         k, st = c
         for j in range(unroll):
             act = active_of(st) & (k + j < seg_steps)
-            st = step_lanes(code, st, subset, active=act)
+            st = step_lanes(code, st, subset, active=act, cost=cost)
         return k + unroll, st
 
     _, out = lax.while_loop(cond, body, (jnp.zeros((), I32), states))
@@ -660,7 +755,8 @@ def step_lanes_banked(bank: jax.Array, code_len: jax.Array,
                       states: ISSState, prog_id: jax.Array,
                       subset: frozenset = None,
                       active: jax.Array = None,
-                      mem_len: jax.Array = None) -> ISSState:
+                      mem_len: jax.Array = None,
+                      cost: jax.Array = None) -> ISSState:
     """Branchless step over lanes executing *different* programs.
 
     One batched bank fetch (`fetch_banked`, per-program pc clamp), then
@@ -668,25 +764,38 @@ def step_lanes_banked(bank: jax.Array, code_len: jax.Array,
     retires precisely what it would retire in a single-program pool
     running its own program. `subset` must cover the union of the bank's
     opcode subsets for bit-exactness; `mem_len` (per-LANE word counts)
-    bounds each lane's memory ports at its own program's size.
+    bounds each lane's memory ports at its own program's size; `cost`
+    (per-LANE (lanes, N_COST) rows — groups price on different cores)
+    turns on the per-lane timing tally.
     """
     instr = fetch_banked(bank, code_len, prog_id, states.pc)
     act = jnp.ones(states.pc.shape, bool) if active is None else active
-    if mem_len is None:
+    if mem_len is None and cost is None:
         return jax.vmap(
             lambda i, a, s: step_branchless(bank, s, subset, active=a,
                                             instr=i)
         )(instr, act, states)
+    if cost is None:
+        return jax.vmap(
+            lambda i, a, m, s: step_branchless(bank, s, subset, active=a,
+                                               instr=i, mem_len=m)
+        )(instr, act, mem_len, states)
+    if mem_len is None:
+        return jax.vmap(
+            lambda i, a, c, s: step_branchless(bank, s, subset, active=a,
+                                               instr=i, cost=c)
+        )(instr, act, cost, states)
     return jax.vmap(
-        lambda i, a, m, s: step_branchless(bank, s, subset, active=a,
-                                           instr=i, mem_len=m)
-    )(instr, act, mem_len, states)
+        lambda i, a, m, c, s: step_branchless(bank, s, subset, active=a,
+                                              instr=i, mem_len=m, cost=c)
+    )(instr, act, mem_len, cost, states)
 
 
 def run_segment_lanes_banked(bank: jax.Array, code_len: jax.Array,
                              ps: PackedState, seg_steps: int,
                              subset: frozenset = None,
-                             mem_len: jax.Array = None) -> PackedState:
+                             mem_len: jax.Array = None,
+                             cost: jax.Array = None) -> PackedState:
     """Packed segment: up to `seg_steps` banked steps for every lane.
 
     The packed-runtime counterpart of `run_segment_lanes`: one
@@ -697,9 +806,12 @@ def run_segment_lanes_banked(bank: jax.Array, code_len: jax.Array,
     or exhaust their budget are frozen by the `active` mask exactly as
     in the homogeneous segment loop. `mem_len` (per-PROGRAM word
     counts, like `code_len`) keeps each lane's memory semantics at its
-    own program's boundary when the pool memory is padded wider.
+    own program's boundary when the pool memory is padded wider; `cost`
+    (per-PROGRAM (n_progs, N_COST) rows, like `mem_len`) prices each
+    lane's retirements on its own program's core.
     """
     lane_mlen = None if mem_len is None else mem_len[ps.prog_id]
+    lane_cost = None if cost is None else cost[ps.prog_id]
 
     def active_of(st: ISSState) -> jax.Array:
         return (~st.halted) & (st.n_instr < ps.max_steps)
@@ -712,7 +824,8 @@ def run_segment_lanes_banked(bank: jax.Array, code_len: jax.Array,
         k, st = c
         return k + 1, step_lanes_banked(bank, code_len, st, ps.prog_id,
                                         subset, active=active_of(st),
-                                        mem_len=lane_mlen)
+                                        mem_len=lane_mlen,
+                                        cost=lane_cost)
 
     _, out = lax.while_loop(cond, body, (jnp.zeros((), I32), ps.lanes))
     return PackedState(lanes=out, prog_id=ps.prog_id,
@@ -784,24 +897,26 @@ def refill_lanes(ps: PackedState, take: jax.Array, src: jax.Array,
             halted=jnp.where(take, False, lanes.halted),
             n_instr=jnp.where(take, 0, lanes.n_instr),
             n_two_stage=jnp.where(take, 0, lanes.n_two_stage),
-            mix=jnp.where(t1, 0, lanes.mix)),
+            mix=jnp.where(t1, 0, lanes.mix),
+            n_cycles=jnp.where(take, 0, lanes.n_cycles)),
         prog_id=jnp.where(take, staged_prog[src], ps.prog_id),
         max_steps=jnp.where(take, staged_ms[src], ps.max_steps))
 
 
 @functools.partial(jax.jit, static_argnums=(2,))
-def run(code: jax.Array, mem: jax.Array, max_steps: int) -> ISSState:
+def run(code: jax.Array, mem: jax.Array, max_steps: int,
+        cost: jax.Array = None) -> ISSState:
     """Run to ecall or max_steps. code: (P,) uint32; mem: (M,) int32."""
     s0 = init_state(mem)
 
     def cond(s):
         return (~s.halted) & (s.n_instr < max_steps)
 
-    return lax.while_loop(cond, lambda s: step(code, s), s0)
+    return lax.while_loop(cond, lambda s: step(code, s, cost=cost), s0)
 
 
 def run_segment(code: jax.Array, s: ISSState, seg_steps: int,
-                max_steps: int) -> ISSState:
+                max_steps: int, cost: jax.Array = None) -> ISSState:
     """Resume an ISSState for up to `seg_steps` further instructions.
 
     The segment primitive of the streaming fleet engine (DESIGN.md §9):
@@ -817,7 +932,7 @@ def run_segment(code: jax.Array, s: ISSState, seg_steps: int,
 
     def body(c):
         k, st = c
-        return k + 1, step(code, st)
+        return k + 1, step(code, st, cost=cost)
 
     _, out = lax.while_loop(cond, body, (jnp.zeros((), I32), s))
     return out
@@ -826,14 +941,17 @@ def run_segment(code: jax.Array, s: ISSState, seg_steps: int,
 def run_segment_banked(bank: jax.Array, code_len: jax.Array,
                        prog_id: jax.Array, max_steps: jax.Array,
                        s: ISSState, seg_steps: int,
-                       mem_len: jax.Array = None) -> ISSState:
+                       mem_len: jax.Array = None,
+                       cost: jax.Array = None) -> ISSState:
     """Banked `run_segment`: the lax.switch interpreter fetching from a
     program bank (scalar state; the packed engine vmaps it per lane).
     `max_steps` is a traced scalar — each lane brings its own budget;
     `mem_len` (per-program word counts) bounds the lane's memory ports
-    at its own program's size.
+    at its own program's size; `cost` (per-program rows) prices the
+    lane's retirements on its own program's core.
     """
     ml = None if mem_len is None else mem_len[prog_id]
+    cr = None if cost is None else cost[prog_id]
 
     def cond(c):
         k, st = c
@@ -842,12 +960,13 @@ def run_segment_banked(bank: jax.Array, code_len: jax.Array,
     def body(c):
         k, st = c
         instr = fetch_banked(bank, code_len, prog_id, st.pc)
-        return k + 1, step(bank, st, instr=instr, mem_len=ml)
+        return k + 1, step(bank, st, instr=instr, mem_len=ml, cost=cr)
 
     _, out = lax.while_loop(cond, body, (jnp.zeros((), I32), s))
     return out
 
 
-def run_fleet(code: jax.Array, mems: jax.Array, max_steps: int) -> ISSState:
+def run_fleet(code: jax.Array, mems: jax.Array, max_steps: int,
+              cost: jax.Array = None) -> ISSState:
     """vmap over a fleet of items with different memory images."""
-    return jax.vmap(lambda m: run(code, m, max_steps))(mems)
+    return jax.vmap(lambda m: run(code, m, max_steps, cost))(mems)

@@ -1,5 +1,21 @@
 """Pure-Python RV32E instruction-set simulator — the oracle for the JAX ISS
-property tests (spike-equivalent for our subset)."""
+property tests (spike-equivalent for our subset).
+
+Also the *cycle* oracle for the timing layer (DESIGN.md §9.10): every
+step records core-independent timing events (`events`, the dual of
+`cycles.cost_row`) — per-(stage, mix-class) retirements, taken
+branches, total serial shift amount, subword memory ops — so one
+profiling run prices a program on any core via a dot product. With a
+`cost` row the oracle additionally accumulates `n_cycles` exactly as
+the JAX steppers do, int32 wrap included.
+
+Memory follows the JAX steppers' out-of-range contract: reads clamp to
+the last word, writes past the end drop (the jax gather/scatter
+semantics every stepper reproduces). Word indices are computed through
+the same int32 reinterpretation the steppers use, so the differential
+tests can compare the two bit-for-bit on OOB-touching programs
+(addresses with bit 31 set are outside the contract, as in iss.py).
+"""
 from __future__ import annotations
 
 from typing import Dict, Optional
@@ -7,6 +23,12 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.flexibits import isa
+from repro.flexibits.cycles import (MIX_CLASSES, N_COST, SHIFT_IDX,
+                                    SUBWORD_IDX, TAKEN_IDX)
+
+_MIX_IDX = {c: i for i, c in enumerate(MIX_CLASSES)}
+_N_MIX = len(MIX_CLASSES)
+_SUBWORD_NAMES = frozenset(("lb", "lh", "lbu", "lhu", "sb", "sh"))
 
 
 def _sx(v: int, bits: int) -> int:
@@ -24,7 +46,8 @@ def _s32(v: int) -> int:
 
 class PyISS:
     def __init__(self, code: np.ndarray, mem_words: int = 4096,
-                 init_mem: Optional[np.ndarray] = None):
+                 init_mem: Optional[np.ndarray] = None,
+                 cost: Optional[np.ndarray] = None):
         self.code = np.asarray(code, np.uint32)
         self.mem = np.zeros(mem_words, np.int64)
         if init_mem is not None:
@@ -36,22 +59,35 @@ class PyISS:
         self.mix: Dict[str, int] = {}
         self.n_two_stage = 0
         self.max_sp_used = None
+        self.events = np.zeros(N_COST, np.int64)
+        self.cost = None if cost is None else np.asarray(cost, np.int64)
+        self.n_cycles = 0
+
+    def _widx(self, addr: int) -> int:
+        # the steppers' word index: uint32 address reinterpreted int32,
+        # then arithmetic >> 2
+        return _s32(addr) >> 2
 
     def _load_word(self, addr: int) -> int:
-        return _s32(int(self.mem[addr >> 2]))
+        widx = max(0, min(self._widx(addr), len(self.mem) - 1))
+        return _s32(int(self.mem[widx]))
 
     def _store_word(self, addr: int, val: int):
-        self.mem[addr >> 2] = _s32(val)
+        widx = self._widx(addr)
+        if 0 <= widx < len(self.mem):
+            self.mem[widx] = _s32(val)
 
     def _load_sub(self, addr: int, nbytes: int, signed: bool) -> int:
         w = _u32(self._load_word(addr & ~3))
-        sh = (addr & 3) * 8
+        # halfword ports are aligned to addr & ~1, as in the steppers
+        # (the serial cores have no misaligned-access machinery)
+        sh = ((addr & 3) if nbytes == 1 else (addr & 2)) * 8
         v = (w >> sh) & ((1 << (nbytes * 8)) - 1)
         return _sx(v, nbytes * 8) if signed else v
 
     def _store_sub(self, addr: int, nbytes: int, val: int):
         w = _u32(self._load_word(addr & ~3))
-        sh = (addr & 3) * 8
+        sh = ((addr & 3) if nbytes == 1 else (addr & 2)) * 8
         mask = ((1 << (nbytes * 8)) - 1) << sh
         w = (w & ~mask) | ((_u32(val) << sh) & mask)
         self._store_word(addr & ~3, w)
@@ -79,6 +115,8 @@ class PyISS:
         next_pc = self.pc + 4
         wr = None
         name = "?"
+        taken = False          # branch condition held (dynamic timing)
+        shamt = 0              # serial shift amount (dynamic timing)
 
         if op == isa.OP_LUI:
             wr, name = imm_u, "lui"
@@ -95,6 +133,7 @@ class PyISS:
                     6: _u32(a) < _u32(b), 7: _u32(a) >= _u32(b)}[f3]
             name = {0: "beq", 1: "bne", 4: "blt", 5: "bge", 6: "bltu",
                     7: "bgeu"}[f3]
+            taken = bool(cond)
             if cond:
                 next_pc = self.pc + imm_b
         elif op == isa.OP_LOAD:
@@ -124,7 +163,8 @@ class PyISS:
             if f3 == 0:
                 wr, name = _s32(a + imm_i), "addi"
             elif f3 == 1:
-                wr, name = _s32(a << (imm_i & 31)), "slli"
+                shamt = imm_i & 31
+                wr, name = _s32(a << shamt), "slli"
             elif f3 == 2:
                 wr, name = int(a < imm_i), "slti"
             elif f3 == 3:
@@ -132,10 +172,11 @@ class PyISS:
             elif f3 == 4:
                 wr, name = _s32(a ^ imm_i), "xori"
             elif f3 == 5:
+                shamt = imm_i & 31
                 if f7 & 0x20:
-                    wr, name = a >> (imm_i & 31), "srai"
+                    wr, name = a >> shamt, "srai"
                 else:
-                    wr, name = _s32(_u32(a) >> (imm_i & 31)), "srli"
+                    wr, name = _s32(_u32(a) >> shamt), "srli"
             elif f3 == 6:
                 wr, name = _s32(a | imm_i), "ori"
             elif f3 == 7:
@@ -146,7 +187,8 @@ class PyISS:
                 wr, name = _s32(a - b if sub else a + b), \
                     ("sub" if sub else "add")
             elif f3 == 1:
-                wr, name = _s32(a << (b & 31)), "sll"
+                shamt = b & 31
+                wr, name = _s32(a << shamt), "sll"
             elif f3 == 2:
                 wr, name = int(a < b), "slt"
             elif f3 == 3:
@@ -154,10 +196,11 @@ class PyISS:
             elif f3 == 4:
                 wr, name = _s32(a ^ b), "xor"
             elif f3 == 5:
+                shamt = b & 31
                 if sub:
-                    wr, name = a >> (b & 31), "sra"
+                    wr, name = a >> shamt, "sra"
                 else:
-                    wr, name = _s32(_u32(a) >> (b & 31)), "srl"
+                    wr, name = _s32(_u32(a) >> shamt), "srl"
             elif f3 == 6:
                 wr, name = _s32(a | b), "or"
             elif f3 == 7:
@@ -173,8 +216,33 @@ class PyISS:
         self.pc = next_pc
         self.n_instr += 1
         self.mix[name] = self.mix.get(name, 0) + 1
-        if name in isa.TWO_STAGE:
+        two = name in isa.TWO_STAGE
+        if two:
             self.n_two_stage += 1
+
+        # ---- timing events (mirror of iss.dynamic_terms/timing_ticks)
+        subword = name in _SUBWORD_NAMES
+        cls = (_N_MIX if two else 0) + _MIX_IDX[isa.MIX_CATEGORY[name]]
+        self.events[cls] += 1
+        if taken:
+            self.events[TAKEN_IDX] += 1
+        self.events[SHIFT_IDX] += shamt
+        if subword:
+            self.events[SUBWORD_IDX] += 1
+        if self.cost is not None:
+            ticks = int(self.cost[cls])
+            if taken:
+                ticks += int(self.cost[TAKEN_IDX])
+            ticks += shamt * int(self.cost[SHIFT_IDX])
+            if subword:
+                ticks += int(self.cost[SUBWORD_IDX])
+            # the steppers tally in int32; wrap identically
+            self.n_cycles = _s32(self.n_cycles + ticks)
+
+    def ticks(self, cost: np.ndarray) -> int:
+        """Total ticks under `cost` from the recorded events (exact,
+        no wrap) — prices one run on any core after the fact."""
+        return int(np.asarray(cost, np.int64) @ self.events)
 
     def run(self, max_steps: int = 10_000_000):
         while not self.halted and self.n_instr < max_steps:

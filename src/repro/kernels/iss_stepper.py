@@ -58,6 +58,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 from repro.flexibits import iss
+from repro.flexibits.cycles import N_COST
 from repro.flexibits.iss import I32, U32, ISSState, PackedState, _u
 
 
@@ -70,8 +71,9 @@ def _pick_lane_tile(n_lanes: int, want: Optional[int]) -> int:
     return 1
 
 
-def _step_tile(bank_flat, lane_base, lane_len, lane_mlen, regs, pc, mem,
-               halted, n_instr, n_two, mix, active, subset):
+def _step_tile(bank_flat, lane_base, lane_len, lane_mlen, lane_cost,
+               regs, pc, mem, halted, n_instr, n_two, mix, n_cyc,
+               active, subset):
     """One branchless architectural step over a (TL,)-lane tile.
 
     Lane-vectorized port of `iss.step_branchless`: the opcode-gated
@@ -88,7 +90,10 @@ def _step_tile(bank_flat, lane_base, lane_len, lane_mlen, regs, pc, mem,
     the lane's program boundary even when the pool memory is padded
     wider. `active=False` freezes a lane completely. `subset` is static
     — opcode classes outside it are dropped from the kernel at build
-    time.
+    time, and `lane_cost=None` (timing off) drops the whole cycle tally
+    (the timing select in `iss.timing_ticks` is already a one-hot
+    reduction, so with timing ON the kernel body still contains no
+    gather/scatter).
     """
     n_lanes = pc.shape[0]
     n_bank = bank_flat.shape[0]
@@ -127,9 +132,10 @@ def _step_tile(bank_flat, lane_base, lane_len, lane_mlen, regs, pc, mem,
             & (is_store & (widx < lane_mlen))[:, None]
         return jnp.where(wsel, neww[:, None], mem)
 
-    next_pc, wr, writes_rd, new_mem, halt, two_stage, mix_idx = \
+    next_pc, wr, writes_rd, new_mem, halt, two_stage, mix_idx, ticks = \
         iss.branchless_commits(d, a, b, pc, subset, live,
-                               read_word=read_word, write_word=write_word)
+                               read_word=read_word, write_word=write_word,
+                               cost=lane_cost)
     mem = mem if new_mem is None else new_mem
 
     # ---- one-hot register-file commit (elementwise, no scatter)
@@ -145,22 +151,25 @@ def _step_tile(bank_flat, lane_base, lane_len, lane_mlen, regs, pc, mem,
             halted | (halt & live),
             n_instr + one,
             n_two + (two_stage & live).astype(I32),
-            mix + mix_onehot)
+            mix + mix_onehot,
+            n_cyc if ticks is None else n_cyc + ticks * one)
 
 
 def _segment_kernel(bank_ref, clen_ref, mlen_ref, pid_ref, ms_ref,
-                    regs_ref, pc_ref, mem_ref, halt_ref,
-                    ni_ref, n2_ref, mix_ref,
+                    cost_ref, regs_ref, pc_ref, mem_ref, halt_ref,
+                    ni_ref, n2_ref, mix_ref, ncyc_ref,
                     oregs_ref, opc_ref, omem_ref, ohalt_ref,
-                    oni_ref, on2_ref, omix_ref, *,
-                    seg_steps: int, subset):
+                    oni_ref, on2_ref, omix_ref, oncyc_ref, *,
+                    seg_steps: int, subset, timing: bool):
     """Mega-step: all `seg_steps` architectural steps of one lane tile.
 
     State is read from the refs ONCE, carried through the segment loop as
     kernel-resident values, and written back ONCE — the per-step state
     round-trip of the XLA steppers never leaves the kernel. The bank,
-    each lane's flat fetch base/length, memory bound, and step budget
-    are segment constants, hoisted out of the loop.
+    each lane's flat fetch base/length, memory bound, cost row, and step
+    budget are segment constants, hoisted out of the loop. `timing`
+    (static) gates the cycle tally: off, the per-program cost bank is a
+    dummy and `n_cycles` passes through untouched.
     """
     bank = bank_ref[...]
     clen = clen_ref[...]
@@ -173,26 +182,34 @@ def _segment_kernel(bank_ref, clen_ref, mlen_ref, pid_ref, ms_ref,
     lane_mlen = jnp.sum(jnp.where(psel, mlen[None, :], 0), axis=1)
     lane_base = pid * bank_width
     bank_flat = bank.reshape(-1)
+    lane_cost = None
+    if timing:
+        # per-lane cost rows: the same one-hot program select as
+        # lane_len/lane_mlen, lifted over the cost axis
+        cost = cost_ref[...]
+        lane_cost = jnp.sum(jnp.where(psel[:, :, None], cost[None, :, :],
+                                      0), axis=1)
 
     carry = (jnp.zeros((), I32), regs_ref[...], pc_ref[...], mem_ref[...],
-             halt_ref[...], ni_ref[...], n2_ref[...], mix_ref[...])
+             halt_ref[...], ni_ref[...], n2_ref[...], mix_ref[...],
+             ncyc_ref[...])
 
     def active_of(halted, n_instr):
         return (~halted) & (n_instr < max_steps)
 
     def cond(c):
-        k, _, _, _, halted, n_instr, _, _ = c
+        k, _, _, _, halted, n_instr, _, _, _ = c
         return (k < seg_steps) & active_of(halted, n_instr).any()
 
     def body(c):
-        k, regs, pc, mem, halted, n_instr, n2, mix = c
+        k, regs, pc, mem, halted, n_instr, n2, mix, ncyc = c
         act = active_of(halted, n_instr)
-        regs, pc, mem, halted, n_instr, n2, mix = _step_tile(
-            bank_flat, lane_base, lane_len, lane_mlen, regs, pc, mem,
-            halted, n_instr, n2, mix, act, subset)
-        return k + 1, regs, pc, mem, halted, n_instr, n2, mix
+        regs, pc, mem, halted, n_instr, n2, mix, ncyc = _step_tile(
+            bank_flat, lane_base, lane_len, lane_mlen, lane_cost, regs,
+            pc, mem, halted, n_instr, n2, mix, ncyc, act, subset)
+        return k + 1, regs, pc, mem, halted, n_instr, n2, mix, ncyc
 
-    _, regs, pc, mem, halted, n_instr, n2, mix = \
+    _, regs, pc, mem, halted, n_instr, n2, mix, ncyc = \
         lax.while_loop(cond, body, carry)
     oregs_ref[...] = regs
     opc_ref[...] = pc
@@ -201,11 +218,13 @@ def _segment_kernel(bank_ref, clen_ref, mlen_ref, pid_ref, ms_ref,
     oni_ref[...] = n_instr
     on2_ref[...] = n2
     omix_ref[...] = mix
+    oncyc_ref[...] = ncyc
 
 
 def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
                        state: PackedState, *, seg_steps: int,
                        subset=None, mem_len: Optional[jax.Array] = None,
+                       cost: Optional[jax.Array] = None,
                        lane_tile: Optional[int] = None,
                        interpret: Optional[bool] = None) -> PackedState:
     """Fused packed segment: every lane runs ITS OWN bank program.
@@ -217,7 +236,10 @@ def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
     and the fetch is a per-program-clamped one-hot over the flattened
     bank. `mem_len` (per-program word counts, like `code_len`) bounds
     each lane's memory ports at its own program's size; None means the
-    padded pool width is every program's true size. `subset` must cover
+    padded pool width is every program's true size. `cost` (per-program
+    (n_progs, N_COST) rows, like `mem_len`) turns on the per-lane cycle
+    tally — None keeps the timing layer out of the kernel entirely (a
+    dummy zero bank holds the spec list static). `subset` must cover
     the union of the bank's opcode subsets. State buffers are aliased
     input->output; `prog_id`/`max_steps` are segment constants and pass
     through untouched.
@@ -231,6 +253,9 @@ def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
     n_progs, bank_width = bank.shape
     if mem_len is None:
         mem_len = jnp.full((n_progs,), mem_words, I32)
+    timing = cost is not None
+    if cost is None:
+        cost = jnp.zeros((n_progs, N_COST), I32)
     tile = _pick_lane_tile(n_lanes, 128 if lane_tile is None else lane_tile)
     n_mix = len(iss.MIX_CLASSES)
     sub = None if subset is None else frozenset(subset)
@@ -246,7 +271,7 @@ def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
 
     out = pl.pallas_call(
         functools.partial(_segment_kernel, seg_steps=seg_steps,
-                          subset=sub),
+                          subset=sub, timing=timing),
         grid=(n_lanes // tile,),
         in_specs=[
             pl.BlockSpec((n_progs, bank_width), lambda i: (0, 0)),
@@ -254,6 +279,7 @@ def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
             pl.BlockSpec((n_progs,), whole),
             pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile,), row),
+            pl.BlockSpec((n_progs, N_COST), lambda i: (0, 0)),
             pl.BlockSpec((tile, 16), row2),
             pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile, mem_words), row2),
@@ -261,6 +287,7 @@ def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
             pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile, n_mix), row2),
+            pl.BlockSpec((tile,), row),
         ],
         out_specs=[
             pl.BlockSpec((tile, 16), row2),
@@ -270,6 +297,7 @@ def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
             pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile, n_mix), row2),
+            pl.BlockSpec((tile,), row),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n_lanes, 16), I32),
@@ -279,24 +307,25 @@ def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
             jax.ShapeDtypeStruct((n_lanes,), I32),
             jax.ShapeDtypeStruct((n_lanes,), I32),
             jax.ShapeDtypeStruct((n_lanes, n_mix), I32),
+            jax.ShapeDtypeStruct((n_lanes,), I32),
         ],
         # state buffers update in place (bank/code_len/mem_len/prog_id/
-        # max_steps, inputs 0-4, are read-only segment constants)
-        input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3, 9: 4, 10: 5,
-                              11: 6},
+        # max_steps/cost, inputs 0-5, are read-only segment constants)
+        input_output_aliases={6: 0, 7: 1, 8: 2, 9: 3, 10: 4, 11: 5,
+                              12: 6, 13: 7},
         interpret=interpret,
-    )(bank, code_len, mem_len, state.prog_id, state.max_steps,
+    )(bank, code_len, mem_len, state.prog_id, state.max_steps, cost,
       lanes.regs, lanes.pc, lanes.mem, lanes.halted,
-      lanes.n_instr, lanes.n_two_stage, lanes.mix)
+      lanes.n_instr, lanes.n_two_stage, lanes.mix, lanes.n_cycles)
     return PackedState(lanes=ISSState(*out), prog_id=state.prog_id,
                        max_steps=state.max_steps)
 
 
 def _refill_kernel(take_ref, src_ref, smem_ref, sprog_ref, sms_ref,
                    regs_ref, pc_ref, mem_ref, halt_ref, ni_ref, n2_ref,
-                   mix_ref, pid_ref, ms_ref,
+                   mix_ref, ncyc_ref, pid_ref, ms_ref,
                    oregs_ref, opc_ref, omem_ref, ohalt_ref, oni_ref,
-                   on2_ref, omix_ref, opid_ref, oms_ref):
+                   on2_ref, omix_ref, oncyc_ref, opid_ref, oms_ref):
     """One-hot staged->lane swap for a lane tile (DESIGN.md §9.9).
 
     The resident runtime's compaction/scatter expressed the way the
@@ -328,6 +357,7 @@ def _refill_kernel(take_ref, src_ref, smem_ref, sprog_ref, sms_ref,
     oni_ref[...] = jnp.where(take, 0, ni_ref[...])
     on2_ref[...] = jnp.where(take, 0, n2_ref[...])
     omix_ref[...] = jnp.where(t1, 0, mix_ref[...])
+    oncyc_ref[...] = jnp.where(take, 0, ncyc_ref[...])
     opid_ref[...] = jnp.where(take, pick(sprog_ref[...]), pid_ref[...])
     oms_ref[...] = jnp.where(take, pick(sms_ref[...]), ms_ref[...])
 
@@ -376,6 +406,7 @@ def iss_refill(state: PackedState, take: jax.Array, src: jax.Array,
             pl.BlockSpec((tile, n_mix), row2),
             pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile,), row),
+            pl.BlockSpec((tile,), row),
         ],
         out_specs=[
             pl.BlockSpec((tile, 16), row2),
@@ -385,6 +416,7 @@ def iss_refill(state: PackedState, take: jax.Array, src: jax.Array,
             pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile, n_mix), row2),
+            pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile,), row),
         ],
@@ -398,21 +430,24 @@ def iss_refill(state: PackedState, take: jax.Array, src: jax.Array,
             jax.ShapeDtypeStruct((n_lanes, n_mix), I32),
             jax.ShapeDtypeStruct((n_lanes,), I32),
             jax.ShapeDtypeStruct((n_lanes,), I32),
+            jax.ShapeDtypeStruct((n_lanes,), I32),
         ],
         # lane-pool state updates in place (take/src/staged, inputs 0-4,
         # are read-only refill constants)
         input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3, 9: 4, 10: 5,
-                              11: 6, 12: 7, 13: 8},
+                              11: 6, 12: 7, 13: 8, 14: 9},
         interpret=interpret,
     )(take, src, staged_mems, staged_prog, staged_ms,
       lanes.regs, lanes.pc, lanes.mem, lanes.halted, lanes.n_instr,
-      lanes.n_two_stage, lanes.mix, state.prog_id, state.max_steps)
-    return PackedState(lanes=ISSState(*out[:7]), prog_id=out[7],
-                       max_steps=out[8])
+      lanes.n_two_stage, lanes.mix, lanes.n_cycles, state.prog_id,
+      state.max_steps)
+    return PackedState(lanes=ISSState(*out[:8]), prog_id=out[8],
+                       max_steps=out[9])
 
 
 def iss_segment(code: jax.Array, state: ISSState, *, seg_steps: int,
                 max_steps: int, subset=None,
+                cost: Optional[jax.Array] = None,
                 lane_tile: Optional[int] = None,
                 interpret: Optional[bool] = None) -> ISSState:
     """Fused-segment stepper: up to `seg_steps` steps for every lane.
@@ -446,6 +481,7 @@ def iss_segment(code: jax.Array, state: ISSState, *, seg_steps: int,
         max_steps=jnp.full((n_lanes,), max_steps, I32))
     out = iss_segment_banked(
         code[None, :], jnp.asarray([code.shape[0]], I32), packed,
-        seg_steps=seg_steps, subset=subset, lane_tile=lane_tile,
-        interpret=interpret)
+        seg_steps=seg_steps, subset=subset,
+        cost=None if cost is None else cost[None, :],
+        lane_tile=lane_tile, interpret=interpret)
     return out.lanes

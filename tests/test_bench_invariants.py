@@ -29,7 +29,8 @@ def bench():
 
 def test_bench_has_all_studies(bench):
     for key in ("streaming_vs_monolithic", "stepper_ab", "fusion_proof",
-                "packed_vs_sequential", "resident_vs_host_refill"):
+                "packed_vs_sequential", "resident_vs_host_refill",
+                "timing_overhead"):
         assert key in bench, f"BENCH_fleet.json lost the {key} study"
 
 
@@ -58,6 +59,16 @@ def test_stepper_ab_invariant(bench):
     """§9.5: the branchless stepper must stay ahead of the legacy
     lax.switch interpreter per retired instruction."""
     assert float(bench["stepper_ab"]["stepper_speedup"]) > 1.0
+
+
+def test_timing_overhead_invariant(bench):
+    """§9.10: the per-lane cycle layer must be architecturally invisible
+    (bit-exact on vs off) and cheap — cycles-on segment wall within
+    1.5x of cycles-off even with full dynamic cost rows."""
+    to = bench["timing_overhead"]
+    assert to["bit_exact"] is True
+    assert float(to["overhead_ratio"]) <= 1.5, to["overhead_ratio"]
+    assert float(to["mean_cycles_per_item"]) > 0
 
 
 def test_resident_runtime_invariant(bench):

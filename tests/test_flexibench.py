@@ -24,6 +24,38 @@ def test_asm_matches_reference(key):
         assert int(np.int32(sim.mem[w.out_addr])) == int(exp), key
 
 
+def test_workloads_end_to_end_packed_engine():
+    """Every workload through the packed fleet engine (one bank, one
+    stream): each item's out-word must equal the functional reference
+    AND the PyISS oracle."""
+    from repro.fleet import engine
+    n = 2
+    ws = all_workloads()
+    groups, want = [], []
+    for w in ws:
+        rng = np.random.default_rng(42)
+        xs = w.gen_inputs(rng, n)
+        mems = np.stack([w.initial_memory(x) for x in xs]).astype(np.int32)
+        refs = np.asarray(w.ref(xs), np.int64)
+        oracle = []
+        for m in mems:
+            sim = PyISS(w.program.code, w.total_mem_words, m).run(w.max_steps)
+            assert sim.halted, w.key
+            oracle.append(int(np.int32(sim.mem[w.out_addr])))
+        groups.append(engine.PackedGroup(
+            code=w.program.code, source=engine.array_source(mems),
+            n_items=n, max_steps=w.max_steps, mem_words=w.total_mem_words,
+            out_addr=w.out_addr))
+        want.append((w.key, refs, np.asarray(oracle, np.int64)))
+    results, _ = engine.run_packed(groups, chunk=16, seg_steps=256)
+    for res, (key, refs, oracle) in zip(results, want):
+        assert res.halted.all(), key
+        np.testing.assert_array_equal(res.out.astype(np.int64), refs,
+                                      err_msg=key)
+        np.testing.assert_array_equal(res.out.astype(np.int64), oracle,
+                                      err_msg=key)
+
+
 def test_eleven_workloads_ten_sdgs():
     ws = all_workloads()
     assert len(ws) == 11

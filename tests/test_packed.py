@@ -41,7 +41,8 @@ def _packed_pool(workloads, pids, seed=5):
         mem=jnp.asarray(mems), halted=jnp.zeros((n,), bool),
         n_instr=jnp.zeros((n,), iss.I32),
         n_two_stage=jnp.zeros((n,), iss.I32),
-        mix=jnp.zeros((n, len(iss.MIX_CLASSES)), iss.I32))
+        mix=jnp.zeros((n, len(iss.MIX_CLASSES)), iss.I32),
+        n_cycles=jnp.zeros((n,), iss.I32))
     ps = iss.PackedState(lanes=lanes, prog_id=jnp.asarray(pids, iss.I32),
                          max_steps=jnp.asarray(ms))
     refs = []

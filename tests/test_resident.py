@@ -154,7 +154,8 @@ def test_pallas_refill_swap_matches_jnp_swap():
         halted=jnp.asarray(rng.random(n) < 0.5),
         n_instr=jnp.asarray(rng.integers(0, 50, n), iss.I32),
         n_two_stage=jnp.asarray(rng.integers(0, 20, n), iss.I32),
-        mix=jnp.asarray(rng.integers(0, 9, (n, 8)), iss.I32))
+        mix=jnp.asarray(rng.integers(0, 9, (n, 8)), iss.I32),
+        n_cycles=jnp.asarray(rng.integers(0, 999, n), iss.I32))
     ps = iss.PackedState(
         lanes=lanes,
         prog_id=jnp.asarray(rng.integers(0, 3, n), iss.I32),

@@ -121,6 +121,7 @@ def test_subset_specialized_segment_parity():
         n_instr=jnp.zeros((n,), iss.I32),
         n_two_stage=jnp.zeros((n,), iss.I32),
         mix=jnp.zeros((n, len(iss.MIX_CLASSES)), iss.I32),
+        n_cycles=jnp.zeros((n,), iss.I32),
     )
     seg = jax.jit(lambda c, st: iss.run_segment_lanes(
         c, st, 64, w.max_steps, sub))
@@ -144,7 +145,8 @@ def test_segment_unroll_bit_exact():
         mem=jnp.asarray(mems), halted=jnp.zeros((6,), bool),
         n_instr=jnp.zeros((6,), iss.I32),
         n_two_stage=jnp.zeros((6,), iss.I32),
-        mix=jnp.zeros((6, len(iss.MIX_CLASSES)), iss.I32))
+        mix=jnp.zeros((6, len(iss.MIX_CLASSES)), iss.I32),
+        n_cycles=jnp.zeros((6,), iss.I32))
     ref = jax.jit(lambda c, s: iss.run_segment_lanes(
         c, s, 37, w.max_steps))(code, states)
     got = jax.jit(lambda c, s: iss.run_segment_lanes(
@@ -198,6 +200,7 @@ def test_pallas_subset_segment_parity():
         n_instr=jnp.zeros((n,), iss.I32),
         n_two_stage=jnp.zeros((n,), iss.I32),
         mix=jnp.zeros((n, len(iss.MIX_CLASSES)), iss.I32),
+        n_cycles=jnp.zeros((n,), iss.I32),
     )
     seg = jax.jit(lambda c, st: iss_segment(
         c, st, seg_steps=64, max_steps=w.max_steps, subset=sub,
