@@ -481,6 +481,69 @@ def fleet_timing_overhead(chunk: int = 128, seg_steps: int = 256,
     return rows, derived
 
 
+def fleet_flexilint(n_inputs: int = 3):
+    """FlexiLint certificate study (DESIGN.md §9.11).
+
+    Runs the static analyzer over every FlexiBench workload and records
+    the analysis wall time, the certified WCET tick bound under the
+    dynamic SERV cost row, and the maximum ticks the PyISS oracle
+    actually measures over `n_inputs` generated inputs. The gates are
+    the soundness contract: zero lint errors, a finite WCET for every
+    workload, and WCET/measured >= 1 everywhere — a ratio below 1 means
+    the certificate is wrong, not slow.
+    """
+    from repro.flexibench.base import all_workloads
+    from repro.flexibits import analyze
+    from repro.flexibits.cycles import SERV, cost_row
+    from repro.flexibits.pyiss import PyISS
+
+    cost = cost_row(SERV, dynamic=True)
+    per = {}
+    for w in all_workloads():
+        t0 = time.perf_counter()
+        a = analyze.analyze_code(w.program.code, w.total_mem_words,
+                                 loop_bounds=w.program.loop_bounds,
+                                 name=w.key)
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        wcet = a.wcet_ticks(cost)
+        rng = np.random.default_rng(0)
+        measured = 0
+        for x in w.gen_inputs(rng, n_inputs):
+            sim = PyISS(w.program.code, mem_words=w.total_mem_words,
+                        init_mem=w.initial_memory(x))
+            sim.run(max_steps=w.max_steps)
+            measured = max(measured, sim.ticks(cost))
+        per[w.key] = {
+            "analysis_wall_ms": wall_ms,
+            "n_words": a.n_words,
+            "errors": len(a.errors),
+            "warnings": len(a.warnings),
+            "min_steps": a.min_steps,
+            "wcet_steps": a.wcet_steps,
+            "wcet_ticks": wcet,
+            "measured_max_ticks": measured,
+            "wcet_over_measured":
+                (wcet / measured) if (wcet and measured) else None,
+        }
+    rows = [(f"fleet/lint_{k}", round(p["analysis_wall_ms"], 1),
+             p["wcet_ticks"], p["measured_max_ticks"],
+             round(p["wcet_over_measured"], 2))
+            for k, p in per.items()]
+    derived = {
+        "per_workload": per,
+        "core": "SERV",
+        "dynamic": True,
+        "n_inputs": n_inputs,
+        "total_errors": sum(p["errors"] for p in per.values()),
+        "all_bounded": all(p["wcet_ticks"] is not None
+                           for p in per.values()),
+        "min_ratio": min(p["wcet_over_measured"] for p in per.values()),
+        "target": "0 lint errors, finite WCET, WCET >= measured ticks "
+                  "on every workload",
+    }
+    return rows, derived
+
+
 def _scaling_worker(n_items: int, chunk: int, seg_steps: int) -> dict:
     """One scaling point: run the sharded engine over ALL host devices.
     Invoked in a subprocess with XLA_FLAGS forcing the device count."""
@@ -613,6 +676,16 @@ def main():
           f"dynamic {to['core']} rows on ({to['mean_cycles_per_item']:.0f} "
           f"measured cycles/item, bit-exact architectural state)")
 
+    fl_rows, fl = fleet_flexilint()
+    bench["flexilint"] = fl
+    print(f"\n{'metric':<18} {'wall ms':>9} {'wcet ticks':>12} "
+          f"{'measured':>12} {'ratio':>7}")
+    for name, ms, wc, ms_t, ratio in fl_rows:
+        print(f"{name:<18} {ms:>9} {wc:>12} {ms_t:>12} {ratio:>7}")
+    print(f"flexilint: {len(fl['per_workload'])} workloads, "
+          f"{fl['total_errors']} errors, tightest certificate "
+          f"{fl['min_ratio']:.2f}x measured (SERV dynamic rows)")
+
     if not args.skip_scaling:
         sc_rows, sc = fleet_device_scaling(
             n_items=args.items, chunk=args.chunk,
@@ -651,6 +724,14 @@ def main():
     if to["overhead_ratio"] > 1.5:
         failures.append(f"timing overhead target NOT met: "
                         f"{to['overhead_ratio']:.3f}x > 1.5x")
+    if fl["total_errors"] > 0:
+        failures.append(f"flexilint target NOT met: "
+                        f"{fl['total_errors']} lint errors")
+    if not fl["all_bounded"]:
+        failures.append("flexilint target NOT met: unbounded WCET")
+    if fl["min_ratio"] < 1.0:
+        failures.append(f"flexilint SOUNDNESS violated: "
+                        f"WCET/measured {fl['min_ratio']:.3f}x < 1")
     if derived["cycles_saved_ratio"] < 2.0 and args.items < 4 * args.chunk:
         print(f"note: fleet too small to exploit skew "
               f"(--items {args.items} < 4x --chunk {args.chunk}); "

@@ -93,6 +93,29 @@ def operational_kg(core: Core, prof: DeviceProfile, *, lifetime_s: float,
     return kwh * intensity
 
 
+def certified_energy_j(core: Core, prof: DeviceProfile, clock_hz: float,
+                       wcet_cycles: float) -> float:
+    """Certified worst-case energy of one execution (DESIGN.md §9.11):
+    FlexiLint's statically proved WCET cycle bound priced through the
+    same power model as the measured mean. An upper bound on
+    `energy_per_exec_j` whenever the measurement used the dynamic cost
+    row (pinned by tests/test_flexilint.py)."""
+    return energy_per_exec_j(core, prof, clock_hz, cycles=wcet_cycles)
+
+
+def certified_operational_kg(core: Core, prof: DeviceProfile, *,
+                             lifetime_s: float, execs_per_day: float,
+                             intensity: float = 0.367,
+                             clock_hz: float = 10_000.0,
+                             wcet_cycles: float) -> float:
+    """Certified worst-case lifetime operational carbon (§9.11): every
+    execution priced at the static WCET ceiling instead of the measured
+    mean — the number a deployment can promise without profiling."""
+    return operational_kg(core, prof, lifetime_s=lifetime_s,
+                          execs_per_day=execs_per_day, intensity=intensity,
+                          clock_hz=clock_hz, cycles=wcet_cycles)
+
+
 def total_kg(core: Core, prof: DeviceProfile, *, lifetime_s: float,
              execs_per_day: float, intensity: float = 0.367,
              clock_hz: float = 10_000.0) -> float:

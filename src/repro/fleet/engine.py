@@ -371,6 +371,11 @@ class PackedGroup:
     # optional (N_COST,) int32 cycle-cost row (cycles.cost_row) — turns
     # on per-lane n_cycles accounting for this group's items (§9.10)
     cost: Optional[np.ndarray] = None
+    # optional static opcode subset for this program (e.g. FlexiLint's
+    # reachable-only subset, DESIGN.md §9.11). The packed bank shares
+    # one traced graph, so the run uses the union over groups; None
+    # falls back to the text-derived `iss.opcode_subset(code)`.
+    subset: Optional[frozenset] = None
 
 
 @dataclasses.dataclass
@@ -795,7 +800,8 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
     bank_np, code_len_np = iss.pack_programs([g.code for g in groups])
     if subset is None:
         subset = frozenset().union(
-            *(iss.opcode_subset(g.code) for g in groups))
+            *(g.subset if g.subset is not None
+              else iss.opcode_subset(g.code) for g in groups))
     bank = jnp.asarray(bank_np)
     code_len = jnp.asarray(code_len_np)
     # per-program memory bounds: lanes of a small-memory group keep
@@ -1253,18 +1259,20 @@ def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,
                         stepper: str = "branchless",
                         prefetch: bool = True, refill: str = "device",
                         adaptive: bool = False,
-                        cost: Optional[np.ndarray] = None) -> FleetResult:
+                        cost: Optional[np.ndarray] = None,
+                        subset: Optional[frozenset] = None) -> FleetResult:
     """Convenience wrapper: stream a FlexiBench workload end to end.
 
     The branchless/pallas steppers' opcode subset is derived from the
     workload's program text, so the compiled segment contains only the
     ISA subset this workload retires (the RISP specialization knob
-    applied to the simulator)."""
+    applied to the simulator). `subset` pins it explicitly instead —
+    e.g. FlexiLint's reachable-only subset (DESIGN.md §9.11)."""
     return run_stream(
         w.program.code, workload_source(w, seed), n_items=n_items,
         mem_words=w.total_mem_words,
         max_steps=w.max_steps if max_steps is None else max_steps,
-        chunk=chunk,
+        chunk=chunk, subset=subset,
         seg_steps=seg_steps, out_addr=w.out_addr, keep_state=keep_state,
         mesh=mesh, stepper=stepper, prefetch=prefetch, refill=refill,
         adaptive=adaptive, cost=cost)

@@ -39,6 +39,13 @@ class GroupReport:
     # mean measured cycles/execution from the engine's per-lane n_cycles
     # tallies (§9.10); None when the group ran cycles-off
     measured_cycles: Optional[float] = None
+    # FlexiLint certificate (§9.11): statically proved worst-case
+    # cycles/execution (dynamic cost row), and that ceiling priced as
+    # energy and lifetime operational carbon. None when the plan ran
+    # without the static pass (run_plan always supplies it).
+    wcet_cycles: Optional[float] = None
+    certified_energy_j: Optional[float] = None
+    certified_operational_kg: Optional[float] = None
 
     @property
     def cycles_per_item(self) -> float:
@@ -49,11 +56,21 @@ class GroupReport:
         return self.core.cycles(self.profile.n_one_stage,
                                 self.profile.n_two_stage)
 
+    @property
+    def wcet_ratio(self) -> Optional[float]:
+        """Certified worst-case cycles / measured-or-analytic mean —
+        the looseness of the certificate (>= 1 whenever the mean is a
+        dynamic-cost measurement; see tests/test_flexilint.py)."""
+        if self.wcet_cycles is None:
+            return None
+        return self.wcet_cycles / max(self.cycles_per_item, 1e-12)
+
 
 def build_group_report(*, group: Any, workload: Workload, core: Core,
                        result: FleetResult, lifetime_s: float,
                        execs_per_day: float, intensity: float,
-                       clock_hz: float) -> GroupReport:
+                       clock_hz: float,
+                       wcet_cycles: Optional[float] = None) -> GroupReport:
     n = max(result.n_items, 1)
     mean_one = float((result.n_instr - result.n_two_stage).sum()) / n
     mean_two = float(result.n_two_stage.sum()) / n
@@ -75,6 +92,16 @@ def build_group_report(*, group: Any, workload: Workload, core: Core,
     emb_kg = carbon.soc_embodied_kg(core, prof) * result.n_items
     best, _ = optimal_core(prof, lifetime_s=lifetime_s,
                            execs_per_day=execs_per_day, intensity=intensity)
+    # FlexiLint certificate (§9.11): price the proved worst-case cycle
+    # ceiling through the same carbon model as the measured mean
+    cert_e = cert_op = None
+    if wcet_cycles is not None:
+        cert_e = carbon.certified_energy_j(core, prof, clock_hz,
+                                           wcet_cycles)
+        cert_op = carbon.certified_operational_kg(
+            core, prof, lifetime_s=lifetime_s, execs_per_day=execs_per_day,
+            intensity=intensity, clock_hz=clock_hz,
+            wcet_cycles=wcet_cycles) * result.n_items
     return GroupReport(
         group=group, workload=workload, core=core, result=result,
         lifetime_s=lifetime_s, execs_per_day=execs_per_day, profile=prof,
@@ -82,7 +109,8 @@ def build_group_report(*, group: Any, workload: Workload, core: Core,
         fleet_exec_kwh=e_exec * result.n_items / 3.6e6,
         operational_kg=op_kg, embodied_kg=emb_kg,
         total_kg=op_kg + emb_kg, recommended_core=best.name,
-        measured_cycles=cycles)
+        measured_cycles=cycles, wcet_cycles=wcet_cycles,
+        certified_energy_j=cert_e, certified_operational_kg=cert_op)
 
 
 def simulation_footprint_kg(wall_s: float, n_chips: int = 1,
@@ -146,16 +174,26 @@ class FleetReport:
         return simulation_footprint_kg(self.wall_s, n_chips, self.intensity)
 
     def format(self) -> str:
+        # WCET column only when at least one group carries a §9.11
+        # certificate (run_plan always attaches one)
+        certified = any(g.wcet_cycles is not None for g in self.groups)
         head = (f"{'group':<22} {'core':<5} {'items':>8} {'instr/item':>11} "
-                f"{'cyc/item':>10} {'mWh/fleet-exec':>14} "
+                f"{'cyc/item':>10} "
+                + (f"{'wcet-cyc':>10} " if certified else "")
+                + f"{'mWh/fleet-exec':>14} "
                 f"{'kg CO2e (op+emb)':>17} {'best':>5}")
         lines = [head, "-" * len(head)]
         for g in self.groups:
             mean_instr = (g.profile.n_one_stage + g.profile.n_two_stage)
+            wcet = ""
+            if certified:
+                wcet = f"{'-':>10} " if g.wcet_cycles is None \
+                    else f"{g.wcet_cycles:>10.0f} "
             lines.append(
                 f"{g.workload.key + ' ' + g.workload.algorithm:<22.22} "
                 f"{g.core.name:<5} {g.result.n_items:>8} "
                 f"{mean_instr:>11.1f} {g.cycles_per_item:>10.1f} "
+                + wcet +
                 f"{g.fleet_exec_kwh * 1e6:>14.3f} "
                 f"{g.operational_kg:>8.3g}+{g.embodied_kg:<8.3g} "
                 f"{g.recommended_core:>5}")
@@ -171,6 +209,15 @@ class FleetReport:
             f"stepper {'/'.join(steppers)} x{n_dev} dev; "
             f"sim footprint {self.simulation_kg() * 1e3:.3g} g CO2e "
             f"({self.wall_s:.2f}s wall)")
+        if certified:
+            cert = [g for g in self.groups if g.wcet_cycles is not None]
+            cert_op = sum(g.certified_operational_kg for g in cert)
+            meas_op = sum(g.operational_kg for g in cert)
+            lines.append(
+                f"certified (FlexiLint §9.11): worst-case operational "
+                f"{cert_op:.4g} kg CO2e vs {meas_op:.4g} measured/analytic "
+                f"({cert_op / max(meas_op, 1e-30):.2f}x headroom, "
+                f"{len(cert)}/{len(self.groups)} groups certified)")
         if self.packed is not None:
             p = self.packed
             lines.append(

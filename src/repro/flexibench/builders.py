@@ -113,13 +113,17 @@ def pack_tree(nodes):
     return np.asarray(flat, np.int32)
 
 
-def emit_tree_walk(a: Asm, *, table_off: int, x_addr: int):
+def emit_tree_walk(a: Asm, *, table_off: int, x_addr: int, depth: int = 3):
     """Walk one packed tree; leaf value (small int) left in a3.
 
     next = (x[feat] <= thresh) ? left : right; negative next = ~leaf.
+    `depth` bounds the internal levels of the packed table (every
+    FlexiBench tree is 3 deep) — the walk is data-dependent, so the
+    FlexiLint WCET needs the bound as an annotation (DESIGN.md §9.11).
     """
     loop, right, done = a.uniq("tw"), a.uniq("tw_r"), a.uniq("tw_d")
     a.li(a.a3, 0)                        # node idx
+    a.loop_bound(loop, depth)
     a.label(loop)
     a.la_const(a.t0, table_off)
     a.slli(a.t1, a.a3, 4)                # node * 16 bytes
@@ -156,6 +160,8 @@ def emit_popcount(a: Asm):
     a.mv(a.t0, a.a0)
     a.li(a.a0, 0)
     loop, done = "__pc_loop", "__pc_done"
+    # one iteration per set bit + the final zero test
+    a.loop_bound(loop, 33)
     a.label(loop)
     a.beq(a.t0, a.zero, done)
     a.addi(a.t1, a.t0, -1)

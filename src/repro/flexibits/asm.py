@@ -14,12 +14,116 @@ Constants are placed in a read-only segment appended after the data image;
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.flexibits import isa
+
+# Canonical RV32E register display names, indexed by register number.
+REG_NAMES = ("zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2",
+             "s0", "s1", "a0", "a1", "a2", "a3", "a4", "a5")
+
+# A decoded instruction word in *canonical operand form*: the exact
+# (name, rd, rs1, rs2, imm) tuple that `isa.encode` accepts, chosen so
+# `isa.encode(*d) == word` for every decodable word (register fields not
+# used by the format are zeroed; immediates are sign-extended the way the
+# steppers see them; shift immediates are the 5-bit shamt).
+Decoded = collections.namedtuple("Decoded", "name rd rs1 rs2 imm")
+
+_R_BY_KEY = {(f3, f7): n for n, (_, f3, f7) in isa.R_OPS.items()}
+_SHIFT_BY_KEY = {(f3, f7): n for n, (_, f3, f7) in isa.SHIFT_OPS.items()}
+_I_BY_KEY = {(op, f3): n for n, (op, f3) in isa.I_OPS.items()}
+_S_BY_F3 = {f3: n for n, (_, f3) in isa.S_OPS.items()}
+_B_BY_F3 = {f3: n for n, (_, f3) in isa.B_OPS.items()}
+_LOAD_NAMES = frozenset(("lb", "lh", "lw", "lbu", "lhu"))
+
+
+def _sx(v: int, bits: int) -> int:
+    v &= (1 << bits) - 1
+    return v - (1 << bits) if v >= (1 << (bits - 1)) else v
+
+
+def decode(word: int) -> Optional[Decoded]:
+    """Word -> canonical `Decoded`, or None for words outside the ISA
+    (unknown opcode, non-canonical funct3/funct7). Round-trip property:
+    `isa.encode(*decode(w)) == w` whenever decode(w) is not None."""
+    w = int(word) & 0xFFFFFFFF
+    op = w & 0x7F
+    rd = (w >> 7) & 0x1F
+    f3 = (w >> 12) & 0x7
+    rs1 = (w >> 15) & 0x1F
+    rs2 = (w >> 20) & 0x1F
+    f7 = (w >> 25) & 0x7F
+    if op == isa.OP_REG:
+        name = _R_BY_KEY.get((f3, f7))
+        return None if name is None else Decoded(name, rd, rs1, rs2, 0)
+    if op == isa.OP_IMM and f3 in (1, 5):
+        name = _SHIFT_BY_KEY.get((f3, f7))
+        # shamt lives in the rs2 field
+        return None if name is None else Decoded(name, rd, rs1, 0, rs2)
+    if op in (isa.OP_IMM, isa.OP_JALR, isa.OP_LOAD):
+        name = _I_BY_KEY.get((op, f3))
+        return None if name is None \
+            else Decoded(name, rd, rs1, 0, _sx(w >> 20, 12))
+    if op == isa.OP_STORE:
+        name = _S_BY_F3.get(f3)
+        return None if name is None \
+            else Decoded(name, 0, rs1, rs2, _sx(((w >> 25) << 5) | rd, 12))
+    if op == isa.OP_BRANCH:
+        name = _B_BY_F3.get(f3)
+        if name is None:
+            return None
+        imm = _sx((((w >> 31) & 1) << 12) | (((w >> 7) & 1) << 11)
+                  | (((w >> 25) & 0x3F) << 5) | (((w >> 8) & 0xF) << 1), 13)
+        return Decoded(name, 0, rs1, rs2, imm)
+    if op == isa.OP_LUI:
+        return Decoded("lui", rd, 0, 0, (w >> 12) & 0xFFFFF)
+    if op == isa.OP_AUIPC:
+        return Decoded("auipc", rd, 0, 0, (w >> 12) & 0xFFFFF)
+    if op == isa.OP_JAL:
+        imm = _sx((((w >> 31) & 1) << 20) | (((w >> 12) & 0xFF) << 12)
+                  | (((w >> 20) & 1) << 11) | (((w >> 21) & 0x3FF) << 1), 21)
+        return Decoded("jal", rd, 0, 0, imm)
+    if op == isa.OP_SYSTEM:
+        if w == isa.encode("ecall"):
+            return Decoded("ecall", 0, 0, 0, 0)
+        if w == isa.encode("ebreak"):
+            return Decoded("ebreak", 0, 0, 0, 0)
+        return None
+    return None
+
+
+def _reg(r: int) -> str:
+    return REG_NAMES[r] if r < len(REG_NAMES) else f"x{r}"
+
+
+def disasm(word: int) -> str:
+    """Word -> one-line mnemonic/operand string (FlexiLint diagnostics,
+    PyISS trace dumps). Undecodable words render as `.word 0x........`."""
+    d = decode(word)
+    if d is None:
+        return f".word 0x{int(word) & 0xFFFFFFFF:08x}"
+    n = d.name
+    if n in isa.R_OPS:
+        return f"{n} {_reg(d.rd)}, {_reg(d.rs1)}, {_reg(d.rs2)}"
+    if n in isa.SHIFT_OPS:
+        return f"{n} {_reg(d.rd)}, {_reg(d.rs1)}, {d.imm}"
+    if n in _LOAD_NAMES or n == "jalr":
+        return f"{n} {_reg(d.rd)}, {d.imm}({_reg(d.rs1)})"
+    if n in isa.I_OPS:
+        return f"{n} {_reg(d.rd)}, {_reg(d.rs1)}, {d.imm}"
+    if n in isa.S_OPS:
+        return f"{n} {_reg(d.rs2)}, {d.imm}({_reg(d.rs1)})"
+    if n in isa.B_OPS:
+        return f"{n} {_reg(d.rs1)}, {_reg(d.rs2)}, pc{d.imm:+d}"
+    if n in ("lui", "auipc"):
+        return f"{n} {_reg(d.rd)}, 0x{d.imm:05x}"
+    if n == "jal":
+        return f"jal {_reg(d.rd)}, pc{d.imm:+d}"
+    return n                                    # ecall / ebreak
 
 
 @dataclasses.dataclass
@@ -30,6 +134,9 @@ class Program:
     ro_words: np.ndarray        # int32 read-only constant words
     vm_reserved: int            # bytes of RAM reserved (inputs+globals)
     labels: Dict[str, int]
+    # word index of a loop header -> max executions of that header per
+    # program entry (FlexiLint WCET annotations, DESIGN.md §9.11)
+    loop_bounds: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def nvm_bytes(self) -> int:
@@ -53,6 +160,16 @@ class Asm:
         self._consts: List[int] = []
         self._vm_reserved = vm_reserved
         self._uniq = 0
+        self._loop_bounds: Dict[str, int] = {}   # label -> max executions
+
+    def loop_bound(self, label: str, max_iters: int):
+        """Annotate `label` (a loop header) with its maximum number of
+        executions per program entry. FlexiLint uses these bounds for
+        loops whose trip count it cannot infer from counter idioms
+        (DESIGN.md §9.11); unannotated uninferable loops make the WCET
+        unbounded."""
+        assert max_iters >= 1, max_iters
+        self._loop_bounds[label] = int(max_iters)
 
     # ---- registers by ABI name
     def __getattr__(self, item):
@@ -213,6 +330,8 @@ class Asm:
         loop = "__mul_loop"
         done = "__mul_done"
         skip = "__mul_skip"
+        # 32 multiplier bits + the final zero-test pass
+        self.loop_bound(loop, 33)
         self.label(loop)
         self.beq(self.t1, self.zero, done)
         self.andi(self.t2, self.t1, 1)
@@ -274,6 +393,9 @@ class Asm:
                 raise ValueError(f"addi imm out of range at {i}: {imm}")
             code.append(isa.encode(name, rd, rs1, rs2, imm))
             names.append(name)
+        loop_bounds = {final_labels[lbl]: b
+                       for lbl, b in self._loop_bounds.items()
+                       if lbl in final_labels}
         return Program(
             code=np.asarray(code, np.uint32),
             names=names,
@@ -281,4 +403,5 @@ class Asm:
             ro_words=np.asarray(self._consts, np.int32),
             vm_reserved=self._vm_reserved,
             labels=final_labels,
+            loop_bounds=loop_bounds,
         )

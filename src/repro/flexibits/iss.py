@@ -605,13 +605,23 @@ def timing_ticks(cost, two_stage, mix_idx, taken, shamt, subword):
             + subword.astype(I32) * cost[..., SUBWORD_IDX])
 
 
-def opcode_subset(code) -> frozenset:
+def opcode_subset(code, reachable_only: bool = False) -> frozenset:
     """Static host-side decode: the opcode classes present in a program.
 
     Only opcodes that appear in the program text can ever retire (the pc
     always fetches from `code`), so this is a sound per-workload ISA
     subset for `step_branchless`/`step_lanes`.
+
+    `reachable_only=True` tightens the set to opcodes of CFG-reachable
+    words via FlexiLint (DESIGN.md §9.11): dead code never retires
+    *live* — halted lanes keep fetching the word after their ecall, but
+    every commit (and tick tally) is `live`-masked, so dropping
+    unreachable opcode classes stays bit-exact. Falls back to the text
+    subset when the CFG degrades (indirect jumps etc.).
     """
+    if reachable_only:
+        from repro.flexibits import analyze
+        return analyze.analyze_code(code, mem_words=1).subset
     words = np.asarray(code)
     words = words.view(np.uint32) if words.dtype.itemsize == 4 \
         else words.astype(np.uint32)

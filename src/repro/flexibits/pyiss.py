@@ -23,6 +23,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.flexibits import isa
+from repro.flexibits.asm import disasm
 from repro.flexibits.cycles import (MIX_CLASSES, N_COST, SHIFT_IDX,
                                     SUBWORD_IDX, TAKEN_IDX)
 
@@ -47,7 +48,8 @@ def _s32(v: int) -> int:
 class PyISS:
     def __init__(self, code: np.ndarray, mem_words: int = 4096,
                  init_mem: Optional[np.ndarray] = None,
-                 cost: Optional[np.ndarray] = None):
+                 cost: Optional[np.ndarray] = None,
+                 trace_len: int = 0):
         self.code = np.asarray(code, np.uint32)
         self.mem = np.zeros(mem_words, np.int64)
         if init_mem is not None:
@@ -62,6 +64,12 @@ class PyISS:
         self.events = np.zeros(N_COST, np.int64)
         self.cost = None if cost is None else np.asarray(cost, np.int64)
         self.n_cycles = 0
+        # FlexiLint cross-validation (DESIGN.md §9.11): every retired
+        # word index, plus an optional ring of the last `trace_len`
+        # (pc, word) pairs for disassembled trace dumps
+        self.visited: set = set()
+        self._trace_len = int(trace_len)
+        self.trace: list = []
 
     def _widx(self, addr: int) -> int:
         # the steppers' word index: uint32 address reinterpreted int32,
@@ -92,8 +100,19 @@ class PyISS:
         w = (w & ~mask) | ((_u32(val) << sh) & mask)
         self._store_word(addr & ~3, w)
 
+    def format_trace(self) -> str:
+        """Disassembled dump of the retired-instruction ring (requires
+        trace_len > 0 at construction)."""
+        return "\n".join(f"pc={pc:#07x} word {pc >> 2:4d}: {disasm(w)}"
+                         for pc, w in self.trace)
+
     def step(self):
+        self.visited.add(self.pc >> 2)
         instr = int(self.code[self.pc >> 2])
+        if self._trace_len:
+            self.trace.append((self.pc, instr))
+            if len(self.trace) > self._trace_len:
+                del self.trace[0]
         op = instr & 0x7F
         rd = (instr >> 7) & 0x1F
         f3 = (instr >> 12) & 0x7

@@ -240,7 +240,12 @@ def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
     (n_progs, N_COST) rows, like `mem_len`) turns on the per-lane cycle
     tally — None keeps the timing layer out of the kernel entirely (a
     dummy zero bank holds the spec list static). `subset` must cover
-    the union of the bank's opcode subsets. State buffers are aliased
+    the union of the bank's opcode subsets — either the text-derived
+    `iss.opcode_subset` per program, or FlexiLint's tighter
+    reachable-only subsets (`analyze.Analysis.subset`, DESIGN.md §9.11):
+    unreachable words are fetched at most by halted lanes, whose commits
+    and tick tallies this kernel `live`-masks exactly like
+    `step_branchless`, so the DCE stays bit-exact. State buffers are aliased
     input->output; `prog_id`/`max_steps` are segment constants and pass
     through untouched.
     """

@@ -1,0 +1,1 @@
+"""Command-line tools built on the repro package (DESIGN.md §9.11)."""

@@ -30,7 +30,7 @@ def bench():
 def test_bench_has_all_studies(bench):
     for key in ("streaming_vs_monolithic", "stepper_ab", "fusion_proof",
                 "packed_vs_sequential", "resident_vs_host_refill",
-                "timing_overhead"):
+                "timing_overhead", "flexilint"):
         assert key in bench, f"BENCH_fleet.json lost the {key} study"
 
 
@@ -69,6 +69,25 @@ def test_timing_overhead_invariant(bench):
     assert to["bit_exact"] is True
     assert float(to["overhead_ratio"]) <= 1.5, to["overhead_ratio"]
     assert float(to["mean_cycles_per_item"]) > 0
+
+
+def test_flexilint_invariant(bench):
+    """§9.11: every FlexiBench workload must analyze with zero lint
+    errors and a finite WCET, and the recorded certificate must
+    dominate the PyISS-measured ticks (WCET/measured >= 1 — below 1 is
+    a soundness bug, not a perf regression)."""
+    fl = bench["flexilint"]
+    per = fl["per_workload"]
+    assert len(per) == 11, sorted(per)
+    assert int(fl["total_errors"]) == 0
+    assert fl["all_bounded"] is True
+    for key, p in per.items():
+        assert float(p["analysis_wall_ms"]) > 0, key
+        assert p["wcet_ticks"] is not None, key
+        assert int(p["measured_max_ticks"]) > 0, key
+        assert float(p["wcet_over_measured"]) >= 1.0, (
+            key, p["wcet_over_measured"])
+        assert int(p["min_steps"]) <= int(p["wcet_steps"]), key
 
 
 def test_resident_runtime_invariant(bench):

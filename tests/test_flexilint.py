@@ -1,0 +1,448 @@
+"""FlexiLint soundness and integration tests (DESIGN.md §9.11).
+
+The static analyzer's claims are certificates, so every one is pinned
+against ground truth: decode/disasm round-trips through every ISA
+entry, the CFG/dataflow/bounds passes are exercised on hand-built
+programs with known defects, and the PyISS oracle cross-validates the
+whole pipeline — on all 11 FlexiBench workloads and on random
+instruction soups, every retired word must lie in the static reachable
+set, every retired mnemonic in the static subset, and measured
+steps/ticks must sit inside the [min_steps, WCET] envelope.
+
+Engine integration: the analyzer's reachable-only opcode subsets must
+leave every stepper bit-exact with the text-derived subsets, budget
+validation must reject provably-insufficient `max_steps`, and the
+fleet report's certified worst-case cycles must dominate the measured
+means.
+
+`hypothesis` is optional (as in test_flexibits.py): without it the
+soup property test falls back to a deterministic seed sweep.
+"""
+import numpy as np
+import pytest
+
+from repro.core import carbon
+from repro.flexibench.base import all_workloads, get
+from repro.flexibits import analyze, asm, isa, iss
+from repro.flexibits.asm import Asm, decode, disasm
+from repro.flexibits.cycles import CORES, TICKS_PER_CYCLE, cost_row
+from repro.flexibits.pyiss import PyISS
+from repro.fleet.plan import BudgetError, FleetGroup, FleetPlan, run_plan
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+COST = cost_row(CORES["SERV"], dynamic=True)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: decode/disasm round-trip over the whole ISA
+
+def _operand_sweep(name, rng):
+    """A handful of legal operand tuples (rd, rs1, rs2, imm) for `name`."""
+    out = []
+    for _ in range(8):
+        rd = int(rng.integers(0, 32))
+        rs1 = int(rng.integers(0, 32))
+        rs2 = int(rng.integers(0, 32))
+        if name in isa.R_OPS:
+            out.append((rd, rs1, rs2, 0))
+        elif name in isa.SHIFT_OPS:
+            out.append((rd, rs1, 0, int(rng.integers(0, 32))))
+        elif name in isa.I_OPS:
+            out.append((rd, rs1, 0, int(rng.integers(-2048, 2048))))
+        elif name in isa.S_OPS:
+            out.append((0, rs1, rs2, int(rng.integers(-2048, 2048))))
+        elif name in isa.B_OPS:
+            out.append((0, rs1, rs2, int(rng.integers(-2048, 2048)) * 2))
+        elif name in ("lui", "auipc"):
+            out.append((rd, 0, 0, int(rng.integers(0, 1 << 20))))
+        elif name == "jal":
+            out.append((rd, 0, 0, int(rng.integers(-(1 << 19),
+                                                   1 << 19)) * 2))
+        else:                                   # ecall / ebreak
+            out.append((0, 0, 0, 0))
+    return out
+
+
+def test_decode_roundtrip_every_isa_entry():
+    rng = np.random.default_rng(0)
+    for name in isa.ALL_OPS:
+        for rd, rs1, rs2, imm in _operand_sweep(name, rng):
+            word = isa.encode(name, rd, rs1, rs2, imm)
+            d = decode(word)
+            assert d is not None, (name, hex(word))
+            assert d.name == name
+            assert isa.encode(d.name, d.rd, d.rs1, d.rs2, d.imm) == word
+            text = disasm(word)
+            assert not text.startswith(".word"), (name, text)
+            assert name in text
+
+
+def test_decode_rejects_garbage():
+    assert decode(0) is None
+    assert decode(0xFFFFFFFF) is None
+    assert disasm(0).startswith(".word")
+    # SYSTEM words other than the two exact halt encodings are data
+    assert decode((2 << 20) | isa.OP_SYSTEM) is None
+
+
+def test_disasm_spot_checks():
+    assert disasm(isa.encode("addi", 10, 0, 0, 5)) == "addi a0, zero, 5"
+    assert disasm(isa.encode("lw", 6, 2, 0, 8)) == "lw t1, 8(sp)"
+    assert disasm(isa.encode("sw", 0, 2, 6, -4)) == "sw t1, -4(sp)"
+    assert disasm(isa.encode("ecall")) == "ecall"
+    b = disasm(isa.encode("beq", 0, 5, 5, -8))
+    assert b.startswith("beq") and "pc-8" in b
+
+
+def test_pyiss_trace_dump():
+    a = Asm()
+    a.li(a.t0, 7)
+    a.halt()
+    prog = a.assemble()
+    sim = PyISS(prog.code, mem_words=16, trace_len=4)
+    sim.run(max_steps=10)
+    dump = sim.format_trace()
+    assert "addi t0, zero, 7" in dump and "ecall" in dump
+
+
+# ---------------------------------------------------------------------------
+# dataflow / CFG units on hand-built programs
+
+def _codes(a):
+    return [d.code for d in a.diags]
+
+
+def test_read_before_write_error():
+    a = Asm()
+    a.add(a.t1, a.t2, a.a0)     # t2/a0 never written
+    a.halt()
+    res = analyze.analyze_program(a.assemble(), mem_words=16)
+    assert "read-before-write" in _codes(res)
+    assert res.errors
+
+
+def test_zero_init_regs_are_defined():
+    # the cores zero-init the file, so reading x0 or any reg the
+    # analyzer proves written is clean
+    a = Asm()
+    a.addi(a.t0, a.zero, 3)
+    a.add(a.t1, a.t0, a.t0)
+    a.halt()
+    res = analyze.analyze_program(a.assemble(), mem_words=16)
+    assert not res.errors
+
+
+def test_dead_store_warning():
+    a = Asm()
+    a.li(a.t0, 1)
+    a.li(a.t0, 2)               # first li is dead
+    a.sw(a.t0, a.zero, 0)
+    a.halt()
+    res = analyze.analyze_program(a.assemble(), mem_words=16)
+    assert "dead-store" in _codes(res)
+
+
+def test_unreachable_code_warning():
+    a = Asm()
+    end = a.uniq()
+    a.j(end)
+    a.li(a.t0, 1)               # skipped forever
+    a.label(end)
+    a.halt()
+    res = analyze.analyze_program(a.assemble(), mem_words=16)
+    assert "unreachable-code" in _codes(res)
+    assert 1 not in res.reachable
+
+
+def test_unreachable_halt_error():
+    a = Asm()
+    loop = a.uniq()
+    a.label(loop)
+    a.j(loop)                   # spins forever, ecall unreachable
+    a.halt()
+    res = analyze.analyze_program(a.assemble(), mem_words=16)
+    assert "unreachable-halt" in _codes(res)
+    assert res.min_steps is None
+
+
+def test_oob_store_error_and_proved_store_silent():
+    a = Asm()
+    a.li(a.t0, 1)
+    a.sw(a.t0, a.zero, 400)     # mem is 16 words = 64 bytes
+    a.halt()
+    res = analyze.analyze_program(a.assemble(), mem_words=16)
+    assert "oob-access" in _codes(res)
+
+    b = Asm()
+    b.li(b.t0, 1)
+    b.sw(b.t0, b.zero, 8)       # provably inside
+    b.halt()
+    res2 = analyze.analyze_program(b.assemble(), mem_words=16)
+    assert "oob-access" not in _codes(res2)
+    assert "runtime-clamped" not in _codes(res2)
+
+
+def test_unknown_address_is_runtime_clamped_info():
+    a = Asm()
+    a.lw(a.t0, a.zero, 0)       # loads unknown data
+    a.lw(a.t1, a.t0, 0)         # address not affine in constants
+    a.halt()
+    res = analyze.analyze_program(a.assemble(), mem_words=16)
+    assert "runtime-clamped" in _codes(res)
+    assert not res.errors
+
+
+def test_indirect_jalr_degrades_to_overapproximation():
+    a = Asm()
+    a.li(a.t0, 8)
+    a.jalr(a.zero, a.t0, 0)     # computed jump, not a ret
+    a.halt()
+    res = analyze.analyze_program(a.assemble(), mem_words=16)
+    assert res.degraded is not None
+    assert res.reachable == frozenset(range(res.n_words))
+    assert res.subset == iss.opcode_subset(res.code)
+    assert res.wcet_steps is None
+    # budget-only tick bound still exists
+    assert res.bound_ticks(COST, max_steps=10) == \
+        10 * res.max_instr_ticks(COST)
+
+
+# ---------------------------------------------------------------------------
+# WCET: a counted loop where the bound is exact
+
+def _counted_loop(n):
+    a = Asm()
+    loop = a.uniq()
+    a.li(a.t0, 0)
+    a.li(a.t1, n)
+    a.label(loop)
+    a.addi(a.t0, a.t0, 1)
+    a.blt(a.t0, a.t1, loop)
+    a.halt()
+    return a.assemble()
+
+
+def test_counted_loop_wcet_is_exact():
+    prog = _counted_loop(10)
+    res = analyze.analyze_program(prog, mem_words=16)
+    assert not res.errors and res.degraded is None
+    # counter idiom inferred without annotation
+    assert res.loop_headers and list(res.loop_headers.values()) == [10]
+    sim = PyISS(prog.code, mem_words=16).run()
+    assert sim.halted
+    assert res.wcet_steps == sim.n_instr == 23   # 2 + 10*2 + 1
+    assert res.min_steps <= sim.n_instr
+    # tick bound: loose only by the final not-taken branch
+    assert sim.ticks(COST) <= res.wcet_ticks(COST)
+
+
+def test_loop_bound_annotation_overrides_inference():
+    a = Asm()
+    loop = a.uniq()
+    a.li(a.t0, 0)
+    a.lw(a.t1, a.zero, 0)       # data-dependent trip count
+    a.loop_bound(loop, 5)
+    a.label(loop)
+    a.addi(a.t0, a.t0, 1)
+    a.blt(a.t0, a.t1, loop)
+    a.halt()
+    res = analyze.analyze_program(a.assemble(), mem_words=16)
+    assert res.degraded is None
+    assert 5 in res.loop_headers.values()
+    assert res.wcet_steps == 3 + 5 * 2    # li+lw + 5*(addi+blt) ... + ecall
+    # (3 entry words include the ecall: 2 setup + 5*2 body + 1 halt)
+
+
+def test_unannotated_data_loop_is_unbounded():
+    a = Asm()
+    loop = a.uniq()
+    a.li(a.t0, 0)
+    a.lw(a.t1, a.zero, 0)
+    a.label(loop)
+    a.addi(a.t0, a.t0, 1)
+    a.blt(a.t0, a.t1, loop)
+    a.halt()
+    res = analyze.analyze_program(a.assemble(), mem_words=16)
+    assert "unbounded-loop" in _codes(res)
+    assert res.wcet_steps is None
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: analyzer soundness vs the PyISS oracle
+
+@pytest.mark.parametrize("w", all_workloads(), ids=lambda w: w.key)
+def test_workload_soundness(w):
+    a = analyze.analyze_workload(w)
+    assert a.degraded is None, (w.key, a.degraded)
+    assert not a.errors, [d.format(a.code) for d in a.errors]
+    assert a.wcet_steps is not None and a.min_steps is not None
+    wcet_t = a.wcet_ticks(COST)
+    assert wcet_t is not None
+    rng = np.random.default_rng(0)
+    for x in w.gen_inputs(rng, 2):
+        sim = PyISS(w.program.code, mem_words=w.total_mem_words,
+                    init_mem=w.initial_memory(x))
+        sim.run(max_steps=w.max_steps)
+        assert sim.halted
+        assert sim.visited <= a.reachable, \
+            sorted(sim.visited - a.reachable)
+        assert set(sim.mix) <= a.reachable_names
+        assert a.min_steps <= sim.n_instr <= a.wcet_steps
+        assert sim.ticks(COST) <= wcet_t
+
+
+def test_workload_lint_is_clean_except_documented():
+    """The only warning across FlexiBench is SI's known dead store at
+    word 16 (`add t1,t1,s0` whose value the next iteration recomputes)
+    — kept in the source as FlexiLint's demo finding (README)."""
+    for w in all_workloads():
+        a = analyze.analyze_workload(w)
+        if w.key == "SI":
+            assert [(d.code, d.word) for d in a.warnings] == \
+                [("dead-store", 16)]
+        else:
+            assert not a.warnings, (w.key, [d.code for d in a.warnings])
+
+
+def test_workload_static_subset_within_text_subset():
+    for w in all_workloads():
+        static = iss.opcode_subset(w.program.code, reachable_only=True)
+        text = iss.opcode_subset(w.program.code)
+        assert static <= text, w.key
+
+
+def _soup_soundness(seed):
+    """One random-soup soundness trial: build a soup of valid words,
+    analyze, and check PyISS containment whenever the CFG is exact."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 24))
+    names = [name for name in isa.ALL_OPS if name != "ebreak"]
+    words = []
+    for i in range(n):
+        name = names[int(rng.integers(0, len(names)))]
+        rd, rs1, rs2, imm = _operand_sweep(name, rng)[0]
+        if name in isa.B_OPS or name == "jal":
+            imm = int(rng.integers(-n, n)) * 4
+        if name in isa.S_OPS or name in ("lw", "lh", "lb", "lhu", "lbu"):
+            rs1, imm = 0, int(rng.integers(0, 64)) * 4
+        words.append(isa.encode(name, rd, rs1, rs2, imm))
+    words.append(isa.encode("ecall"))
+    code = np.array(words, np.uint32)
+    a = analyze.analyze_code(code, mem_words=64)
+    if a.degraded is not None:
+        # over-approximation contract: everything reachable, subset
+        # falls back to the text scan
+        assert a.reachable == frozenset(range(len(code)))
+        assert a.subset == iss.opcode_subset(code)
+        return
+    sim = PyISS(code, mem_words=64)
+    sim.run(max_steps=2000)
+    assert sim.visited <= a.reachable, seed
+    assert set(sim.mix) <= a.reachable_names, seed
+    if sim.halted:
+        if a.min_steps is not None:
+            assert sim.n_instr >= a.min_steps, seed
+        if a.wcet_steps is not None:
+            assert sim.n_instr <= a.wcet_steps, seed
+            assert sim.ticks(COST) <= a.wcet_ticks(COST), seed
+
+
+if HAVE_HYPOTHESIS:
+    @hypothesis.given(st.integers(0, 2 ** 31 - 1))
+    @hypothesis.settings(max_examples=60, deadline=None)
+    def test_soup_soundness(seed):
+        _soup_soundness(seed)
+else:
+    @pytest.mark.parametrize("seed", range(60))
+    def test_soup_soundness(seed):
+        _soup_soundness(seed)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2 + engine integration
+
+def _mini_plan(**kw):
+    return FleetPlan(groups=[FleetGroup("WQ", n_items=16),
+                             FleetGroup("MC", n_items=16)],
+                     chunk=16, seg_steps=128, **kw)
+
+
+def test_static_subsets_bit_exact_with_text():
+    ra = run_plan(_mini_plan(subset_source="text", timing="dynamic"))
+    rb = run_plan(_mini_plan(subset_source="static", timing="dynamic"))
+    for ga, gb in zip(ra.groups, rb.groups):
+        np.testing.assert_array_equal(ga.result.out, gb.result.out)
+        np.testing.assert_array_equal(ga.result.n_instr, gb.result.n_instr)
+        np.testing.assert_array_equal(ga.result.n_cycles,
+                                      gb.result.n_cycles)
+
+
+def test_budget_error_names_program_and_bounds():
+    plan = FleetPlan(groups=[FleetGroup("HC", n_items=8, max_steps=100)],
+                     chunk=8, seg_steps=64)
+    with pytest.raises(BudgetError) as ei:
+        run_plan(plan)
+    e = ei.value
+    assert e.name == "HC" and e.budget == 100
+    assert e.min_steps == analyze.analyze_workload(get("HC")).min_steps
+    assert "HC" in str(e) and "100" in str(e)
+
+
+def test_budget_validation_can_be_disabled():
+    plan = FleetPlan(groups=[FleetGroup("WQ", n_items=8, max_steps=2)],
+                     chunk=8, seg_steps=64, validate_budgets=False)
+    rep = run_plan(plan)
+    assert not rep.groups[0].result.halted.any()
+
+
+def test_static_max_steps_budget():
+    a = analyze.analyze_workload(get("MC"))
+    plan = FleetPlan(groups=[FleetGroup("MC", n_items=16,
+                                        max_steps="static")],
+                     chunk=16, seg_steps=128)
+    rep = run_plan(plan)
+    g = rep.groups[0]
+    assert g.result.halted.all()     # WCET budget is proved sufficient
+    ref = run_plan(FleetPlan(groups=[FleetGroup("MC", n_items=16)],
+                             chunk=16, seg_steps=128))
+    np.testing.assert_array_equal(g.result.out, ref.groups[0].result.out)
+    assert plan.groups[0].resolve_max_steps(get("MC"), a) == a.wcet_steps
+
+
+def test_report_carries_certificates():
+    rep = run_plan(_mini_plan(timing="dynamic"))
+    for g in rep.groups:
+        assert g.wcet_cycles is not None
+        assert g.measured_cycles is not None
+        assert g.measured_cycles <= g.wcet_cycles
+        assert g.wcet_ratio >= 1.0
+        assert g.certified_energy_j == pytest.approx(
+            carbon.certified_energy_j(g.core, g.profile, 10_000.0,
+                                      g.wcet_cycles))
+        assert g.certified_energy_j >= g.energy_j_per_exec
+        assert g.certified_operational_kg >= g.operational_kg
+    text = rep.format()
+    assert "wcet-cyc" in text and "certified (FlexiLint" in text
+
+
+def test_certified_cycles_match_bound_ticks():
+    w = get("WQ")
+    a = analyze.analyze_workload(w)
+    rep = run_plan(FleetPlan(groups=[FleetGroup("WQ", n_items=8)],
+                             chunk=8, seg_steps=64))
+    want = a.bound_ticks(COST, w.max_steps) / TICKS_PER_CYCLE
+    assert rep.groups[0].wcet_cycles == pytest.approx(want)
+
+
+def test_cli_runs_clean(capsys):
+    from repro.tools.flexilint import main
+    assert main(["WQ", "MC", "--measure", "1"]) == 0
+    out = capsys.readouterr().out
+    assert "FlexiLint: WQ" in out and "wcet-ticks" in out
+    assert "flexilint: 2 program(s) analyzed, ok" in out
