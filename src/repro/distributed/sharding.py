@@ -76,19 +76,26 @@ def bank_specs(mesh: Mesh, tree):
 
 
 def stage_specs(mesh: Mesh, tree):
-    """Staged-refill-buffer layout: replicate every leaf on every device.
+    """Staged-refill-buffer layout: dim 0 — the SHARD axis — over every
+    mesh axis.
 
-    The resident fleet runtime (DESIGN.md §9.9) uploads the next refill
-    batch — item memory images, program rows, budgets, result slots —
-    while the current segment runs, and the on-device refill assigns
-    staged rows to freed lanes by pool-wide rank, so ANY lane on ANY
-    device may consume ANY staged row. The batch is O(chunk) and read
-    once per refill, so replication (like `bank_specs`) keeps the swap
-    collective-free; only the result scatter inside the refill op —
-    which sits OUTSIDE the segment while_loop — pays cross-device
-    traffic under GSPMD.
+    The resident fleet runtime (DESIGN.md §9.9/§9.12) stages each
+    shard's next refill batch as its own slice of a
+    `(n_shards, spc, ...)` buffer: the item->shard partition
+    (`engine.shard_partition`) fixes which shard admits which items, so
+    the on-device refill assigns staged rows to freed lanes by
+    SHARD-LOCAL rank and no lane ever consumes another shard's row.
+    Each device therefore receives only its own `(spc, ...)` slice —
+    staging H2D bytes stay O(chunk) total instead of O(chunk x devices)
+    under the old replicated layout — and both the swap and the result
+    scatter inside the refill op stay collective-free (pinned by
+    tests/test_shard_local.py's HLO audit).
     """
-    return bank_specs(mesh, tree)
+    axes = tuple(mesh.axis_names)
+
+    def one(leaf):
+        return P(axes, *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(one, tree)
 
 
 def stage_shardings(mesh: Mesh, tree):

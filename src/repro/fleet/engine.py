@@ -33,6 +33,19 @@ This engine fixes both (DESIGN.md §9):
   segment's step bound to the observed halt cadence. The PR-4
   host-refill loop survives as `refill="host"` for A/B runs — results
   are bit-exact either way.
+
+- **Shard-local multi-device streaming** (DESIGN.md §9.12). Under a
+  mesh, every device shard owns its lanes, its slice of the staged
+  refill batch, its admission/prefetch cursors, and its own block of
+  `ResidentAcc` rows; retire/refill runs as a per-shard `shard_map`
+  body and the per-segment host read is ONE stacked (n_shards, 3+G)
+  stats vector — the segment loop contains zero cross-device
+  collectives and per-item results are demuxed exactly once at drain.
+  The single-device path is literally the 1-shard special case of the
+  same code. Resident state (lane pool + accumulators + staging
+  cursors) checkpoints mid-flight through `distributed/checkpoint.py`
+  (`checkpoint_dir=`/`checkpoint_every=`) and resumes bit-exactly,
+  including onto a different mesh shape.
 """
 from __future__ import annotations
 
@@ -46,8 +59,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed import checkpoint as dckpt
 from repro.distributed import sharding as dsharding
 from repro.flexibench.base import Workload
 from repro.flexibits import iss
@@ -393,7 +407,13 @@ class PackedStats:
     the host-only intervals where the device queue was observed empty).
     `seg_schedule` records the seg_steps actually used per segment —
     constant for a fixed run, the controller's trace for an adaptive
-    one (pinned deterministic by tests/test_resident.py)."""
+    one (pinned deterministic by tests/test_resident.py).
+
+    The shard-local fields (DESIGN.md §9.12) attribute the run to the
+    mesh: `n_shards` is the lane-pool shard count (1 single-device),
+    and for the resident loop `shard_retired`/`shard_lane_steps` break
+    items retired and lane-step slots down per shard, so a scaling
+    regression is attributable from the stats alone."""
     n_groups: int
     n_progs: int
     bank_width: int
@@ -411,6 +431,9 @@ class PackedStats:
     refill_wall_s: float = 0.0    # host time assembling/staging refills
     device_busy_frac: float = 1.0
     seg_schedule: tuple = ()      # seg_steps used, one entry per segment
+    n_shards: int = 1             # lane-pool shards (§9.12)
+    shard_retired: tuple = ()     # items retired per shard (resident)
+    shard_lane_steps: tuple = ()  # lane-step slots per shard (resident)
 
 
 class _SyncClock:
@@ -600,41 +623,152 @@ def _packed_segment_runner(stepper: str, chunk: int, seg_steps: int,
 
 
 class ResidentAcc(NamedTuple):
-    """On-device result accumulators of the resident runtime (§9.9).
+    """On-device result accumulators of the resident runtime (§9.9),
+    laid out shard-locally (§9.12).
 
-    Per-ITEM scalars are indexed by the item's global result row
-    (`slot_base[group] + item index`), scattered once when the item's
-    lane retires and fetched once at drain — per-item scalar results
-    stay O(fleet) exactly as the host collectors did, they just live on
-    the device until the stream ends. Per-GROUP mix totals accumulate
-    in int32 (sound below 2^31 retired instructions per group per mix
+    Per-ITEM leaves hold `n_shards * cap` rows sharded on dim 0: shard
+    s owns the block `[s*cap, (s+1)*cap)` and scatters ONLY the items
+    it admitted (the host keeps the item->row table, `rowmap`), so the
+    retire scatter never crosses a shard boundary. Rows are scattered
+    once when the item's lane retires and fetched once at drain —
+    per-item scalar results stay O(fleet) exactly as the host
+    collectors did, they just live on the device until the stream ends.
+    Single-device, `cap == total_items` and the row table is the
+    identity — the old layout, unchanged. Per-GROUP mix totals
+    accumulate in int32 per shard (summed over shards on the host at
+    drain; sound below 2^31 retired instructions per group per mix
     class; past that bound — or past the keep_state device-row budget —
     `run_packed` falls back to the host loop, whose collectors are
     int64 in host RAM). `prev_instr` is the per-lane retired-count
-    snapshot at the
-    last refill — the device-side form of the host path's `prev_instr`
-    array, from which each segment's max step delta is measured. The
-    keep_state leaves are None unless full final state was requested.
+    snapshot at the last refill — the device-side form of the host
+    path's `prev_instr` array, from which each segment's max step delta
+    is measured. The keep_state leaves are None unless full final state
+    was requested.
     """
-    n_instr: jax.Array             # (total_items,) i32
-    n_two: jax.Array               # (total_items,) i32
-    n_cycles: jax.Array            # (total_items,) i32 timing ticks
-    halted: jax.Array              # (total_items,) bool
-    out: jax.Array                 # (total_items,) i32
-    mix_g: jax.Array               # (n_groups, 8) i32
+    n_instr: jax.Array             # (n_shards*cap,) i32
+    n_two: jax.Array               # (n_shards*cap,) i32
+    n_cycles: jax.Array            # (n_shards*cap,) i32 timing ticks
+    halted: jax.Array              # (n_shards*cap,) bool
+    out: jax.Array                 # (n_shards*cap,) i32
+    mix_g: jax.Array               # (n_shards, n_groups, 8) i32
     prev_instr: jax.Array          # (chunk,) i32
-    mems: Optional[jax.Array]      # (total_items, mem_words) i32
-    regs: Optional[jax.Array]      # (total_items, 16) i32
-    pc: Optional[jax.Array]        # (total_items,) i32
-    mix_items: Optional[jax.Array]  # (total_items, 8) i32
+    mems: Optional[jax.Array]      # (n_shards*cap, mem_words) i32
+    regs: Optional[jax.Array]      # (n_shards*cap, 16) i32
+    pc: Optional[jax.Array]        # (n_shards*cap,) i32
+    mix_items: Optional[jax.Array]  # (n_shards*cap, 8) i32
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",),
-                   donate_argnums=(0, 1, 2))
-def _refill_resident(state: iss.PackedState, item_slot, acc: ResidentAcc,
-                     staged_mems, staged_prog, staged_ms, staged_slot,
-                     n_staged, out_addr, *, use_pallas: bool):
-    """Retire + refill, entirely on device (DESIGN.md §9.9).
+class InjectedFault(RuntimeError):
+    """Raised by the resident loop's fault-injection knob
+    (`run_packed(..., _crash_after_segments=n)`): the stream dies at
+    the top of a loop iteration, so fault-tolerance tests can kill a
+    run mid-flight at a segment boundary and resume it from its last
+    checkpoint (DESIGN.md §9.12)."""
+
+
+def shard_partition(counts, n_shards: int):
+    """Static item->shard partition of the packed stream (§9.12).
+
+    Returns `spans[g][s]`: a list of `(lo, hi)` half-open item-index
+    ranges of group g owned by shard s — a contiguous balanced split
+    (shard item counts differ by at most one). Each shard admits,
+    stages, and retires ONLY its own items, which is what keeps the
+    resident segment loop collective-free. Per-item results are pure
+    functions of (group, item index), so ANY partition is bit-exact
+    with the single-device stream, and `n_shards=1` degenerates to
+    exactly the old global admission order.
+    """
+    spans = []
+    for c in np.asarray(counts, np.int64):
+        c = int(c)
+        base, rem = divmod(c, n_shards)
+        row, lo = [], 0
+        for s in range(n_shards):
+            k = base + (1 if s < rem else 0)
+            row.append([(lo, lo + k)] if k else [])
+            lo += k
+        spans.append(row)
+    return spans
+
+
+def _span_items(spans) -> np.ndarray:
+    """Flat item-index vector of a span list."""
+    if not spans:
+        return np.zeros(0, np.int64)
+    return np.concatenate([np.arange(lo, hi, dtype=np.int64)
+                           for lo, hi in spans])
+
+
+def _items_to_spans(items):
+    """Compress a sorted item-index vector back into (lo, hi) spans."""
+    items = np.asarray(items, np.int64)
+    if items.size == 0:
+        return []
+    brk = np.nonzero(np.diff(items) != 1)[0]
+    starts = np.concatenate([[0], brk + 1])
+    ends = np.concatenate([brk, [items.size - 1]])
+    return [(int(items[a]), int(items[b]) + 1)
+            for a, b in zip(starts, ends)]
+
+
+def _split_spans(spans, n_shards: int):
+    """Contiguous balanced split of a span list over `n_shards` — the
+    elastic-resume generalization of `shard_partition` (the pending
+    items of a restored stream are re-dealt to the new mesh's shards).
+    """
+    items = _span_items(spans)
+    base, rem = divmod(items.size, n_shards)
+    out, lo = [], 0
+    for s in range(n_shards):
+        k = base + (1 if s < rem else 0)
+        out.append(_items_to_spans(items[lo:lo + k]))
+        lo += k
+    return out
+
+
+def _span_source(source: Source, spans) -> Source:
+    """View of `source` restricted to a span list: linear index i maps
+    to the i-th item of the concatenated spans, fetched from the
+    underlying source in contiguous runs (so per-shard prefetch keeps
+    issuing block-sized reads against block-aligned sources)."""
+    lens = np.array([hi - lo for lo, hi in spans], np.int64)
+    offs = np.concatenate([np.zeros(1, np.int64), np.cumsum(lens)])
+
+    def src(start: int, count: int) -> np.ndarray:
+        parts = []
+        i, end = int(start), int(start) + int(count)
+        while i < end:
+            k = int(np.searchsorted(offs, i, side="right")) - 1
+            take = min(end - i, int(offs[k + 1]) - i)
+            a = spans[k][0] + (i - int(offs[k]))
+            parts.append(np.asarray(source(a, take), np.int32))
+            i += take
+        if not parts:
+            return np.zeros((0, 0), np.int32)
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
+    return src
+
+
+def _abstract_acc(keep_state: bool) -> ResidentAcc:
+    """Rank-only ResidentAcc skeleton (leaf sizes are irrelevant:
+    `lane_specs` maps each leaf by ndim only)."""
+    def z(*shape):
+        return jax.ShapeDtypeStruct(shape, np.int32)
+    return ResidentAcc(
+        n_instr=z(1), n_two=z(1), n_cycles=z(1),
+        halted=jax.ShapeDtypeStruct((1,), np.bool_), out=z(1),
+        mix_g=z(1, 1, 1), prev_instr=z(1),
+        mems=z(1, 1) if keep_state else None,
+        regs=z(1, 1) if keep_state else None,
+        pc=z(1) if keep_state else None,
+        mix_items=z(1, 1) if keep_state else None)
+
+
+@functools.lru_cache(maxsize=None)
+def _resident_refill_runner(mesh: Optional[Mesh], mem_words: int,
+                            n_groups: int, keep_state: bool,
+                            use_pallas: bool):
+    """Compiled retire+refill op, shard-local end to end (§9.9/§9.12).
 
     One donated op replaces the host path's demux->rebuild->device_put
     cycle: finished lanes are detected against their own budgets
@@ -646,61 +780,91 @@ def _refill_resident(state: iss.PackedState, item_slot, acc: ResidentAcc,
     stepper runs single-device). The lane state never leaves the
     device.
 
-    Returns the refreshed (state, item_slot, acc) plus a small int32
-    stats vector — [n_retired, n_consumed, max step delta,
-    active-lanes-per-group...] — describing the segment that just ran;
-    that vector is the ONLY thing the host reads per segment, fetched
-    asynchronously while the next segment executes.
+    The body is written per-shard: staged leaves arrive with a leading
+    shard dim — `(n_shards, spc, ...)` globally, `(1, spc, ...)` inside
+    the shard — `n_staged` is a per-shard `(n_shards,)` vector, and
+    `item_slot`/`staged_slot` carry shard-LOCAL accumulator rows, so
+    the `refill_take` cumsum rank, the retire scatter, and the staged
+    swap all stay inside the shard. Under a mesh the body runs through
+    `shard_map` and the lowered module contains zero cross-device
+    collectives (pinned by tests/test_shard_local.py); single-device it
+    is jitted directly — the identical code at n_shards=1.
+
+    Returns the refreshed (state, item_slot, acc) plus an int32
+    `(n_shards, 3 + n_groups)` stats block — per shard: [n_retired,
+    n_consumed, max step delta, active-lanes-per-group...] — describing
+    the segment that just ran; that ONE stacked vector is all the host
+    reads per segment, fetched asynchronously while the next segment
+    executes.
     """
-    lanes = state.lanes
-    n_groups = out_addr.shape[0]
-    active = item_slot >= 0
-    retired = iss.retire_mask(state, item_slot)
+    def refill(state, item_slot, acc, staged_mems, staged_prog,
+               staged_ms, staged_slot, n_staged, out_addr):
+        lanes = state.lanes
+        active = item_slot >= 0
+        retired = iss.retire_mask(state, item_slot)
 
-    # ---- accounting of the segment that just ran (host-free)
-    delta = jnp.max(lanes.n_instr - acc.prev_instr, initial=0)
-    act_g = jnp.zeros((n_groups,), iss.I32).at[state.prog_id].add(
-        active.astype(iss.I32))
+        # ---- accounting of the segment that just ran (host-free)
+        delta = jnp.max(lanes.n_instr - acc.prev_instr, initial=0)
+        act_g = jnp.zeros((n_groups,), iss.I32).at[state.prog_id].add(
+            active.astype(iss.I32))
 
-    # ---- retire: scatter finished lanes' tallies at their item rows
-    n_total = acc.n_instr.shape[0]
-    slot = jnp.where(retired, item_slot, n_total)   # OOB rows drop
+        # ---- retire: scatter finished lanes' tallies at their
+        # (shard-local) item rows
+        cap = acc.n_instr.shape[0]
+        slot = jnp.where(retired, item_slot, cap)   # OOB rows drop
 
-    def put(buf, val):
-        return None if buf is None else buf.at[slot].set(val, mode="drop")
+        def put(buf, val):
+            return None if buf is None \
+                else buf.at[slot].set(val, mode="drop")
 
-    col = out_addr[state.prog_id]
-    out_val = jnp.take_along_axis(
-        lanes.mem, jnp.clip(col, 0, lanes.mem.shape[1] - 1)[:, None],
-        axis=1)[:, 0]
-    out_val = jnp.where(col >= 0, out_val, 0)
-    acc = acc._replace(
-        n_instr=put(acc.n_instr, lanes.n_instr),
-        n_two=put(acc.n_two, lanes.n_two_stage),
-        n_cycles=put(acc.n_cycles, lanes.n_cycles),
-        halted=put(acc.halted, lanes.halted),
-        out=put(acc.out, out_val),
-        mix_g=acc.mix_g.at[state.prog_id].add(
-            jnp.where(retired[:, None], lanes.mix, 0)),
-        mems=put(acc.mems, lanes.mem),
-        regs=put(acc.regs, lanes.regs),
-        pc=put(acc.pc, lanes.pc),
-        mix_items=put(acc.mix_items, lanes.mix))
+        col = out_addr[state.prog_id]
+        out_val = jnp.take_along_axis(
+            lanes.mem, jnp.clip(col, 0, lanes.mem.shape[1] - 1)[:, None],
+            axis=1)[:, 0]
+        out_val = jnp.where(col >= 0, out_val, 0)
+        acc = acc._replace(
+            n_instr=put(acc.n_instr, lanes.n_instr),
+            n_two=put(acc.n_two, lanes.n_two_stage),
+            n_cycles=put(acc.n_cycles, lanes.n_cycles),
+            halted=put(acc.halted, lanes.halted),
+            out=put(acc.out, out_val),
+            mix_g=acc.mix_g[0].at[state.prog_id].add(
+                jnp.where(retired[:, None], lanes.mix, 0))[None],
+            mems=put(acc.mems, lanes.mem),
+            regs=put(acc.regs, lanes.regs),
+            pc=put(acc.pc, lanes.pc),
+            mix_items=put(acc.mix_items, lanes.mix))
 
-    # ---- refill freed lanes from the staged batch, in lane-rank order
-    free = retired | ~active
-    take, src = iss.refill_take(free, n_staged)
-    swap = iss_stepper.iss_refill if use_pallas else iss.refill_lanes
-    new_state = swap(state, take, src, staged_mems, staged_prog,
-                     staged_ms)
-    new_slot = jnp.where(take, staged_slot[src],
-                         jnp.where(retired, -1, item_slot))
-    acc = acc._replace(prev_instr=jnp.where(take, 0, lanes.n_instr))
-    stats = jnp.concatenate([
-        jnp.stack([retired.sum().astype(iss.I32),
-                   take.sum().astype(iss.I32), delta.astype(iss.I32)]),
-        act_g])
-    return new_state, new_slot, acc, stats
+        # ---- refill freed lanes from this shard's staged batch, in
+        # lane-rank order
+        free = retired | ~active
+        take, src = iss.refill_take(free, n_staged[0])
+        swap = iss_stepper.iss_refill if use_pallas else iss.refill_lanes
+        new_state = swap(state, take, src, staged_mems[0], staged_prog[0],
+                         staged_ms[0])
+        new_slot = jnp.where(take, staged_slot[0][src],
+                             jnp.where(retired, -1, item_slot))
+        acc = acc._replace(prev_instr=jnp.where(take, 0, lanes.n_instr))
+        stats = jnp.concatenate([
+            jnp.stack([retired.sum().astype(iss.I32),
+                       take.sum().astype(iss.I32),
+                       delta.astype(iss.I32)]), act_g])[None]
+        return new_state, new_slot, acc, stats
+
+    if mesh is None:
+        return jax.jit(refill, donate_argnums=(0, 1, 2))
+    axes = tuple(mesh.axis_names)
+    lane = P(axes)
+    state_specs = _packed_state_specs(mesh, mem_words)
+    acc_specs = dsharding.lane_specs(mesh, _abstract_acc(keep_state))
+    st_specs = (P(axes, None, None), P(axes, None), P(axes, None),
+                P(axes, None))
+    fn = shard_map(
+        refill, mesh=mesh,
+        in_specs=(state_specs, lane, acc_specs, *st_specs, lane, P()),
+        out_specs=(state_specs, lane, acc_specs, P(axes, None)),
+        check_rep=False)
+    return jax.jit(fn, donate_argnums=(0, 1, 2))
 
 
 def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
@@ -708,7 +872,10 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
                stepper: str = "branchless",
                subset: Optional[frozenset] = None,
                prefetch: bool = True, refill: str = "device",
-               adaptive: bool = False):
+               adaptive: bool = False,
+               checkpoint_dir: Optional[str] = None,
+               checkpoint_every: int = 0,
+               _crash_after_segments: Optional[int] = None):
     """Execute every `PackedGroup` through ONE packed stream.
 
     Returns `(results, stats)`: `results[g]` is a per-group `FleetResult`
@@ -747,6 +914,18 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
     picked from a bounded power-of-two ladder under `seg_steps` by the
     observed halt cadence — deterministic for a given plan, bit-exact
     with any fixed schedule.
+
+    `checkpoint_dir` makes the resident stream durable (§9.12): every
+    `checkpoint_every` segments the loop writes an atomic, canonical
+    (mesh-independent) snapshot of the resident state — lane pool,
+    accumulated/done results, pending item spans, controller state —
+    through `distributed/checkpoint.py`; when `checkpoint_dir` already
+    holds a checkpoint the run auto-resumes from it, bit-exact with an
+    uninterrupted run, even onto a different mesh shape (the elastic
+    path re-deals surviving lanes and pending spans to the new shards).
+    `_crash_after_segments` is the fault-injection knob used by
+    tests/test_fault_tolerance.py: raise `InjectedFault` once that many
+    segments have retired.
     """
     groups = list(groups)
     if not groups:
@@ -781,6 +960,11 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
         if mix_bound > _RESIDENT_MIX_LIMIT \
                 or ks_words > _RESIDENT_KEEP_STATE_WORDS:
             refill = "host"
+    if checkpoint_dir is not None and refill != "device":
+        raise ValueError(
+            "checkpoint_dir requires the resident loop: refill='device' "
+            "within the resident safety bounds (the host-refill loop "
+            "keeps no durable on-device state)")
     if total_items == 0:
         empty = [FleetResult(
             n_items=0, n_instr=np.zeros(0, np.int64),
@@ -834,19 +1018,30 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
 
     clock = _SyncClock()
     controller = _SuperstepController(seg_steps, chunk, adaptive)
-    loop = _stream_resident if refill == "device" else _stream_host
     t0 = time.perf_counter()
-    prefs = [_Prefetcher(g.source, g.n_items,
-                         block=max(1, min(chunk, g.n_items)),
-                         background=prefetch)
-             for g in groups]
-    try:
-        out = loop(groups, prefs, counts, ms_of, bank, code_len, mem_len,
-                   cost, timing, bank_np, chunk, keep_state, mesh,
-                   stepper, subset, mem_words, controller, clock)
-    finally:
-        for p in prefs:
-            p.close()
+    if refill == "device":
+        # the resident loop owns per-(group, shard) prefetchers — the
+        # item->shard partition decides what each one reads (§9.12)
+        out = _stream_resident(
+            groups, prefetch, counts, ms_of, bank, code_len, mem_len,
+            cost, timing, bank_np, chunk, keep_state, mesh, stepper,
+            subset, mem_words, controller, clock,
+            checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every,
+            crash_after=_crash_after_segments)
+    else:
+        prefs = [_Prefetcher(g.source, g.n_items,
+                             block=max(1, min(chunk, g.n_items)),
+                             background=prefetch)
+                 for g in groups]
+        try:
+            out = _stream_host(groups, prefs, counts, ms_of, bank,
+                               code_len, mem_len, cost, timing, bank_np,
+                               chunk, keep_state, mesh, stepper, subset,
+                               mem_words, controller, clock)
+        finally:
+            for p in prefs:
+                p.close()
 
     wall_s = time.perf_counter() - t0
     busy = np.array([r.sum() for r in out["r_instr"]], np.float64)
@@ -877,7 +1072,12 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
         adaptive=adaptive, host_syncs=clock.host_syncs,
         sync_wait_s=clock.sync_wait_s, refill_wall_s=clock.refill_wall_s,
         device_busy_frac=clock.busy_frac(wall_s),
-        seg_schedule=tuple(controller.schedule[:out["n_segments"]]))
+        seg_schedule=tuple(controller.schedule[:out["n_segments"]]),
+        n_shards=int(out.get("n_shards", n_dev)),
+        shard_retired=tuple(int(x)
+                            for x in out.get("shard_retired", ())),
+        shard_lane_steps=tuple(int(x)
+                               for x in out.get("shard_lane_steps", ())))
     return results, stats
 
 
@@ -1049,83 +1249,235 @@ def _stream_host(groups, prefs, counts, ms_of, bank, code_len, mem_len,
             "lane_steps": lane_steps, "n_segments": n_segments}
 
 
-def _stream_resident(groups, prefs, counts, ms_of, bank, code_len,
+_CKPT_VALS = ("n_instr", "n_two", "n_cycles", "halted", "out")
+_CKPT_KEEP = ("mems", "regs", "pc", "mix_items")
+_CKPT_LANES = ("regs", "pc", "mem", "halted", "n_instr", "n_two",
+               "mix", "n_cycles", "prog", "ms")
+
+
+def _resident_ckpt_skeleton(n_groups: int, keep_state: bool) -> dict:
+    """Flat-dict skeleton of a resident checkpoint — `restore` only
+    needs the key set; shapes come from the stored arrays."""
+    keys = ["counts", "done_mask", "mix_g", "pending", "counters",
+            "ctrl", "sched", "g_lane_steps", "g_segments",
+            "lane_item", "lane_prev"]
+    keys += ["val_" + k for k in _CKPT_VALS]
+    if keep_state:
+        keys += ["val_" + k for k in _CKPT_KEEP]
+    keys += ["lane_" + k for k in _CKPT_LANES]
+    return {k: np.zeros(0, np.int64) for k in keys}
+
+
+def _stream_resident(groups, prefetch, counts, ms_of, bank, code_len,
                      mem_len, cost, timing, bank_np, chunk, keep_state,
                      mesh, stepper, subset, mem_words,
                      controller: _SuperstepController,
-                     clock: _SyncClock):
-    """The resident stream loop (DESIGN.md §9.9, `refill="device"`).
+                     clock: _SyncClock, checkpoint_dir=None,
+                     checkpoint_every: int = 0, crash_after=None):
+    """The resident stream loop (DESIGN.md §9.9, shard-local §9.12,
+    `refill="device"`).
 
     Pipeline per iteration, in device-queue order:
 
         refill_i  — donated on-device op: retire finished lanes into
-                    the `ResidentAcc` rows, swap in staged items
+                    the `ResidentAcc` rows, swap in staged items —
+                    per-shard under a mesh, zero collectives
         seg_i     — the segment, at the controller's step bound
-        (host)    — async-fetch refill_i's stats vector, which blocks
-                    only until refill_i is done — seg_i is already
-                    executing behind it; then restock the staged batch
-                    for refill_{i+1} (prefetcher take + async
-                    device_put), all overlapped with seg_i
+        (host)    — async-fetch refill_i's stacked per-shard stats
+                    block, which blocks only until refill_i is done —
+                    seg_i is already executing behind it; then restock
+                    each shard's staged slice for refill_{i+1}
+                    (per-shard prefetcher take + async device_put), all
+                    overlapped with seg_i
 
-    The host therefore performs exactly ONE small read per segment and
-    the device queue never drains while the stream has backlog. The
-    loop exits after the refill that retires the last item; the final
-    trailing segment dispatch sees an all-parked pool and its
-    while_loop exits without stepping. Per-item results and final
-    state are fetched ONCE, at drain.
+    The host therefore performs exactly ONE small read per segment
+    regardless of the device count, and the device queue never drains
+    while the stream has backlog. The loop exits after the refill that
+    retires the last item; the final trailing segment dispatch sees an
+    all-parked pool and its while_loop exits without stepping. Per-item
+    results and final state are fetched ONCE, at drain, and merged
+    through the host-side item->row table.
     """
     n_groups = len(groups)
     total = int(counts.sum())
+    n_mix = len(iss.MIX_CLASSES)
     slot_base = np.zeros(n_groups, np.int64)
     np.cumsum(counts[:-1], out=slot_base[1:])
     out_addr_np = np.asarray(
         [-1 if g.out_addr is None else g.out_addr for g in groups],
         np.int32)
     # the banked Pallas swap is the single-device fused-stepper path;
-    # under a mesh the (bit-identical) jnp swap partitions with GSPMD
+    # under a mesh the (bit-identical) jnp swap partitions per shard
     use_pallas = stepper == "pallas" and mesh is None
+    n_shards = 1
+    if mesh is not None:
+        n_shards = int(np.prod(list(mesh.shape.values())))
+    spc = chunk // n_shards          # lanes (and staged rows) per shard
 
-    # ---- host mirror of the staged batch (stream order, FIFO)
-    st_mems = np.zeros((chunk, mem_words), np.int32)
-    st_prog = np.zeros(chunk, np.int32)
-    st_ms = np.zeros(chunk, np.int32)
-    st_slot = np.zeros(chunk, np.int32)
-    staged = {"n": 0, "dirty": True, "dev": None}
-    staged_cursor = np.zeros(n_groups, np.int64)
+    # ---- host-side merged results: items finished before a resume
+    # live here and never get device rows again
+    done_mask = np.zeros(total, bool)
+    base = {"n_instr": np.zeros(total, np.int64),
+            "n_two": np.zeros(total, np.int64),
+            "n_cycles": np.zeros(total, np.int64),
+            "halted": np.zeros(total, bool),
+            "out": np.zeros(total, np.int32)}
+    if keep_state:
+        base.update(mems=np.zeros((total, mem_words), np.int32),
+                    regs=np.zeros((total, 16), np.int32),
+                    pc=np.zeros(total, np.int32),
+                    mix_items=np.zeros((total, n_mix), np.int32))
+    mix_base = np.zeros((n_groups, n_mix), np.int64)
+
+    g_lane_steps = np.zeros(n_groups, np.int64)
+    g_segments = np.zeros(n_groups, np.int64)
+    shard_retired = np.zeros(n_shards, np.int64)
+    shard_steps = np.zeros(n_shards, np.int64)
+    lane_steps = 0
+    n_segments = 0
+    prev_seg = 0
+
+    # ---- resume? (canonical checkpoint — independent of the mesh and
+    # chunk it was written under)
+    resume = None
+    if checkpoint_dir is not None \
+            and dckpt.latest_step(checkpoint_dir) is not None:
+        tree, _ = dckpt.restore(
+            checkpoint_dir, _resident_ckpt_skeleton(n_groups, keep_state))
+        resume = {k: np.asarray(v) for k, v in tree.items()}
+        if not np.array_equal(resume["counts"], counts):
+            raise ValueError(
+                f"checkpoint in {checkpoint_dir} was written for group "
+                f"sizes {resume['counts'].tolist()}, plan has "
+                f"{counts.tolist()}")
+        if int(resume["lane_mem"].shape[1]) != mem_words:
+            raise ValueError("checkpoint lane memory width "
+                             f"{resume['lane_mem'].shape[1]} != plan "
+                             f"mem_words {mem_words}")
+        done_mask = resume["done_mask"].astype(bool).copy()
+        for k in base:
+            base[k] = resume["val_" + k].astype(base[k].dtype).copy()
+        mix_base = resume["mix_g"].astype(np.int64).copy()
+        lane_steps = int(resume["counters"][0])
+        n_segments = int(resume["counters"][1])
+        controller.rate = float(resume["ctrl"][0])
+        prev_seg = int(resume["ctrl"][1])
+        controller.schedule = [int(x) for x in resume["sched"]]
+        g_lane_steps = resume["g_lane_steps"].astype(np.int64).copy()
+        g_segments = resume["g_segments"].astype(np.int64).copy()
+    retired = int(done_mask.sum())
+
+    # ---- static item->shard partition (§9.12): pending spans plus the
+    # in-flight lanes a resume deals onto the new shards
+    if resume is None:
+        spans = shard_partition(counts, n_shards)
+        live = np.zeros(0, np.int64)
+        lane_shard = np.zeros(0, np.int64)
+    else:
+        lane_item = resume["lane_item"].astype(np.int64)
+        live = np.nonzero(lane_item >= 0)[0]
+        if live.size > chunk:
+            raise ValueError(
+                f"cannot resume {live.size} in-flight lanes onto a "
+                f"{chunk}-lane pool ({n_shards} shards x {spc})")
+        # contiguous balanced deal of surviving lanes to new shards
+        lane_shard = (np.arange(live.size) * n_shards) // max(
+            live.size, 1)
+        pend = resume["pending"].astype(np.int64).reshape(-1, 3)
+        spans = [_split_spans([(int(lo), int(hi))
+                               for g2, lo, hi in pend if g2 == g],
+                              n_shards) for g in range(n_groups)]
+    infl_items = [resume["lane_item"].astype(np.int64)[
+        live[lane_shard == s]] if resume is not None
+        else np.zeros(0, np.int64) for s in range(n_shards)]
+
+    # ---- shard-local accumulator layout: shard s owns rows
+    # [s*cap, (s+1)*cap); rowmap[global item row] -> acc row
+    pend_n = np.array([[sum(hi - lo for lo, hi in spans[g][s])
+                        for s in range(n_shards)]
+                       for g in range(n_groups)],
+                      np.int64).reshape(n_groups, n_shards)
+    infl_n = np.array([x.size for x in infl_items], np.int64)
+    cap = int(max(int((infl_n + pend_n.sum(0)).max()), 1))
+    rowmap = np.full(total, -1, np.int64)
+    lbase = np.zeros((n_shards, n_groups), np.int64)
+    for s in range(n_shards):
+        rowmap[infl_items[s]] = s * cap + np.arange(infl_n[s])
+        off = int(infl_n[s])
+        for g in range(n_groups):
+            lbase[s, g] = off
+            items = slot_base[g] + _span_items(spans[g][s])
+            rowmap[items] = s * cap + off + np.arange(items.size)
+            off += items.size
+    row_owner = np.full(n_shards * cap, -1, np.int64)
+    have = np.nonzero(rowmap >= 0)[0]
+    row_owner[rowmap[have]] = have
+
+    # ---- per-(group, shard) prefetchers over the pending spans
+    prefs = [[_Prefetcher(_span_source(groups[g].source, spans[g][s]),
+                          int(pend_n[g, s]),
+                          block=max(1, min(spc, int(pend_n[g, s]))),
+                          background=prefetch)
+              for s in range(n_shards)] for g in range(n_groups)]
+
+    # ---- host mirror of the per-shard staged batches (FIFO per shard)
+    st_mems = np.zeros((n_shards, spc, mem_words), np.int32)
+    st_prog = np.zeros((n_shards, spc), np.int32)
+    st_ms = np.zeros((n_shards, spc), np.int32)
+    st_slot = np.zeros((n_shards, spc), np.int32)
+    staged_n = np.zeros(n_shards, np.int64)
+    staged_cursor = np.zeros((n_groups, n_shards), np.int64)
+    staged = {"dirty": True, "dev": None}
     stage_sh = None
     if mesh is not None:
         stage_sh = dsharding.stage_shardings(
             mesh, (st_mems, st_prog, st_ms, st_slot))
 
     def restock():
-        take = _apportion(chunk - staged["n"], counts - staged_cursor)
-        off = staged["n"]
-        for g in np.nonzero(take)[0]:
-            k = int(take[g])
-            st_mems[off:off + k] = 0
-            st_mems[off:off + k, :groups[g].mem_words] = prefs[g].take(k)
-            st_prog[off:off + k] = g
-            st_ms[off:off + k] = ms_of[g]
-            st_slot[off:off + k] = slot_base[g] + np.arange(
-                staged_cursor[g], staged_cursor[g] + k)
-            staged_cursor[g] += k
-            off += k
-        if off != staged["n"]:
-            staged["n"] = off
+        changed = False
+        for s in range(n_shards):
+            free = spc - int(staged_n[s])
+            remaining = pend_n[:, s] - staged_cursor[:, s]
+            if free <= 0 or int(remaining.sum()) == 0:
+                continue
+            take = _apportion(free, remaining)
+            off = int(staged_n[s])
+            for g in np.nonzero(take)[0]:
+                k = int(take[g])
+                st_mems[s, off:off + k] = 0
+                st_mems[s, off:off + k, :groups[g].mem_words] = \
+                    prefs[g][s].take(k)
+                st_prog[s, off:off + k] = g
+                st_ms[s, off:off + k] = ms_of[g]
+                st_slot[s, off:off + k] = lbase[s, g] + np.arange(
+                    staged_cursor[g, s], staged_cursor[g, s] + k)
+                staged_cursor[g, s] += k
+                off += k
+            if off != staged_n[s]:
+                staged_n[s] = off
+                changed = True
+        if changed:
             staged["dirty"] = True
 
-    def consume(k):
-        if k <= 0:
-            return
-        keep = staged["n"] - k
-        for buf in (st_mems, st_prog, st_ms, st_slot):
-            buf[:keep] = buf[k:staged["n"]].copy()
-        staged["n"] = keep
-        staged["dirty"] = True
+    def consume(con):
+        changed = False
+        for s in range(n_shards):
+            k = int(con[s])
+            if k <= 0:
+                continue
+            keep = int(staged_n[s]) - k
+            for buf in (st_mems, st_prog, st_ms, st_slot):
+                buf[s, :keep] = buf[s, k:int(staged_n[s])].copy()
+            staged_n[s] = keep
+            changed = True
+        if changed:
+            staged["dirty"] = True
 
     def upload():
-        """Async-stage the batch to device (device_put returns before
-        the transfer completes, so this overlaps the running segment)."""
+        """Async-stage the batches to device (device_put returns before
+        the transfer completes, so this overlaps the running segment).
+        Each device receives ONLY its own (spc, ...) slice — staging
+        H2D bytes are O(chunk) total, not O(chunk x devices)."""
         if not staged["dirty"] and staged["dev"] is not None:
             return
         arrs = (st_mems.copy(), st_prog.copy(), st_ms.copy(),
@@ -1137,92 +1489,220 @@ def _stream_resident(groups, prefs, counts, ms_of, bank, code_len,
                                   for a, s in zip(arrs, stage_sh))
         staged["dirty"] = False
 
-    # ---- device state: an all-parked pool + result accumulators
-    state = _fresh_packed(np.zeros((chunk, mem_words), np.int32),
-                          np.zeros(chunk, bool),
-                          np.zeros(chunk, np.int32),
-                          np.zeros(chunk, np.int32))
-    item_slot = jnp.full((chunk,), -1, iss.I32)
+    # ---- device state: the lane pool + result accumulators. Fresh
+    # runs start all-parked; a resume re-seats surviving lanes at the
+    # head of their new shard's lane block.
+    regs_l = np.zeros((chunk, 16), np.int32)
+    pc_l = np.zeros(chunk, np.int32)
+    mem_l = np.zeros((chunk, mem_words), np.int32)
+    halted_l = np.ones(chunk, bool)       # parked lanes never step
+    instr_l = np.zeros(chunk, np.int32)
+    two_l = np.zeros(chunk, np.int32)
+    mix_l = np.zeros((chunk, n_mix), np.int32)
+    cyc_l = np.zeros(chunk, np.int32)
+    prog_l = np.zeros(chunk, np.int32)
+    ms_l = np.zeros(chunk, np.int32)
+    slot_l = np.full(chunk, -1, np.int32)
+    prev_l = np.zeros(chunk, np.int32)
+    if resume is not None:
+        for s in range(n_shards):
+            old = live[lane_shard == s]
+            pos = s * spc + np.arange(old.size)
+            regs_l[pos] = resume["lane_regs"][old]
+            pc_l[pos] = resume["lane_pc"][old]
+            mem_l[pos] = resume["lane_mem"][old]
+            halted_l[pos] = resume["lane_halted"][old].astype(bool)
+            instr_l[pos] = resume["lane_n_instr"][old]
+            two_l[pos] = resume["lane_n_two"][old]
+            mix_l[pos] = resume["lane_mix"][old]
+            cyc_l[pos] = resume["lane_n_cycles"][old]
+            prog_l[pos] = resume["lane_prog"][old]
+            ms_l[pos] = resume["lane_ms"][old]
+            slot_l[pos] = np.arange(old.size)   # the in-flight rows
+            prev_l[pos] = resume["lane_prev"][old]
+    state = iss.PackedState(
+        lanes=iss.ISSState(
+            regs=jnp.asarray(regs_l), pc=jnp.asarray(pc_l),
+            mem=jnp.asarray(mem_l), halted=jnp.asarray(halted_l),
+            n_instr=jnp.asarray(instr_l), n_two_stage=jnp.asarray(two_l),
+            mix=jnp.asarray(mix_l), n_cycles=jnp.asarray(cyc_l)),
+        prog_id=jnp.asarray(prog_l), max_steps=jnp.asarray(ms_l))
+    item_slot = jnp.asarray(slot_l, iss.I32)
+    acc = ResidentAcc(
+        n_instr=jnp.zeros(n_shards * cap, iss.I32),
+        n_two=jnp.zeros(n_shards * cap, iss.I32),
+        n_cycles=jnp.zeros(n_shards * cap, iss.I32),
+        halted=jnp.zeros(n_shards * cap, bool),
+        out=jnp.zeros(n_shards * cap, iss.I32),
+        mix_g=jnp.zeros((n_shards, n_groups, n_mix), iss.I32),
+        prev_instr=jnp.asarray(prev_l, iss.I32),
+        mems=jnp.zeros((n_shards * cap, mem_words), iss.I32)
+        if keep_state else None,
+        regs=jnp.zeros((n_shards * cap, 16), iss.I32)
+        if keep_state else None,
+        pc=jnp.zeros(n_shards * cap, iss.I32) if keep_state else None,
+        mix_items=jnp.zeros((n_shards * cap, n_mix), iss.I32)
+        if keep_state else None)
     if mesh is not None:
         state = jax.tree.map(jax.device_put, state,
                              dsharding.lane_shardings(mesh, state))
         item_slot = jax.device_put(
             item_slot, dsharding.lane_shardings(mesh, item_slot))
-    n_mix = len(iss.MIX_CLASSES)
-    acc = ResidentAcc(
-        n_instr=jnp.zeros(total, iss.I32),
-        n_two=jnp.zeros(total, iss.I32),
-        n_cycles=jnp.zeros(total, iss.I32),
-        halted=jnp.zeros(total, bool),
-        out=jnp.zeros(total, iss.I32),
-        mix_g=jnp.zeros((n_groups, n_mix), iss.I32),
-        prev_instr=jnp.zeros(chunk, iss.I32),
-        mems=jnp.zeros((total, mem_words), iss.I32) if keep_state
-        else None,
-        regs=jnp.zeros((total, 16), iss.I32) if keep_state else None,
-        pc=jnp.zeros(total, iss.I32) if keep_state else None,
-        mix_items=jnp.zeros((total, n_mix), iss.I32) if keep_state
-        else None)
+        acc = jax.tree.map(jax.device_put, acc,
+                           dsharding.lane_shardings(mesh, acc))
     out_addr_dev = jnp.asarray(out_addr_np)
+    refill_fn = _resident_refill_runner(mesh, mem_words, n_groups,
+                                        keep_state, use_pallas)
 
-    g_lane_steps = np.zeros(n_groups, np.int64)
-    g_segments = np.zeros(n_groups, np.int64)
-    lane_steps = 0
-    n_segments = 0
-    retired = 0
-    prev_seg = 0
+    def merged_vals(accv):
+        """Per-item results: host `base` where done, else the item's
+        accumulator row through the item->row table."""
+        idx = np.clip(rowmap, 0, None)
+        out = {}
+        for k, b in base.items():
+            v = accv[k][idx].astype(b.dtype)
+            mask = done_mask if b.ndim == 1 else done_mask[:, None]
+            out[k] = np.where(mask, b, v)
+        return out
 
-    restock()
-    while retired < total:
-        upload()
-        state, item_slot, acc, stats = _refill_resident(
-            state, item_slot, acc, *staged["dev"],
-            jnp.asarray(staged["n"], iss.I32), out_addr_dev,
-            use_pallas=use_pallas)
-        seg_steps = controller.next_seg()
-        seg_fn = _packed_segment_runner(stepper, chunk, seg_steps,
-                                        mem_words, n_groups,
-                                        bank_np.shape[1], mesh, subset,
-                                        timing)
-        state = seg_fn(bank, code_len, mem_len, cost, state)
-        if hasattr(stats, "copy_to_host_async"):
-            stats.copy_to_host_async()
-        # blocks until refill_i only — seg_i is already running
-        sv = clock.fetch(stats)
-        n_ret, n_con, delta = int(sv[0]), int(sv[1]), int(sv[2])
-        act = sv[3:].astype(np.int64)
-        if (act > 0).any():
-            n_segments += 1
-            g_segments += act > 0
-            g_lane_steps += act * delta
-            lane_steps += chunk * delta
-        controller.record(n_ret, prev_seg)
-        prev_seg = seg_steps
-        retired += n_ret
-        t_refill = time.perf_counter()
-        consume(n_con)
+    def save_checkpoint():
+        """Canonical snapshot at a refill boundary: (state, item_slot,
+        acc) here are exactly the inputs the next refill would see, and
+        staged-but-unconsumed items roll back into the pending spans
+        (they were never stepped, so re-staging them after a resume is
+        bit-exact)."""
+        lanes = state.lanes
+        accv = {k: clock.fetch(getattr(acc, k))
+                for k in base}
+        slot_h = clock.fetch(item_slot).astype(np.int64)
+        prev_h = clock.fetch(acc.prev_instr)
+        mix_now = mix_base + clock.fetch(acc.mix_g).astype(
+            np.int64).sum(0)
+        merged = merged_vals(accv)
+        # global item of each in-flight lane, via the row table
+        lane_rows = (np.arange(chunk) // spc) * cap + slot_h
+        lane_item = np.where(
+            slot_h >= 0,
+            row_owner[np.clip(lane_rows, 0, n_shards * cap - 1)], -1)
+        # pending = staged-but-unconsumed + not-yet-staged remainder
+        pend_items = [[] for _ in range(n_groups)]
+        for s in range(n_shards):
+            k = int(staged_n[s])
+            if k:
+                srows = s * cap + st_slot[s, :k].astype(np.int64)
+                sitems = row_owner[srows]
+                for g in range(n_groups):
+                    pend_items[g].append(
+                        sitems[st_prog[s, :k] == g] - slot_base[g])
+            for g in range(n_groups):
+                rest = _span_items(spans[g][s])
+                pend_items[g].append(rest[int(staged_cursor[g, s]):])
+        prows = []
+        for g in range(n_groups):
+            items = np.sort(np.concatenate(
+                [np.zeros(0, np.int64)] + pend_items[g]))
+            prows += [(g, lo, hi) for lo, hi in _items_to_spans(items)]
+        done_now = np.ones(total, bool)
+        done_now[lane_item[lane_item >= 0]] = False
+        for g, lo, hi in prows:
+            done_now[slot_base[g] + lo:slot_base[g] + hi] = False
+        tree = {"counts": counts.copy(), "done_mask": done_now,
+                "mix_g": mix_now, "lane_item": lane_item,
+                "lane_prev": prev_h,
+                "pending": np.asarray(prows, np.int64).reshape(-1, 3),
+                "counters": np.array([lane_steps, n_segments],
+                                     np.int64),
+                "ctrl": np.array([controller.rate, prev_seg],
+                                 np.float64),
+                "sched": np.array(controller.schedule, np.int64),
+                "g_lane_steps": g_lane_steps.copy(),
+                "g_segments": g_segments.copy()}
+        tree.update({"val_" + k: v for k, v in merged.items()})
+        tree.update(
+            lane_regs=clock.fetch(lanes.regs),
+            lane_pc=clock.fetch(lanes.pc),
+            lane_mem=clock.fetch(lanes.mem),
+            lane_halted=clock.fetch(lanes.halted),
+            lane_n_instr=clock.fetch(lanes.n_instr),
+            lane_n_two=clock.fetch(lanes.n_two_stage),
+            lane_mix=clock.fetch(lanes.mix),
+            lane_n_cycles=clock.fetch(lanes.n_cycles),
+            lane_prog=clock.fetch(state.prog_id),
+            lane_ms=clock.fetch(state.max_steps))
+        dckpt.save(checkpoint_dir, n_segments, tree)
+
+    last_saved = n_segments
+    try:
         restock()
-        dt = time.perf_counter() - t_refill
-        clock.refill_wall_s += dt
-        try:
-            if state.lanes.regs.is_ready():   # segment already done:
-                clock.idle_s += dt            # restock was device-idle
-        except AttributeError:
-            pass
+        while retired < total:
+            if crash_after is not None and n_segments >= crash_after:
+                raise InjectedFault(
+                    f"injected fault after segment {n_segments}")
+            if checkpoint_dir is not None and checkpoint_every > 0 \
+                    and n_segments - last_saved >= checkpoint_every:
+                save_checkpoint()
+                last_saved = n_segments
+            upload()
+            state, item_slot, acc, stats = refill_fn(
+                state, item_slot, acc, *staged["dev"],
+                jnp.asarray(staged_n, iss.I32), out_addr_dev)
+            seg_steps = controller.next_seg()
+            seg_fn = _packed_segment_runner(stepper, chunk, seg_steps,
+                                            mem_words, n_groups,
+                                            bank_np.shape[1], mesh,
+                                            subset, timing)
+            state = seg_fn(bank, code_len, mem_len, cost, state)
+            if hasattr(stats, "copy_to_host_async"):
+                stats.copy_to_host_async()
+            # blocks until refill_i only — seg_i is already running;
+            # one (n_shards, 3+G) read regardless of device count
+            sv = np.asarray(clock.fetch(stats), np.int64)
+            n_ret = int(sv[:, 0].sum())
+            act_s = sv[:, 3:]
+            deltas = sv[:, 2]
+            sh_act = act_s.sum(1) > 0
+            if sh_act.any():
+                n_segments += 1
+                g_segments += act_s.sum(0) > 0
+                g_lane_steps += (act_s * deltas[:, None]).sum(0)
+                stepped = spc * deltas * sh_act
+                lane_steps += int(stepped.sum())
+                shard_steps += stepped
+            controller.record(n_ret, prev_seg)
+            prev_seg = seg_steps
+            retired += n_ret
+            shard_retired += sv[:, 0]
+            t_refill = time.perf_counter()
+            consume(sv[:, 1])
+            restock()
+            dt = time.perf_counter() - t_refill
+            clock.refill_wall_s += dt
+            try:
+                if state.lanes.regs.is_ready():  # segment already done:
+                    clock.idle_s += dt           # restock was idle time
+            except AttributeError:
+                pass
+    finally:
+        for row in prefs:
+            for p in row:
+                p.close()
 
-    # ---- drain: ONE demux of the on-device accumulators
-    res_instr = clock.fetch(acc.n_instr).astype(np.int64)
-    res_two = clock.fetch(acc.n_two).astype(np.int64)
-    res_cycles = clock.fetch(acc.n_cycles).astype(np.int64) if timing \
-        else np.zeros(total, np.int64)
-    res_halt = clock.fetch(acc.halted)
-    res_out = clock.fetch(acc.out)
-    res_mix_g = clock.fetch(acc.mix_g).astype(np.int64)
+    # ---- drain: ONE demux of the on-device accumulators, merged with
+    # the host base through the item->row table
+    accv = {"n_instr": clock.fetch(acc.n_instr),
+            "n_two": clock.fetch(acc.n_two)}
+    accv["n_cycles"] = clock.fetch(acc.n_cycles) if timing \
+        else np.zeros(n_shards * cap, np.int64)
+    accv["halted"] = clock.fetch(acc.halted)
+    accv["out"] = clock.fetch(acc.out)
+    res_mix_g = mix_base + clock.fetch(acc.mix_g).astype(
+        np.int64).sum(0)
     if keep_state:
-        res_mems = clock.fetch(acc.mems)
-        res_regs = clock.fetch(acc.regs)
-        res_pc = clock.fetch(acc.pc)
-        res_mix_items = clock.fetch(acc.mix_items)
+        accv["mems"] = clock.fetch(acc.mems)
+        accv["regs"] = clock.fetch(acc.regs)
+        accv["pc"] = clock.fetch(acc.pc)
+        accv["mix_items"] = clock.fetch(acc.mix_items)
+    merged = merged_vals(accv)
 
     r_instr, r_two, r_halt, r_out, r_mix = [], [], [], [], []
     r_cycles = []
@@ -1231,24 +1711,27 @@ def _stream_resident(groups, prefs, counts, ms_of, bank, code_len,
         r_mem, r_regs, r_pc, r_mix_items = [], [], [], []
     for g, grp in enumerate(groups):
         sl = slice(int(slot_base[g]), int(slot_base[g] + counts[g]))
-        r_instr.append(res_instr[sl])
-        r_two.append(res_two[sl])
-        r_cycles.append(res_cycles[sl])
-        r_halt.append(res_halt[sl])
-        r_out.append(res_out[sl])
+        r_instr.append(merged["n_instr"][sl].astype(np.int64))
+        r_two.append(merged["n_two"][sl].astype(np.int64))
+        r_cycles.append(merged["n_cycles"][sl].astype(np.int64))
+        r_halt.append(merged["halted"][sl])
+        r_out.append(merged["out"][sl])
         r_mix.append(res_mix_g[g])
         if keep_state:
-            r_mem.append(res_mems[sl, :grp.mem_words].copy())
-            r_regs.append(res_regs[sl])
-            r_pc.append(res_pc[sl])
-            r_mix_items.append(res_mix_items[sl])
+            r_mem.append(merged["mems"][sl, :grp.mem_words].copy())
+            r_regs.append(merged["regs"][sl])
+            r_pc.append(merged["pc"][sl])
+            r_mix_items.append(merged["mix_items"][sl])
 
     return {"r_instr": r_instr, "r_two": r_two, "r_halt": r_halt,
             "r_out": r_out, "r_mix": r_mix, "r_mem": r_mem,
             "r_regs": r_regs, "r_pc": r_pc, "r_mix_items": r_mix_items,
             "r_cycles": r_cycles,
             "g_lane_steps": g_lane_steps, "g_segments": g_segments,
-            "lane_steps": lane_steps, "n_segments": n_segments}
+            "lane_steps": lane_steps, "n_segments": n_segments,
+            "n_shards": n_shards,
+            "shard_retired": shard_retired.tolist(),
+            "shard_lane_steps": shard_steps.tolist()}
 
 
 def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,

@@ -205,7 +205,9 @@ def _packed_groups(plan: FleetPlan):
 
 
 def run_plan(plan: FleetPlan, mesh: Optional[Mesh] = None,
-             keep_state: bool = False) -> FleetReport:
+             keep_state: bool = False,
+             checkpoint_dir: Optional[str] = None,
+             checkpoint_every: int = 0) -> FleetReport:
     """Execute the plan and price it through the carbon report.
 
     With `plan.packed` (the default) every group runs in ONE packed
@@ -213,15 +215,23 @@ def run_plan(plan: FleetPlan, mesh: Optional[Mesh] = None,
     per-lane tallies back into per-group `GroupReport`s; with
     `packed=False` groups drain sequentially through `run_stream`, one
     stream each — the A/B baseline the packed runtime is benchmarked
-    (and pinned bit-exact) against.
+    (and pinned bit-exact) against. Under a mesh the resident stream is
+    shard-local (DESIGN.md §9.12) and the returned
+    `FleetReport.packed` carries per-shard retirement/lane-step stats;
+    `checkpoint_dir`/`checkpoint_every` make the packed resident stream
+    durable (mid-flight checkpoint + bit-exact auto-resume — packed
+    plans only).
     """
+    if checkpoint_dir is not None and not (plan.packed and plan.groups):
+        raise ValueError("checkpointing requires a packed plan")
     if plan.packed and plan.groups:
         lowered, resolved = _packed_groups(plan)
         results, stats = engine.run_packed(
             lowered, chunk=plan.chunk, seg_steps=plan.seg_steps,
             keep_state=keep_state, mesh=mesh, stepper=plan.stepper,
             prefetch=plan.prefetch, refill=plan.refill,
-            adaptive=plan.adaptive)
+            adaptive=plan.adaptive, checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every)
         group_reports = [
             build_group_report(
                 group=g, workload=w, core=core, result=res,

@@ -232,4 +232,11 @@ class FleetReport:
                 f"syncs ({p.sync_wait_s:.3f}s waited), refill host work "
                 f"{p.refill_wall_s:.3f}s, device busy "
                 f"{100.0 * p.device_busy_frac:.1f}%")
+            if p.n_shards > 1 and p.shard_retired:
+                lines.append(
+                    f"shard-local (§9.12): {p.n_shards} shards, "
+                    f"retired/shard {list(p.shard_retired)}, "
+                    f"lane-steps/shard {list(p.shard_lane_steps)} — "
+                    f"collective-free segment loop, "
+                    f"{p.host_syncs} host syncs total (not x shards)")
         return "\n".join(lines)

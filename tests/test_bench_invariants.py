@@ -30,7 +30,7 @@ def bench():
 def test_bench_has_all_studies(bench):
     for key in ("streaming_vs_monolithic", "stepper_ab", "fusion_proof",
                 "packed_vs_sequential", "resident_vs_host_refill",
-                "timing_overhead", "flexilint"):
+                "timing_overhead", "flexilint", "device_scaling"):
         assert key in bench, f"BENCH_fleet.json lost the {key} study"
 
 
@@ -101,3 +101,29 @@ def test_resident_runtime_invariant(bench):
         rh["resident_wall_s"], rh["host_refill_wall_s"])
     assert int(rh["resident_syncs"]) < int(rh["host_refill_syncs"]), (
         rh["resident_syncs"], rh["host_refill_syncs"])
+
+
+def test_device_scaling_invariant(bench):
+    """§9.12: the shard-local resident engine's weak-scaling curve must
+    be monotonically increasing with >=2.5x at 4 devices (replay basis:
+    per-shard dedicated-device wall — the legitimate node throughput of
+    a collective-free loop), every shard replay must be bit-exact with
+    the sharded run, the oversubscribed wall-clock must hold the >=0.6
+    efficiency floor, and each recorded point must carry the sync
+    accounting (host_syncs/sync_wait_s/device_busy_frac)."""
+    sc = bench["device_scaling"]
+    assert sc["bit_exact"] is True
+    sp = [float(s) for s in sc["speedup_vs_1dev"]]
+    devs = [int(p["n_devices"]) for p in sc["points"]]
+    assert devs == sorted(devs) and len(devs) >= 3
+    assert all(b > a for a, b in zip(sp, sp[1:])), sp
+    assert 4 in devs
+    assert sp[devs.index(4)] >= 2.5, sp
+    assert float(sc["min_oversubscribed_efficiency"]) >= 0.6
+    for p in sc["points"]:
+        assert int(p["host_syncs"]) > 0
+        assert float(p["sync_wait_s"]) >= 0.0
+        assert 0.0 <= float(p["device_busy_frac"]) <= 1.0
+        assert int(p["n_shards"]) == int(p["n_devices"])
+        assert float(p["shard_wall_s"]) > 0.0
+        assert float(p["speedup_vs_1dev"]) > 0.0
