@@ -1,6 +1,6 @@
 """Streaming fleet engine benchmarks (DESIGN.md §9).
 
-Seven studies on a skewed halt-time distribution (the paper's regime:
+Eight studies on a skewed halt-time distribution (the paper's regime:
 most items run short data-dependent paths, a tail runs long ones):
 
 - streaming vs monolithic: total simulated lane-steps; the monolithic
@@ -25,6 +25,12 @@ most items run short data-dependent paths, a tail runs long ones):
   plan — bit-exact, strictly fewer blocking host syncs, and wall-clock
   no worse (those two are the gates; the committed run records a
   >=1.2x win).
+- planner sweep (§9.13): the device-resident Monte Carlo carbon-planner
+  sweep — scenarios/second of the fused jitted evaluate-and-reduce over
+  the (distribution x frequency x intensity x volume x workload x
+  timing) planning space vs a per-scenario python loop, with the Pallas
+  A/B bit-exact and the float64 point-mass run pinned exactly to the
+  numpy total_grid/selection_map oracles.
 - timing overhead (§9.10): segment wall-clock of the same stream with
   the per-lane cycle layer off (cost=None, DCE'd graph) vs on with full
   dynamic cost rows — bit-exact architectural state, <=1.5x overhead.
@@ -550,6 +556,147 @@ def fleet_flexilint(n_inputs: int = 3):
     return rows, derived
 
 
+SWEEP_FIELDS = ("mean", "p50", "p90", "p99", "min", "max", "mean_emb",
+                "mean_op", "fleet_mean", "counts", "hist")
+
+
+def fleet_planner_sweep(draws: int = 64, tile_cells: int = 1024,
+                        n_ref: int = 200):
+    """Device-resident Monte Carlo carbon-planner sweep (DESIGN.md
+    §9.13).
+
+    One fused jitted program prices the paper's whole planning space —
+    (lifetime distribution x task frequency x grid intensity x
+    deployment volume x workload x timing mode) cells, each with Monte
+    Carlo lifetime draws over the 1000X spread and an on-device
+    core-selection argmin — streamed through buffer-donated accumulator
+    tiles. Workload anchors are PyISS-measured event vectors (§9.10)
+    and FlexiLint WCET certificates (§9.11) priced per candidate core.
+    Recorded: fused-jnp scenarios/second (warm, best of `reps`); the
+    Pallas-kernel A/B on a subset spec (bit-exact gate); a per-scenario
+    python-loop reference (`selection.optimal_core` per scenario — the
+    pre-§9.13 way to answer the same question) for the speedup; and the
+    float64 point-mass pin against the numpy
+    `selection.total_grid`/`selection_map` oracles (exact-equality
+    gate).
+    """
+    import dataclasses
+
+    import jax
+
+    from repro.core.selection import optimal_core, selection_map, \
+        total_grid
+    from repro.core.sweep import (LifetimeDist, SweepSpec, run_sweep,
+                                  workload_spec)
+    from repro.flexibits.cycles import CORES
+
+    day = 86_400.0
+    reps = 3
+    dists = (
+        LifetimeDist.point(30 * day),
+        LifetimeDist.lognormal(100 * day, 1.8),
+        LifetimeDist.weibull(300 * day, 1.5),
+        LifetimeDist.mixture(
+            [(LifetimeDist.point(10 * day), 0.5),
+             (LifetimeDist.lognormal(1000 * day, 0.8), 0.5)]),
+    )
+    spec = workload_spec(
+        dists=dists,
+        execs_per_day=(1.0, 24.0, 96.0, 960.0, 8640.0),
+        intensities=(0.05, 0.233, 0.367, 0.7),
+        volumes=(1e3, 1e6, 1e9),
+        timing=("base", "dynamic", "wcet"),
+        draws=draws, seed=0)
+
+    run_sweep(spec, path="jnp", tile_cells=tile_cells)  # compile warm-up
+    res = None
+    for _ in range(reps):
+        r = run_sweep(spec, path="jnp", tile_cells=tile_cells)
+        if res is None or r.wall_s < res.wall_s:
+            res = r
+    scn_s = res.scenarios_per_s
+
+    # Pallas A/B (interpret fallback on CPU): bit-exact on a subset of
+    # the same spec — the full-spec jnp/tiling/flush contracts are
+    # pinned by tests/test_sweep.py on every push.
+    sub = dataclasses.replace(spec, execs_per_day=(24.0,),
+                              intensities=(0.367,), volumes=(1e6,))
+    aj = run_sweep(sub, path="jnp", tile_cells=64)
+    ap = run_sweep(sub, path="pallas", tile_cells=64)
+    for f in SWEEP_FIELDS:
+        np.testing.assert_array_equal(getattr(aj, f), getattr(ap, f), f)
+    for k in aj.pareto:
+        np.testing.assert_array_equal(aj.pareto[k], ap.pareto[k], k)
+
+    # python-loop reference: the same per-scenario question answered the
+    # host way (one `optimal_core` call per scenario)
+    rng = np.random.default_rng(0)
+    wi = rng.integers(0, len(spec.workloads), n_ref)
+    lifes = rng.uniform(day, 4000 * day, n_ref)
+    freqs = rng.choice(spec.execs_per_day, n_ref)
+    intens = rng.choice(spec.intensities, n_ref)
+    t0 = time.perf_counter()
+    for i in range(n_ref):
+        optimal_core(spec.profiles[wi[i]], lifetime_s=lifes[i],
+                     execs_per_day=freqs[i], intensity=intens[i])
+    py_wall = time.perf_counter() - t0
+    py_scn_s = n_ref / py_wall
+    speedup = scn_s / py_scn_s
+
+    # float64 point-mass oracle pin: device totals ARE the numpy floats
+    point_lifes = [day * d for d in (1, 10, 100, 1000)]
+    pfreqs = (1.0, 24.0, 96.0)
+    pspec = SweepSpec(
+        workloads=spec.workloads[:1], profiles=spec.profiles[:1],
+        dists=tuple(LifetimeDist.point(s) for s in point_lifes),
+        execs_per_day=pfreqs, intensities=(0.367,), draws=8, seed=3)
+    cores = list(CORES.values())
+    tg = total_grid(cores, spec.profiles[0], np.asarray(point_lifes),
+                    np.asarray(pfreqs))
+    smap = selection_map(spec.profiles[0], np.asarray(point_lifes),
+                         np.asarray(pfreqs))
+    with jax.experimental.enable_x64():
+        pres = run_sweep(pspec, path="jnp", tile_cells=5,
+                         dtype=np.float64)
+    sq = np.s_[:, :, 0, 0, 0, 0]
+    np.testing.assert_array_equal(pres.p50[sq], tg.min(axis=0))
+    np.testing.assert_array_equal(pres.min[sq], tg.min(axis=0))
+    np.testing.assert_array_equal(pres.best_core[sq], smap)
+
+    front = res.frontier()
+    rows = [
+        ("fleet/sweep_scn_per_s", round(scn_s), round(py_scn_s, 1)),
+        ("fleet/sweep_wall_ms", round(res.wall_s * 1e3, 2),
+         round(py_wall * 1e3, 2)),
+        ("fleet/sweep_scenarios", res.n_scenarios, n_ref),
+    ]
+    derived = {
+        "n_cells": res.n_cells,
+        "n_scenarios": res.n_scenarios,
+        "draws": draws,
+        "tile_cells": tile_cells,
+        "axes": {"dists": [d.name for d in spec.dists],
+                 "execs_per_day": list(spec.execs_per_day),
+                 "intensities": list(spec.intensities),
+                 "volumes": list(spec.volumes),
+                 "workloads": list(spec.workloads),
+                 "timing": list(spec.timing)},
+        "wall_s": res.wall_s,
+        "scenarios_per_s": scn_s,
+        "python_loop_scn_per_s": py_scn_s,
+        "python_loop_speedup": speedup,
+        "python_loop_n_ref": n_ref,
+        "bit_exact": True,          # pallas A/B asserted above
+        "oracle_exact": True,       # f64 point-mass pin asserted above
+        "frontier_points": len(front),
+        "frontier_head": front[:4],
+        "target": ">=1e6 scenarios/s fused jnp on CPU, >=100x over the "
+                  "per-scenario python loop, Pallas A/B bit-exact, "
+                  "numpy total_grid/selection_map pinned exactly",
+    }
+    return rows, derived
+
+
 def _scaling_worker(spec: dict) -> dict:
     """One device-scaling measurement: run the shard-local resident
     engine over ALL host devices — or, with `spec["slice"]`, replay one
@@ -768,6 +915,17 @@ def main():
           f"dynamic {to['core']} rows on ({to['mean_cycles_per_item']:.0f} "
           f"measured cycles/item, bit-exact architectural state)")
 
+    ps_rows, ps = fleet_planner_sweep()
+    bench["planner_sweep"] = ps
+    print(f"\n{'metric':<24} {'device sweep':>14} {'python loop':>14}")
+    for name, d, p in ps_rows:
+        print(f"{name:<24} {d:>14} {p:>14}")
+    print(f"planner sweep (§9.13): {ps['scenarios_per_s']/1e6:.2f}M "
+          f"scenarios/s over {ps['n_cells']} cells x {ps['draws']} "
+          f"draws, {ps['python_loop_speedup']:.0f}x the per-scenario "
+          f"python loop (Pallas A/B bit-exact, f64 numpy oracles "
+          f"pinned, {ps['frontier_points']} frontier points)")
+
     fl_rows, fl = fleet_flexilint()
     bench["flexilint"] = fl
     print(f"\n{'metric':<18} {'wall ms':>9} {'wcet ticks':>12} "
@@ -821,6 +979,13 @@ def main():
     if to["overhead_ratio"] > 1.5:
         failures.append(f"timing overhead target NOT met: "
                         f"{to['overhead_ratio']:.3f}x > 1.5x")
+    if ps["scenarios_per_s"] < 1e6:
+        failures.append(f"planner sweep target NOT met: "
+                        f"{ps['scenarios_per_s']:.3g} scenarios/s < 1e6")
+    if ps["python_loop_speedup"] < 100.0:
+        failures.append(f"planner sweep speedup target NOT met: "
+                        f"{ps['python_loop_speedup']:.1f}x < 100x vs "
+                        f"python loop")
     if fl["total_errors"] > 0:
         failures.append(f"flexilint target NOT met: "
                         f"{fl['total_errors']} lint errors")

@@ -74,6 +74,12 @@ def plan_grid(*, n_params: float, kv_bytes_per_token: float,
     strict `<` scan it replaces (tests/test_planner.py pins exact
     array equality against the loop form).
     """
+    if not list(chips_options):
+        raise ValueError("plan_grid: chips_options is empty — need at "
+                         "least one fleet size to plan over")
+    if not list(variants):
+        raise ValueError("plan_grid: variants is empty — need at least "
+                         "one serving variant to plan over")
     days = np.asarray(lifetimes_days, float)          # (nl,)
     qps = np.asarray(qps_grid, float)                 # (nq,)
     opt_vi, opt_chips, opt_tps = [], [], []
@@ -93,8 +99,14 @@ def plan_grid(*, n_params: float, kv_bytes_per_token: float,
     # amortize 3y chip life
     emb = (opt_chips[None, None, :] * TPU_EMBODIED_KG
            * np.minimum(days / (3 * 365.0), 1.0)[:, None, None])
-    # energy: chips run at utilization qps/tps
-    util = qps[None, :, None] / opt_tps[None, None, :]
+    # energy: chips run at utilization qps/tps — divide only where the
+    # option is feasible (masked divide keeps inf/NaN qps demands from
+    # raising spurious warnings; infeasible cells mask to +inf below
+    # regardless, so feasible cells are bit-identical to the plain form)
+    util = np.zeros(feasible.shape)
+    np.divide(np.broadcast_to(qps[None, :, None], feasible.shape),
+              np.broadcast_to(opt_tps[None, None, :], feasible.shape),
+              out=util, where=feasible)
     kwh = (opt_chips[None, None, :] * CHIP_POWER_W * PUE * util
            * days[:, None, None] * 24.0 / 1000.0)
     total = opt_prep[None, None, :] + emb + kwh * intensity

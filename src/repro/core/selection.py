@@ -6,7 +6,7 @@ lifetimes) lives in flexibits/fleet.py.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -39,7 +39,7 @@ def total_grid(core: Union[Core, Sequence[Core]], prof: DeviceProfile,
 
 def selection_map(prof: DeviceProfile, lifetimes_s: np.ndarray,
                   execs_per_day: np.ndarray, intensity: float = 0.367,
-                  cores: Sequence[Core] = None) -> np.ndarray:
+                  cores: Optional[Sequence[Core]] = None) -> np.ndarray:
     """argmin-core index grid (paper Fig. 5). 0=SERV, 1=QERV, 2=HERV."""
     cores = list(cores or CORES.values())
     totals = total_grid(cores, prof, lifetimes_s, execs_per_day, intensity)
@@ -48,7 +48,7 @@ def selection_map(prof: DeviceProfile, lifetimes_s: np.ndarray,
 
 def optimal_core(prof: DeviceProfile, *, lifetime_s: float,
                  execs_per_day: float, intensity: float = 0.367,
-                 cores: Sequence[Core] = None) -> Tuple[Core, Dict]:
+                 cores: Optional[Sequence[Core]] = None) -> Tuple[Core, Dict]:
     cores = list(cores or CORES.values())
     totals = total_grid(cores, prof, np.array([lifetime_s]),
                         np.array([execs_per_day]), intensity)[:, 0, 0]
@@ -56,18 +56,36 @@ def optimal_core(prof: DeviceProfile, *, lifetime_s: float,
     return cores[i], {c.name: float(t) for c, t in zip(cores, totals)}
 
 
+def crossover_lifetimes(prof: DeviceProfile, execs_per_day: float,
+                        intensity: float = 0.367,
+                        cores: Optional[Sequence[Core]] = None
+                        ) -> np.ndarray:
+    """Pairwise crossover-lifetime matrix over all core pairs.
+
+    `out[a, b]` is the lifetime (seconds) where core b overtakes core a
+    (solves emb_a + op_a*L = emb_b + op_b*L per pair in one broadcast);
+    +inf where b never catches up (op_a <= op_b). The sweep's frontier
+    annotation consumes whole rows of this at once.
+    """
+    cores = list(CORES.values()) if cores is None else list(cores)
+    emb = np.array([soc_embodied_kg(c, prof) for c in cores])
+    op = np.array([
+        operational_kg(c, prof, lifetime_s=86_400.0,
+                       execs_per_day=execs_per_day, intensity=intensity)
+        for c in cores])
+    demb = emb[None, :] - emb[:, None]          # emb_b - emb_a
+    dop = op[:, None] - op[None, :]             # op_a - op_b
+    out = np.full((len(cores), len(cores)), np.inf)
+    np.divide(demb * 86_400.0, dop, out=out, where=dop > 0)
+    return out
+
+
 def crossover_lifetime_s(prof: DeviceProfile, core_a: Core, core_b: Core,
                          execs_per_day: float,
                          intensity: float = 0.367) -> float:
     """Lifetime where core_b (more efficient, larger) overtakes core_a.
 
-    Solves emb_a + op_a*L = emb_b + op_b*L. Returns +inf if never.
+    Scalar view of `crossover_lifetimes`. Returns +inf if never.
     """
-    emb_a, emb_b = (soc_embodied_kg(c, prof) for c in (core_a, core_b))
-    op_a, op_b = (
-        operational_kg(c, prof, lifetime_s=86_400.0,
-                       execs_per_day=execs_per_day, intensity=intensity)
-        for c in (core_a, core_b))
-    if op_a <= op_b:
-        return float("inf")
-    return 86_400.0 * (emb_b - emb_a) / (op_a - op_b)
+    return float(crossover_lifetimes(
+        prof, execs_per_day, intensity, cores=(core_a, core_b))[0, 1])

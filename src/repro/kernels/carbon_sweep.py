@@ -1,0 +1,440 @@
+"""Fused carbon-sweep evaluate-and-reduce kernel (DESIGN.md §9.13).
+
+The hot inner loop of the Monte Carlo carbon-planner sweep
+(`core/sweep.py`): given one streamed tile of scenario cells — per-cell
+(embodied, operational-anchor) rows over the candidate cores, the cell's
+grid intensity and task frequency, and the tile's Monte Carlo lifetime
+draws — evaluate the total-carbon surface over the core axis, select the
+carbon-optimal core per scenario, and reduce everything the planner
+reports *inside the tile*:
+
+- per-cell over draws: sum/min/max of the best-core total, chosen-core
+  counts, chosen embodied/operational sums (the percentile sort runs in
+  the shared wrapper on the tile-sized best-total matrix — the full
+  (cells x draws) tensor never exists);
+- across the whole sweep: a log-binned histogram of best totals and a
+  binned embodied-vs-operational Pareto frontier, both carried as small
+  accumulator arrays that the engine streams through every tile.
+
+Two interchangeable paths with ONE shared arithmetic pipeline
+(`_totals` / `_cell_reduce` / `_hist_contrib` / `_pareto_candidate` /
+`_pareto_merge`), following the `iss_stepper.py` contract that A/B paths
+share their math so they cannot drift:
+
+- `sweep_tile(..., path="jnp")`: pure-jnp broadcast over the whole tile
+  (the bit-exact baseline);
+- `sweep_tile(..., path="pallas")`: a `pl.pallas_call` gridded over row
+  tiles of the cell axis, per-cell outputs block-mapped per row tile and
+  the histogram/Pareto accumulators mapped to one shared block that
+  every grid step revisits (initialized from the aliased running
+  accumulator at step 0, then accumulated in place — the
+  `input_output_aliases` idiom of `iss_stepper.py`). All accumulator
+  updates are associative (int adds, lexicographic mins), so the
+  sequential per-row-tile merges equal the jnp path's single whole-tile
+  merge bit-for-bit, at any row-tile size.
+
+Bit-exactness contract: for identical tile inputs, every output of the
+two paths is bit-identical (pinned by tests/test_sweep.py); the totals
+themselves are evaluated in exactly the numpy oracle's op order
+(`core.selection.total_grid`: ``emb + (base * life_days) * freq`` with
+``base = kwh * intensity``), so on point-mass lifetime draws the sweep
+is bit-equal to the host planner grid as well.
+
+CPU fallback follows the package convention (`iss_stepper.py`,
+`bitplane_matmul.py`): off-TPU the kernel defaults to `interpret=True`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I32 = jnp.int32
+_IMAX = jnp.iinfo(jnp.int32).max
+
+
+def _pick_row_tile(n_rows: int, want: Optional[int]) -> int:
+    """Largest divisor of `n_rows` <= the requested row tile (the
+    `iss_stepper._pick_lane_tile` rule on the cell axis)."""
+    want = n_rows if want is None else max(1, min(want, n_rows))
+    for d in range(want, 0, -1):
+        if n_rows % d == 0:
+            return d
+    return 1
+
+
+class SweepAcc(NamedTuple):
+    """Streamed cross-tile accumulators (device-resident, donated).
+
+    `hist` counts best-core totals into fixed log10 bins; the `par_*`
+    arrays hold, per embodied-axis log10 bin, the lexicographically
+    minimal (operational, cell, draw) point seen so far with its
+    payload — the streamed Pareto frontier. Empty bins carry
+    (+inf, IMAX, IMAX) sentinels.
+    """
+    hist: jax.Array       # (B,)  int32
+    par_op: jax.Array     # (Bp,) dtype — min operational kg in bin
+    par_emb: jax.Array    # (Bp,) dtype — embodied kg of that point
+    par_life: jax.Array   # (Bp,) dtype — lifetime draw (days) of point
+    par_cell: jax.Array   # (Bp,) int32 — global cell index
+    par_draw: jax.Array   # (Bp,) int32 — draw index
+    par_core: jax.Array   # (Bp,) int32 — chosen core index
+
+
+class TileOut(NamedTuple):
+    """Per-cell reductions for one streamed tile of scenario cells."""
+    best_total: jax.Array  # (Tc, N) chosen-core total kg per draw
+    best_core: jax.Array   # (Tc, N) int32 argmin core index
+    counts: jax.Array      # (Tc, C) int32 chosen-core histogram
+    sum_best: jax.Array    # (Tc,) sum over draws of best totals
+    min_best: jax.Array    # (Tc,)
+    max_best: jax.Array    # (Tc,)
+    sum_emb: jax.Array     # (Tc,) sum of chosen embodied kg
+    sum_op: jax.Array      # (Tc,) sum of chosen operational kg
+
+
+def init_acc(n_hist: int, n_pareto: int, dtype) -> SweepAcc:
+    inf = jnp.array(jnp.inf, dtype)
+    return SweepAcc(
+        hist=jnp.zeros((n_hist,), I32),
+        par_op=jnp.full((n_pareto,), inf),
+        par_emb=jnp.full((n_pareto,), inf),
+        par_life=jnp.full((n_pareto,), inf),
+        par_cell=jnp.full((n_pareto,), _IMAX, I32),
+        par_draw=jnp.full((n_pareto,), _IMAX, I32),
+        par_core=jnp.full((n_pareto,), _IMAX, I32),
+    )
+
+
+# --------------------------------------------------- shared arithmetic
+def _totals(emb, kwh, inten, freq, life_days):
+    """Total/embodied/operational surfaces over (cells, draws, cores).
+
+    EXACTLY the numpy oracle's op order (`selection.total_grid`):
+    ``base = kwh * intensity``; ``total = emb + (base * life_days) *
+    freq`` — so point-mass draws reproduce the host grid bit-for-bit.
+    `life_days` arrives pre-divided from the engine (`core/sweep.py`
+    guards that division against XLA's f32 divide-by-constant ->
+    reciprocal-multiply rewrite) so both A/B paths consume identical
+    bits; the remaining ops here are pure multiply chains and a
+    contraction-blocked add, which XLA CPU leaves bit-stable.
+    """
+    base = kwh * inten[:, None]                       # (Tc, C)
+    op = (base[:, None, :] * life_days[:, :, None]) * freq[:, None, None]
+    # `abs` is a bitwise identity here (op >= 0 always) whose only job
+    # is to break the fadd(fmul) pattern: XLA CPU otherwise contracts
+    # `emb + op` into an FMA, which rounds differently from the numpy
+    # oracle's separate multiply-then-add
+    total = emb[:, None, :] + jnp.abs(op)
+    return total, op
+
+
+def _cell_reduce(total, op, emb, n_cores) -> TileOut:
+    """argmin core selection + per-cell reductions over the draw axis."""
+    best_core = jnp.argmin(total, axis=-1).astype(I32)   # first-min ties
+    sel = best_core[..., None]
+    best_total = jnp.take_along_axis(total, sel, axis=-1)[..., 0]
+    best_op = jnp.take_along_axis(op, sel, axis=-1)[..., 0]
+    best_emb = jnp.take_along_axis(
+        jnp.broadcast_to(emb[:, None, :], total.shape), sel, axis=-1)[..., 0]
+    onehot = (best_core[..., None]
+              == jnp.arange(n_cores, dtype=I32)).astype(I32)
+    return TileOut(
+        best_total=best_total,
+        best_core=best_core,
+        counts=jnp.sum(onehot, axis=1, dtype=I32),
+        sum_best=jnp.sum(best_total, axis=1),
+        min_best=jnp.min(best_total, axis=1),
+        max_best=jnp.max(best_total, axis=1),
+        sum_emb=jnp.sum(best_emb, axis=1),
+        sum_op=jnp.sum(best_op, axis=1),
+    ), best_emb, best_op
+
+
+def _log_bin(x, lo, inv, n_bins):
+    """Fixed log10 binning; out-of-range values clamp to the end bins."""
+    b = jnp.floor((jnp.log10(x) - lo) * inv).astype(I32)
+    return jnp.clip(b, 0, n_bins - 1)
+
+
+def _hist_contrib(best_total, valid, lo, inv, n_bins):
+    """Scatter-add histogram of the tile's best totals.
+
+    Integer adds are exact and order-free, so the scatter is
+    bit-identical to a one-hot reduction at any tile size (and ~2.7x
+    faster on CPU than materializing the (cells, draws, bins) one-hot).
+    Runs under the interpret-mode Pallas path as plain XLA scatter.
+    """
+    bins = _log_bin(best_total, lo, inv, n_bins)        # (Tc, N)
+    w = jnp.broadcast_to(valid[:, None], bins.shape).astype(I32)
+    return jnp.zeros((n_bins,), I32).at[bins.reshape(-1)].add(
+        w.reshape(-1))                                  # (B,)
+
+
+def _pareto_candidate(emb, best_op, life_days, cell_idx, best_core,
+                      valid, lo, inv, n_bins):
+    """Per-bin lexicographic min over this tile's scenario points.
+
+    Global key order is (operational, cell, draw); the chosen core is a
+    pure function of (cell, draw), so the key is a strict total order
+    and per-bin min is associative — any grouping of scenarios into row
+    tiles merges to the same frontier.
+
+    Reduced in two levels: all draws of one (cell, core) share the same
+    embodied kg and therefore the same bin, so first each (cell, core)
+    group elects its champion draw (min op, then min draw — over the
+    draws that actually chose that core), then the per-bin min runs
+    over the (cells x cores) champions instead of (cells x draws)
+    scenarios. A lexicographic min over any partition equals the global
+    min, so this is bit-identical to the flat reduction.
+    """
+    n_cells, n_draws = best_op.shape
+    n_cores = emb.shape[1]
+    inf = jnp.array(jnp.inf, best_op.dtype)
+    # level 1: per-(cell, core) champion draw
+    chose = best_core[..., None] == jnp.arange(n_cores, dtype=I32)
+    opm = jnp.where(chose, best_op[..., None], inf)     # (Tc, N, C)
+    op_cc = jnp.min(opm, axis=1)                        # (Tc, C)
+    tie = chose & (opm == op_cc[:, None, :])
+    drawm = jnp.where(tie, jnp.arange(n_draws, dtype=I32)[None, :, None],
+                      _IMAX)
+    draw_cc = jnp.min(drawm, axis=1)                    # (Tc, C)
+    tie = tie & (drawm == draw_cc[:, None, :])          # exactly one draw
+    life_cc = jnp.sum(jnp.where(tie, life_days[..., None], 0), axis=1,
+                      dtype=life_days.dtype)
+    alive = valid[:, None] & (op_cc < inf)              # (Tc, C)
+
+    # level 2: per-bin lexicographic min over the champions
+    bins = _log_bin(emb, lo, inv, n_bins)               # (Tc, C)
+    cell = jnp.broadcast_to(cell_idx[:, None], bins.shape)
+    mask = (bins[None] == jnp.arange(n_bins, dtype=I32)[:, None, None]) \
+        & alive[None]                                   # (Bp, Tc, C)
+    opb = jnp.where(mask, op_cc[None], inf)
+    op_min = jnp.min(opb, axis=(1, 2))                  # (Bp,)
+    # bins that are empty OR whose best point overflowed to +inf both
+    # keep the (inf, IMAX, IMAX) sentinel record
+    finite = op_min < inf
+    tie2 = mask & (opb == op_min[:, None, None]) & finite[:, None, None]
+    cellm = jnp.where(tie2, cell[None], _IMAX)
+    cell_min = jnp.min(cellm, axis=(1, 2))
+    tie2 = tie2 & (cellm == cell_min[:, None, None])
+    drawb = jnp.where(tie2, draw_cc[None], _IMAX)
+    draw_min = jnp.min(drawb, axis=(1, 2))
+    tie2 = tie2 & (drawb == draw_min[:, None, None])
+
+    def pick(vals, empty):
+        # `tie2` selects exactly one champion per bin with a finite
+        # best point; sentinel bins sum to 0 and take `empty`
+        return jnp.sum(jnp.where(tie2, vals[None], 0), axis=(1, 2),
+                       dtype=vals.dtype) \
+            + jnp.where(finite, 0, empty).astype(vals.dtype)
+
+    core_b = jnp.broadcast_to(jnp.arange(n_cores, dtype=I32)[None, :],
+                              bins.shape)
+    return (jnp.where(finite, op_min, inf), pick(emb, inf),
+            pick(life_cc, inf),
+            jnp.where(finite, cell_min, _IMAX),
+            jnp.where(finite, draw_min, _IMAX),
+            pick(core_b, _IMAX).astype(I32))
+
+
+def _pareto_merge(a: Tuple, b: Tuple) -> Tuple:
+    """Elementwise lexicographic-min merge of two per-bin frontiers."""
+    a_op, a_emb, a_life, a_cell, a_draw, a_core = a
+    b_op, b_emb, b_life, b_cell, b_draw, b_core = b
+    take_b = (b_op < a_op) \
+        | ((b_op == a_op) & (b_cell < a_cell)) \
+        | ((b_op == a_op) & (b_cell == a_cell) & (b_draw < a_draw))
+    w = jnp.where
+    return (w(take_b, b_op, a_op), w(take_b, b_emb, a_emb),
+            w(take_b, b_life, a_life), w(take_b, b_cell, a_cell),
+            w(take_b, b_draw, a_draw), w(take_b, b_core, a_core))
+
+
+def _eval_tile(emb, kwh, inten, freq, life_days, valid, cell_idx, *,
+               hist_lo, hist_inv, par_lo, par_inv, n_hist, n_pareto):
+    """Shared per-(sub)tile pipeline used verbatim by both paths."""
+    n_cores = emb.shape[1]
+    total, op = _totals(emb, kwh, inten, freq, life_days)
+    out, best_emb, best_op = _cell_reduce(total, op, emb, n_cores)
+    hist = _hist_contrib(out.best_total, valid, hist_lo, hist_inv, n_hist)
+    cand = _pareto_candidate(emb, best_op, life_days, cell_idx,
+                             out.best_core, valid, par_lo, par_inv,
+                             n_pareto)
+    return out, hist, cand
+
+
+# ------------------------------------------------------------ jnp path
+def _sweep_tile_jnp(emb, kwh, inten, freq, life_days, valid, cell_idx,
+                    acc: SweepAcc, **kw):
+    out, hist, cand = _eval_tile(emb, kwh, inten, freq, life_days,
+                                 valid, cell_idx, **kw)
+    par = _pareto_merge(tuple(acc[1:]), cand)
+    return out, SweepAcc(acc.hist + hist, *par)
+
+
+# --------------------------------------------------------- pallas path
+def _sweep_kernel(emb_ref, kwh_ref, inten_ref, freq_ref, life_ref,
+                  valid_ref, cell_ref, hist_in_ref, *par_refs, **kw):
+    """One row tile of the cell axis; every grid step merges its
+    histogram/Pareto contribution into the shared accumulator block."""
+    (pop_in, pemb_in, plife_in, pcell_in, pdraw_in, pcore_in,
+     bt_ref, bc_ref, cnt_ref, sb_ref, mn_ref, mx_ref, se_ref, so_ref,
+     ohist_ref, oop_ref, oemb_ref, olife_ref, ocell_ref, odraw_ref,
+     ocore_ref) = par_refs
+
+    out, hist, cand = _eval_tile(
+        emb_ref[...], kwh_ref[...], inten_ref[...], freq_ref[...],
+        life_ref[...], valid_ref[...], cell_ref[...], **kw)
+    bt_ref[...] = out.best_total
+    bc_ref[...] = out.best_core
+    cnt_ref[...] = out.counts
+    sb_ref[...] = out.sum_best
+    mn_ref[...] = out.min_best
+    mx_ref[...] = out.max_best
+    se_ref[...] = out.sum_emb
+    so_ref[...] = out.sum_op
+
+    @pl.when(pl.program_id(0) == 0)
+    def _seed_accumulators():
+        ohist_ref[...] = hist_in_ref[...]
+        oop_ref[...] = pop_in[...]
+        oemb_ref[...] = pemb_in[...]
+        olife_ref[...] = plife_in[...]
+        ocell_ref[...] = pcell_in[...]
+        odraw_ref[...] = pdraw_in[...]
+        ocore_ref[...] = pcore_in[...]
+
+    ohist_ref[...] = ohist_ref[...] + hist
+    cur = (oop_ref[...], oemb_ref[...], olife_ref[...], ocell_ref[...],
+           odraw_ref[...], ocore_ref[...])
+    mop, memb, mlife, mcell, mdraw, mcore = _pareto_merge(cur, cand)
+    oop_ref[...] = mop
+    oemb_ref[...] = memb
+    olife_ref[...] = mlife
+    ocell_ref[...] = mcell
+    odraw_ref[...] = mdraw
+    ocore_ref[...] = mcore
+
+
+def _sweep_tile_pallas(emb, kwh, inten, freq, life_days, valid,
+                       cell_idx, acc: SweepAcc, row_tile=None,
+                       interpret=None, **kw):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_cells, n_draws = life_days.shape
+    n_cores = emb.shape[1]
+    n_hist = acc.hist.shape[0]
+    n_par = acc.par_op.shape[0]
+    dtype = life_days.dtype
+    rt = _pick_row_tile(n_cells, 128 if row_tile is None else row_tile)
+
+    def row(i):
+        return (i,)
+
+    def row2(i):
+        return (i, 0)
+
+    def whole(i):
+        return (0,)
+
+    outs = pl.pallas_call(
+        functools.partial(_sweep_kernel, **kw),
+        grid=(n_cells // rt,),
+        in_specs=[
+            pl.BlockSpec((rt, n_cores), row2),     # emb
+            pl.BlockSpec((rt, n_cores), row2),     # kwh
+            pl.BlockSpec((rt,), row),              # intensity
+            pl.BlockSpec((rt,), row),              # freq
+            pl.BlockSpec((rt, n_draws), row2),     # lifetimes
+            pl.BlockSpec((rt,), row),              # valid
+            pl.BlockSpec((rt,), row),              # cell idx
+            pl.BlockSpec((n_hist,), whole),        # running hist
+            pl.BlockSpec((n_par,), whole),         # running pareto x6
+            pl.BlockSpec((n_par,), whole),
+            pl.BlockSpec((n_par,), whole),
+            pl.BlockSpec((n_par,), whole),
+            pl.BlockSpec((n_par,), whole),
+            pl.BlockSpec((n_par,), whole),
+        ],
+        out_specs=[
+            pl.BlockSpec((rt, n_draws), row2),     # best_total
+            pl.BlockSpec((rt, n_draws), row2),     # best_core
+            pl.BlockSpec((rt, n_cores), row2),     # counts
+            pl.BlockSpec((rt,), row),              # sum_best
+            pl.BlockSpec((rt,), row),              # min_best
+            pl.BlockSpec((rt,), row),              # max_best
+            pl.BlockSpec((rt,), row),              # sum_emb
+            pl.BlockSpec((rt,), row),              # sum_op
+            pl.BlockSpec((n_hist,), whole),        # hist out
+            pl.BlockSpec((n_par,), whole),         # pareto out x6
+            pl.BlockSpec((n_par,), whole),
+            pl.BlockSpec((n_par,), whole),
+            pl.BlockSpec((n_par,), whole),
+            pl.BlockSpec((n_par,), whole),
+            pl.BlockSpec((n_par,), whole),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_cells, n_draws), dtype),
+            jax.ShapeDtypeStruct((n_cells, n_draws), I32),
+            jax.ShapeDtypeStruct((n_cells, n_cores), I32),
+            jax.ShapeDtypeStruct((n_cells,), dtype),
+            jax.ShapeDtypeStruct((n_cells,), dtype),
+            jax.ShapeDtypeStruct((n_cells,), dtype),
+            jax.ShapeDtypeStruct((n_cells,), dtype),
+            jax.ShapeDtypeStruct((n_cells,), dtype),
+            jax.ShapeDtypeStruct((n_hist,), I32),
+            jax.ShapeDtypeStruct((n_par,), dtype),
+            jax.ShapeDtypeStruct((n_par,), dtype),
+            jax.ShapeDtypeStruct((n_par,), dtype),
+            jax.ShapeDtypeStruct((n_par,), I32),
+            jax.ShapeDtypeStruct((n_par,), I32),
+            jax.ShapeDtypeStruct((n_par,), I32),
+        ],
+        # running accumulators update in place (inputs 7-13 -> outputs
+        # 8-14), the iss_stepper donation/aliasing idiom
+        input_output_aliases={7: 8, 8: 9, 9: 10, 10: 11, 11: 12,
+                              12: 13, 13: 14},
+        interpret=interpret,
+    )(emb, kwh, inten, freq, life_days, valid, cell_idx, acc.hist,
+      acc.par_op, acc.par_emb, acc.par_life, acc.par_cell,
+      acc.par_draw, acc.par_core)
+    return TileOut(*outs[:8]), SweepAcc(*outs[8:])
+
+
+def sweep_tile(emb, kwh, inten, freq, life_days, valid, cell_idx,
+               acc: SweepAcc, *, hist_lo: float, hist_inv: float,
+               par_lo: float, par_inv: float, path: str = "jnp",
+               row_tile: Optional[int] = None,
+               interpret: Optional[bool] = None):
+    """Evaluate-and-reduce one streamed tile of scenario cells.
+
+    Inputs are per-cell rows over the core axis (`emb`/`kwh`, kg CO2e
+    and intensity-1 kWh-rate anchors), per-cell scalars (`inten` kg/kWh,
+    `freq` execs/day), and the tile's Monte Carlo lifetime draws
+    (`life_days`, days, (cells, draws) — pre-divided by the engine so
+    both paths see identical bits). `valid` masks padded cells out of
+    the global accumulators; `cell_idx` is the global cell index used as
+    the deterministic Pareto tie-break key. Returns `(TileOut, SweepAcc)`
+    — per-cell reductions plus the advanced running accumulators.
+
+    `path="jnp"` is the pure-broadcast baseline; `path="pallas"` runs
+    the same pipeline as one kernel gridded over row tiles. The paths
+    are bit-identical for identical inputs (tests/test_sweep.py).
+    """
+    kw = dict(hist_lo=hist_lo, hist_inv=hist_inv, par_lo=par_lo,
+              par_inv=par_inv, n_hist=acc.hist.shape[0],
+              n_pareto=acc.par_op.shape[0])
+    if path == "jnp":
+        return _sweep_tile_jnp(emb, kwh, inten, freq, life_days, valid,
+                               cell_idx, acc, **kw)
+    if path == "pallas":
+        return _sweep_tile_pallas(emb, kwh, inten, freq, life_days,
+                                  valid, cell_idx, acc,
+                                  row_tile=row_tile,
+                                  interpret=interpret, **kw)
+    raise ValueError(f"unknown sweep path {path!r} "
+                     f"(expected 'jnp' or 'pallas')")

@@ -30,7 +30,8 @@ def bench():
 def test_bench_has_all_studies(bench):
     for key in ("streaming_vs_monolithic", "stepper_ab", "fusion_proof",
                 "packed_vs_sequential", "resident_vs_host_refill",
-                "timing_overhead", "flexilint", "device_scaling"):
+                "timing_overhead", "planner_sweep", "flexilint",
+                "device_scaling"):
         assert key in bench, f"BENCH_fleet.json lost the {key} study"
 
 
@@ -69,6 +70,21 @@ def test_timing_overhead_invariant(bench):
     assert to["bit_exact"] is True
     assert float(to["overhead_ratio"]) <= 1.5, to["overhead_ratio"]
     assert float(to["mean_cycles_per_item"]) > 0
+
+
+def test_planner_sweep_invariant(bench):
+    """§9.13: the fused device sweep must price >=1e6 scenarios/s on
+    CPU and hold a >=100x margin over the per-scenario python loop,
+    with the Pallas A/B bit-exact and the float64 point-mass run pinned
+    exactly to the numpy total_grid/selection_map oracles."""
+    ps = bench["planner_sweep"]
+    assert float(ps["scenarios_per_s"]) >= 1e6, ps["scenarios_per_s"]
+    assert float(ps["python_loop_speedup"]) >= 100.0, (
+        ps["python_loop_speedup"])
+    assert ps["bit_exact"] is True
+    assert ps["oracle_exact"] is True
+    assert int(ps["n_scenarios"]) >= 100_000
+    assert int(ps["n_cells"]) * int(ps["draws"]) == int(ps["n_scenarios"])
 
 
 def test_flexilint_invariant(bench):
