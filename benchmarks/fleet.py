@@ -493,6 +493,88 @@ def fleet_timing_overhead(chunk: int = 128, seg_steps: int = 256,
     return rows, derived
 
 
+def fleet_fault_overhead(chunk: int = 128, seg_steps: int = 256,
+                         max_steps: int = 100_000):
+    """Cost of the FlexiFault resilience layer (DESIGN.md §9.14).
+
+    The same skewed stream run four ways: `faults=None` (the pre-§9.14
+    graphs), a rate-0 schedule (injection graph compiled in — must stay
+    bit-exact with faults-off), an unprotected nonzero schedule (which
+    records the silent-data-corruption rate DMR exists to stop), and
+    DMR detect/rollback (shadow pairs + segment re-execution). Gates:
+    rate 0 bit-exact, DMR recovers the fault-free outputs exactly, and
+    the DMR wall clock stays under 2.5x faults-off (two copies per
+    item + retries + the non-donated rollback snapshot; best-of-`reps`
+    after a compile warm-up per mode)."""
+    from repro.flexibits.faults import FaultSpec
+    from repro.fleet import engine
+
+    prog = skew_program()
+    reps = 3
+    n_items = 4 * chunk
+    mems = skew_fleet(prog, n_items, short_iters=48, long_iters=2048,
+                      long_frac=0.1, seed=29)
+
+    def run(**fkw):
+        best = None
+        for i in range(reps + 1):             # first rep is the warm-up
+            group = engine.PackedGroup(
+                code=prog.code, source=array_source(mems),
+                n_items=n_items, max_steps=max_steps, mem_words=32,
+                out_addr=1)
+            res, st = engine.run_packed([group], chunk=chunk,
+                                        seg_steps=seg_steps, **fkw)
+            if i > 0 and (best is None or st.wall_s < best[1].wall_s):
+                best = (res[0], st)
+        return best
+
+    spec = FaultSpec(rate=2e-4, seed=5, targets=("regs", "mem", "pc"))
+    off, off_st = run()
+    zero, _ = run(faults=FaultSpec(rate=0.0, seed=5))
+    for f in ("n_instr", "out", "halted"):
+        np.testing.assert_array_equal(getattr(off, f), getattr(zero, f),
+                                      err_msg=f"rate-0 {f}")
+    sdc, sdc_st = run(faults=spec)
+    corrupted = int(np.sum((sdc.out != off.out)
+                           | (sdc.n_instr != off.n_instr)
+                           | (sdc.halted != off.halted)))
+    dmr, dmr_st = run(faults=spec, redundancy="dmr", max_retries=6)
+    dmr_recovered = bool(np.array_equal(dmr.out, off.out)
+                         and np.array_equal(dmr.n_instr, off.n_instr)
+                         and np.array_equal(dmr.halted, off.halted))
+    overhead = dmr_st.wall_s / max(off_st.wall_s, 1e-12)
+    sdc_rate = corrupted / n_items
+    rows = [
+        ("fleet/faults_off_wall_s", round(off_st.wall_s, 3), "baseline"),
+        ("fleet/faults_on_wall_s", round(sdc_st.wall_s, 3), "-"),
+        ("fleet/dmr_wall_s", round(dmr_st.wall_s, 3), "<=2.5x off"),
+        ("fleet/dmr_overhead", round(overhead, 3), "<=2.5x"),
+        ("fleet/sdc_rate", round(sdc_rate, 4), "unprotected"),
+        ("fleet/dmr_detected", dmr_st.detected, ">0"),
+        ("fleet/dmr_corrected", dmr_st.corrected, "==detected"),
+        ("fleet/dmr_quarantined", dmr_st.quarantined, "-"),
+    ]
+    derived = {
+        "faults_off_wall_s": off_st.wall_s,
+        "faults_on_wall_s": sdc_st.wall_s,
+        "dmr_wall_s": dmr_st.wall_s,
+        "dmr_overhead_ratio": overhead,
+        "rate": spec.rate,
+        "targets": list(spec.targets),
+        "sdc_rate": sdc_rate,
+        "corrupted_items": corrupted,
+        "n_items": n_items,
+        "detected": dmr_st.detected,
+        "corrected": dmr_st.corrected,
+        "quarantined": dmr_st.quarantined,
+        "bit_exact": True,               # rate-0 vs faults-off, asserted
+        "dmr_recovered": dmr_recovered,
+        "target": "rate-0 bit-exact; DMR recovers fault-free outputs "
+                  "at <=2.5x faults-off wall",
+    }
+    return rows, derived
+
+
 def fleet_flexilint(n_inputs: int = 3):
     """FlexiLint certificate study (DESIGN.md §9.11).
 
@@ -658,7 +740,7 @@ def fleet_planner_sweep(draws: int = 64, tile_cells: int = 1024,
     with jax.experimental.enable_x64():
         pres = run_sweep(pspec, path="jnp", tile_cells=5,
                          dtype=np.float64)
-    sq = np.s_[:, :, 0, 0, 0, 0]
+    sq = np.s_[:, :, 0, 0, 0, 0, 0]
     np.testing.assert_array_equal(pres.p50[sq], tg.min(axis=0))
     np.testing.assert_array_equal(pres.min[sq], tg.min(axis=0))
     np.testing.assert_array_equal(pres.best_core[sq], smap)
@@ -915,6 +997,19 @@ def main():
           f"dynamic {to['core']} rows on ({to['mean_cycles_per_item']:.0f} "
           f"measured cycles/item, bit-exact architectural state)")
 
+    fo_rows, fo = fleet_fault_overhead(chunk=max(args.chunk, 64),
+                                       seg_steps=256)
+    bench["fault_overhead"] = fo
+    print(f"\n{'metric':<26} {'value':>14} {'target':>14}")
+    for name, v, t in fo_rows:
+        print(f"{name:<26} {v:>14} {t:>14}")
+    print(f"fault layer (§9.14): DMR {fo['dmr_overhead_ratio']:.3f}x "
+          f"faults-off wall, unprotected SDC rate "
+          f"{fo['sdc_rate']:.1%} at {fo['rate']:g}/instr, "
+          f"{fo['detected']} detected / {fo['corrected']} corrected / "
+          f"{fo['quarantined']} quarantined, recovered outputs "
+          f"bit-exact={fo['dmr_recovered']}")
+
     ps_rows, ps = fleet_planner_sweep()
     bench["planner_sweep"] = ps
     print(f"\n{'metric':<24} {'device sweep':>14} {'python loop':>14}")
@@ -979,6 +1074,13 @@ def main():
     if to["overhead_ratio"] > 1.5:
         failures.append(f"timing overhead target NOT met: "
                         f"{to['overhead_ratio']:.3f}x > 1.5x")
+    if not fo["dmr_recovered"]:
+        failures.append("fault overhead target NOT met: DMR did not "
+                        "recover the fault-free outputs")
+    if fo["dmr_overhead_ratio"] > 2.5:
+        failures.append(f"fault overhead target NOT met: "
+                        f"{fo['dmr_overhead_ratio']:.3f}x > 2.5x "
+                        f"DMR wall vs faults-off")
     if ps["scenarios_per_s"] < 1e6:
         failures.append(f"planner sweep target NOT met: "
                         f"{ps['scenarios_per_s']:.3g} scenarios/s < 1e6")

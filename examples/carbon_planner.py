@@ -78,13 +78,15 @@ def fmt_life(seconds: float) -> str:
 
 
 def share_map(res) -> None:
-    """Fig.-5-with-uncertainty: chosen-core share per (dist, freq),
-    aggregated over every other axis."""
+    """Fig.-5-with-uncertainty: chosen-candidate share per (dist, freq),
+    aggregated over every other axis. Candidates are (core, redundancy)
+    pairs when --redundancies asks for more than 'none' (§9.14)."""
     spec = res.spec
-    names = [c.name for c in spec.cores]
-    share = res.core_share.mean(axis=(2, 3, 4, 5))     # (D, F, C)
-    print(f"\n[selection] core share per (distribution x execs/day), "
-          f"{spec.draws} draws/cell:")
+    names = [c.name if r == "none" else f"{c.name}+{r}"
+             for r in spec.redundancies for c in spec.cores]
+    share = res.core_share.mean(axis=(2, 3, 4, 5, 6))   # (D, F, C*R)
+    print(f"\n[selection] candidate share per (distribution x "
+          f"execs/day), {spec.draws} draws/cell:")
     hdr = " ".join(f"{f:>21g}" for f in spec.execs_per_day)
     print(f"  {'distribution':<32} {hdr}")
     for di, d in enumerate(spec.dists):
@@ -131,11 +133,13 @@ def frontier_table(res) -> None:
             k = nxt[np.argmin(mat[ci][nxt])]
             cross = (f"  ({spec.cores[k].name} overtakes at "
                      f"{fmt_life(mat[ci][k])})")
+        red = "" if r["redundancy"] == "none" \
+            else f", {r['redundancy']}@{r['fault_rate']:g}/instr"
         print(f"  {r['embodied_kg']:>12.3e} {r['operational_kg']:>15.3e} "
               f"{r['core']:>5} {r['workload']:>9} "
               f"{fmt_life(r['lifetime_s']):>7}  "
               f"{r['dist']}, {r['execs_per_day']:g}/day, "
-              f"{r['intensity']:g} kg/kWh{cross}")
+              f"{r['intensity']:g} kg/kWh{red}{cross}")
 
 
 def serving_demo() -> None:
@@ -179,6 +183,11 @@ def main() -> None:
                     help="deployment volumes (comma-separated)")
     ap.add_argument("--timing", default="base",
                     help="timing modes: base,dynamic,wcet,measured")
+    ap.add_argument("--fault-rates", default="0",
+                    help="per-instruction transient fault rates "
+                         "(comma-separated scenario axis, §9.14)")
+    ap.add_argument("--redundancies", default="none",
+                    help="candidate redundancy modes: none,dmr,tmr")
     ap.add_argument("--draws", type=int, default=128,
                     help="Monte Carlo lifetime draws per cell")
     ap.add_argument("--seed", type=int, default=0)
@@ -201,6 +210,8 @@ def main() -> None:
         intensities=[float(i) for i in args.intensities.split(",")],
         volumes=[float(v) for v in args.volumes.split(",")],
         timing=tuple(args.timing.split(",")),
+        fault_rates=[float(f) for f in args.fault_rates.split(",")],
+        redundancies=tuple(args.redundancies.split(",")),
         draws=args.draws, seed=args.seed)
     res = run_sweep(spec, path=args.path)
     rate = res.scenarios_per_s

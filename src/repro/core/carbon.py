@@ -14,8 +14,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Tuple
 
-from repro.flexibits.cycles import (Core, event_cycles, sram_power_mw,
-                                    system_area_mm2, system_power_mw)
+from repro.flexibits.cycles import (Core, event_cycles, sram_area_mm2,
+                                    sram_power_mw, system_area_mm2,
+                                    system_power_mw)
+from repro.flexibits.faults import width_scaled_rate
 
 # ---- energy sources, kg CO2e / kWh ([109] EIA 2023, [118] Wind Vision)
 ENERGY_SOURCES: Dict[str, float] = {
@@ -122,6 +124,125 @@ def total_kg(core: Core, prof: DeviceProfile, *, lifetime_s: float,
     return soc_embodied_kg(core, prof) + operational_kg(
         core, prof, lifetime_s=lifetime_s, execs_per_day=execs_per_day,
         intensity=intensity, clock_hz=clock_hz)
+
+
+# ---- redundancy-aware pricing (DESIGN.md §9.14) ------------------------
+#
+# Spare-area embodied carbon vs re-execution operational carbon: a DMR
+# pair doubles the core + VM SRAM (each copy keeps private architectural
+# state) but shares the LPROM code store; TMR triples them. Operationally
+# DMR runs 2 copies per attempt and re-executes on a digest mismatch
+# (the fleet engine's segment-granular rollback), TMR runs 3 copies and
+# votes with no retry. The unprotected mode pays differently: its faults
+# escape silently (SDC), so delivering the same number of *trusted*
+# results takes 1/(1-p) device-executions — a derating multiplier on
+# embodied AND operational carbon. At fault rate 0 every factor is
+# exactly 1.0 and the unprotected numbers are bitwise unchanged.
+
+REDUNDANCY_MODES: Tuple[str, ...] = ("none", "dmr", "tmr")
+_REDUNDANCY_COPIES: Dict[str, int] = {"none": 1, "dmr": 2, "tmr": 3}
+
+
+def _copies(redundancy: str) -> int:
+    try:
+        return _REDUNDANCY_COPIES[redundancy]
+    except KeyError:
+        raise ValueError(
+            f"redundancy must be one of {REDUNDANCY_MODES}, "
+            f"got {redundancy!r}") from None
+
+
+def fault_escape_p(fault_rate: float, n_instr: float,
+                   width: int = 32) -> float:
+    """Probability at least one fault fires during one execution of
+    `n_instr` retired instructions at per-instruction rate `fault_rate`
+    (width-scaled exactly as the injector: narrower datapaths expose
+    proportionally fewer bits per cycle). Clamped below 1 so the DMR
+    retry series stays summable."""
+    r = width_scaled_rate(fault_rate, width)
+    p = 1.0 - (1.0 - r) ** max(float(n_instr), 0.0)
+    return min(p, 0.99)
+
+
+def redundancy_energy_factor(redundancy: str = "none", *,
+                             fault_rate: float = 0.0,
+                             n_instr: float = 0.0,
+                             width: int = 32) -> float:
+    """Multiplier on per-execution energy under a redundancy mode.
+
+    none -> exactly 1.0 (callers multiplying by it stay bit-identical).
+    dmr  -> 2/(1-p): two copies per attempt; a detected divergence
+            (probability ~ p per attempt, first order in the rate)
+            re-executes the segment, a geometric series summing to
+            1/(1-p) expected attempts.
+    tmr  -> 3.0: three copies, majority vote, no retry.
+    """
+    n = _copies(redundancy)
+    if redundancy != "dmr":
+        return float(n)
+    p = fault_escape_p(fault_rate, n_instr, width)
+    return 2.0 / (1.0 - p)
+
+
+def sdc_derating(redundancy: str = "none", *, fault_rate: float = 0.0,
+                 n_instr: float = 0.0, width: int = 32) -> float:
+    """Per-trusted-result derating multiplier on BOTH embodied and
+    operational carbon. Unprotected executions that fault are silently
+    wrong (SDC), so a fleet must provision 1/(1-p) device-executions
+    per result it can trust. DMR detects and TMR masks single faults;
+    their escape rate is O(p^2) and priced as exactly 1.0 (first
+    order), as is everything at fault rate 0."""
+    _copies(redundancy)                         # validate mode
+    if redundancy != "none" or fault_rate == 0.0:
+        return 1.0
+    return 1.0 / (1.0 - fault_escape_p(fault_rate, n_instr, width))
+
+
+def redundant_embodied_kg(core: Core, prof: DeviceProfile,
+                          redundancy: str = "none") -> float:
+    """SoC embodied carbon with (n-1) spare copies of the core + VM SRAM
+    (the LPROM code store is shared — every copy executes one image).
+    `none` is exactly `soc_embodied_kg`."""
+    n = _copies(redundancy)
+    if n == 1:
+        return soc_embodied_kg(core, prof)
+    spare = (n - 1) * (core.area_mm2 + sram_area_mm2(prof.vm_kb))
+    return soc_embodied_kg(core, prof) + embodied_kg(spare)
+
+
+def redundant_operational_kg(core: Core, prof: DeviceProfile, *,
+                             lifetime_s: float, execs_per_day: float,
+                             redundancy: str = "none",
+                             fault_rate: float = 0.0,
+                             intensity: float = 0.367,
+                             clock_hz: float = 10_000.0,
+                             cycles: Optional[float] = None) -> float:
+    factor = redundancy_energy_factor(
+        redundancy, fault_rate=fault_rate,
+        n_instr=prof.n_one_stage + prof.n_two_stage, width=core.width)
+    return operational_kg(core, prof, lifetime_s=lifetime_s,
+                          execs_per_day=execs_per_day, intensity=intensity,
+                          clock_hz=clock_hz, cycles=cycles) * factor
+
+
+def redundant_total_kg(core: Core, prof: DeviceProfile, *,
+                       lifetime_s: float, execs_per_day: float,
+                       redundancy: str = "none", fault_rate: float = 0.0,
+                       intensity: float = 0.367,
+                       clock_hz: float = 10_000.0) -> float:
+    """`total_kg` over the redundancy axis: (spare-area embodied +
+    re-execution operational) x the SDC derating. `none` at fault rate
+    0 is bitwise `total_kg` (spare area exactly 0, every factor exactly
+    1.0)."""
+    derate = sdc_derating(redundancy, fault_rate=fault_rate,
+                          n_instr=prof.n_one_stage + prof.n_two_stage,
+                          width=core.width)
+    return (redundant_embodied_kg(core, prof, redundancy)
+            + redundant_operational_kg(
+                core, prof, lifetime_s=lifetime_s,
+                execs_per_day=execs_per_day, redundancy=redundancy,
+                fault_rate=fault_rate, intensity=intensity,
+                clock_hz=clock_hz)) * derate
 
 
 def flexible_system_kg(core: Core, prof: DeviceProfile, **kw) -> float:

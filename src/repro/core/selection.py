@@ -10,31 +10,89 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.carbon import DeviceProfile, operational_kg, soc_embodied_kg
+from repro.core.carbon import (REDUNDANCY_MODES, DeviceProfile,
+                               operational_kg, redundancy_energy_factor,
+                               redundant_embodied_kg, sdc_derating,
+                               soc_embodied_kg)
 from repro.flexibits.cycles import CORES, Core
 
 
 def total_grid(core: Union[Core, Sequence[Core]], prof: DeviceProfile,
                lifetimes_s: np.ndarray, execs_per_day: np.ndarray,
                intensity: float = 0.367,
-               clock_hz: float = 10_000.0) -> np.ndarray:
+               clock_hz: float = 10_000.0,
+               redundancy: str = "none",
+               fault_rate: float = 0.0) -> np.ndarray:
     """Total carbon over a (lifetime x frequency) grid.
 
     One core -> (len(lifetimes), len(freqs)); a sequence of cores -> a
     stacked (len(cores), len(lifetimes), len(freqs)) grid in one
     broadcast (the embodied/operational anchors are per-core scalars;
     operational carbon scales linearly in lifetime x freq).
+
+    `redundancy`/`fault_rate` price an N-modular-redundant variant of
+    every core (DESIGN.md §9.14): spare core+SRAM embodied area, the
+    expected re-execution energy factor, and — for unprotected cores at
+    a nonzero rate — the per-trusted-result SDC derating on both
+    embodied and operational carbon. The default (`"none"` at rate 0)
+    is bitwise the unpriced grid: the spare area is exactly 0 and every
+    factor exactly 1.0.
     """
     cores = [core] if isinstance(core, Core) else list(core)
-    emb = np.array([soc_embodied_kg(c, prof) for c in cores])
+    n_instr = prof.n_one_stage + prof.n_two_stage
+    derate = np.array([
+        sdc_derating(redundancy, fault_rate=fault_rate, n_instr=n_instr,
+                     width=c.width) for c in cores])
+    emb = np.array([redundant_embodied_kg(c, prof, redundancy)
+                    for c in cores]) * derate
+    rfac = np.array([
+        redundancy_energy_factor(
+            redundancy, fault_rate=fault_rate, n_instr=n_instr,
+            width=c.width)
+        for c in cores])
     base = np.array([
         operational_kg(c, prof, lifetime_s=86_400.0, execs_per_day=1.0,
                        intensity=intensity, clock_hz=clock_hz)
-        for c in cores])
+        for c in cores]) * rfac * derate
     life_days = np.asarray(lifetimes_s)[:, None] / 86_400.0
     grid = emb[:, None, None] + base[:, None, None] \
         * life_days[None, :, :] * np.asarray(execs_per_day)[None, None, :]
     return grid[0] if isinstance(core, Core) else grid
+
+
+def redundancy_grid(prof: DeviceProfile, lifetimes_s: np.ndarray,
+                    execs_per_day: np.ndarray, *, fault_rate: float,
+                    intensity: float = 0.367,
+                    cores: Optional[Sequence[Core]] = None,
+                    redundancies: Sequence[str] = REDUNDANCY_MODES
+                    ) -> np.ndarray:
+    """Stacked (redundancy, core, lifetime, freq) total-carbon grid —
+    the (R, C) leading axes are the joint design space the planner
+    argmins over."""
+    cores = list(cores or CORES.values())
+    return np.stack([
+        total_grid(cores, prof, lifetimes_s, execs_per_day, intensity,
+                   redundancy=r, fault_rate=fault_rate)
+        for r in redundancies])
+
+
+def redundancy_selection_map(prof: DeviceProfile, lifetimes_s: np.ndarray,
+                             execs_per_day: np.ndarray, *,
+                             fault_rate: float, intensity: float = 0.367,
+                             cores: Optional[Sequence[Core]] = None,
+                             redundancies: Sequence[str] = REDUNDANCY_MODES
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+    """argmin over the joint (redundancy x core) axis: returns a pair of
+    index grids `(redundancy_idx, core_idx)`, each (lifetime, freq).
+    At fault_rate 0 the `core_idx` grid reproduces `selection_map`
+    exactly — spare copies only cost, never pay (pinned by tests)."""
+    cores = list(cores or CORES.values())
+    totals = redundancy_grid(prof, lifetimes_s, execs_per_day,
+                             fault_rate=fault_rate, intensity=intensity,
+                             cores=cores, redundancies=redundancies)
+    flat = totals.reshape(-1, *totals.shape[2:])
+    best = np.argmin(flat, axis=0)
+    return best // len(cores), best % len(cores)
 
 
 def selection_map(prof: DeviceProfile, lifetimes_s: np.ndarray,

@@ -7,7 +7,8 @@ grid per host call; this module answers *distributional* what-ifs at
 interactive rates: scenario tensors over
 
     lifetime distribution x task frequency x grid carbon intensity x
-    deployment volume x workload x timing model        (x core, reduced)
+    deployment volume x workload x timing model x fault rate
+                                     (x core x redundancy, reduced)
 
 evaluated as one fused jitted program, with Monte Carlo lifetime draws
 (point / lognormal / Weibull mixtures) over the paper's 1000X lifetime
@@ -57,7 +58,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.carbon import DeviceProfile, operational_kg, soc_embodied_kg
+from repro.core.carbon import (REDUNDANCY_MODES, DeviceProfile,
+                               operational_kg, redundancy_energy_factor,
+                               redundant_embodied_kg, sdc_derating,
+                               soc_embodied_kg)
 from repro.core.planner import (CHIP_POWER_W, PUE, TPU_EMBODIED_KG,
                                 ServeVariant, VARIANTS,
                                 tokens_per_s_per_chip)
@@ -148,8 +152,17 @@ class LifetimeDist:
 class SweepSpec:
     """One scenario-sweep request. Cell axes in linear-index order
     (slowest to fastest): dists, execs_per_day, intensities, volumes,
-    workloads, timing. Everything is hashable so compiled sweep steps
-    cache across calls (`fleet/engine.py`'s lru-cached runner idiom)."""
+    workloads, timing, fault_rates. Everything is hashable so compiled
+    sweep steps cache across calls (`fleet/engine.py`'s lru-cached
+    runner idiom).
+
+    `fault_rates` (§9.14) is a scenario axis like intensity: each cell
+    prices its candidates under one per-instruction transient-fault
+    rate. `redundancies` expands the *reduced candidate* axis instead —
+    the kernel argmins over core x redundancy jointly, so each cell
+    reports the carbon-optimal (core, redundancy) pair. The defaults
+    (one rate of 0.0, `("none",)`) leave every table and reduction
+    bitwise identical to a redundancy-free sweep."""
     workloads: Tuple[str, ...]
     profiles: Tuple[DeviceProfile, ...]          # parallel to workloads
     dists: Tuple[LifetimeDist, ...]
@@ -158,6 +171,8 @@ class SweepSpec:
     volumes: Tuple[float, ...] = (1.0,)
     cores: Tuple[Core, ...] = tuple(CORES.values())
     timing: Tuple[str, ...] = ("base",)
+    fault_rates: Tuple[float, ...] = (0.0,)
+    redundancies: Tuple[str, ...] = ("none",)
     draws: int = 64
     seed: int = 0
     clock_hz: float = CLOCK_HZ
@@ -168,10 +183,17 @@ class SweepSpec:
     measured_cycles: Optional[Tuple[Tuple[float, ...], ...]] = None
 
     @property
-    def axis_sizes(self) -> Tuple[int, int, int, int, int, int]:
+    def axis_sizes(self) -> Tuple[int, int, int, int, int, int, int]:
         return (len(self.dists), len(self.execs_per_day),
                 len(self.intensities), len(self.volumes),
-                len(self.workloads), len(self.timing))
+                len(self.workloads), len(self.timing),
+                len(self.fault_rates))
+
+    @property
+    def n_candidates(self) -> int:
+        """Width of the reduced axis: core x redundancy pairs. Joint
+        candidate j decodes as (redundancy j // C, core j % C)."""
+        return len(self.cores) * len(self.redundancies)
 
     @property
     def n_cells(self) -> int:
@@ -186,12 +208,14 @@ class SweepSpec:
 
     def validate(self) -> None:
         names = ("dists", "execs_per_day", "intensities", "volumes",
-                 "workloads", "timing")
+                 "workloads", "timing", "fault_rates")
         for name, size in zip(names, self.axis_sizes):
             if size == 0:
                 raise ValueError(f"SweepSpec.{name} is empty")
         if not self.cores:
             raise ValueError("SweepSpec.cores is empty")
+        if not self.redundancies:
+            raise ValueError("SweepSpec.redundancies is empty")
         if len(self.profiles) != len(self.workloads):
             raise ValueError("profiles must parallel workloads")
         if self.draws < 1:
@@ -200,6 +224,13 @@ class SweepSpec:
             if t not in TIMING_MODES:
                 raise ValueError(f"unknown timing mode {t!r}; "
                                  f"expected one of {TIMING_MODES}")
+        for r in self.redundancies:
+            if r not in REDUNDANCY_MODES:
+                raise ValueError(f"unknown redundancy mode {r!r}; "
+                                 f"expected one of {REDUNDANCY_MODES}")
+        for fr in self.fault_rates:
+            if not (fr >= 0.0):
+                raise ValueError(f"fault rates must be >= 0, got {fr!r}")
         if "wcet" in self.timing and self.wcet_cycles is None:
             raise ValueError("timing mode 'wcet' needs wcet_cycles "
                              "(see workload_spec)")
@@ -207,8 +238,11 @@ class SweepSpec:
             raise ValueError("timing mode 'measured' needs "
                              "measured_cycles")
 
-    def decode_cell(self, idx: int) -> Tuple[int, int, int, int, int, int]:
-        D, F, I, V, W, T = self.axis_sizes
+    def decode_cell(self, idx: int
+                    ) -> Tuple[int, int, int, int, int, int, int]:
+        D, F, I, V, W, T, FR = self.axis_sizes
+        fri = idx % FR
+        idx //= FR
         ti = idx % T
         idx //= T
         wi = idx % W
@@ -217,7 +251,7 @@ class SweepSpec:
         idx //= V
         ii = idx % I
         idx //= I
-        return (idx // F, idx % F, ii, vi, wi, ti)
+        return (idx // F, idx % F, ii, vi, wi, ti, fri)
 
 
 # --------------------------------------------------------------- tables
@@ -225,15 +259,20 @@ class SweepSpec:
 class SweepTables:
     """Host-side float64 anchors the device sweep consumes.
 
-    `emb[w, c]` is `carbon.soc_embodied_kg`; `kwh[t, w, c]` is the
-    intensity-1 daily-exec operational anchor — literally
-    `operational_kg(core, prof, lifetime_s=86400, execs_per_day=1,
-    intensity=1.0)` per timing mode, so the device total
-    ``emb + ((kwh * I) * life_days) * freq`` retraces the numpy oracle
-    `selection.total_grid` op for op.
+    The reduced candidate axis is core x redundancy (width
+    `spec.n_candidates`, joint index j = r * C + c). `emb[fr, w, j]` is
+    `carbon.redundant_embodied_kg` times the SDC derating for
+    (redundancy, fault rate); `kwh[t, fr, w, j]` is the intensity-1
+    daily-exec operational anchor — literally `operational_kg(core,
+    prof, lifetime_s=86400, execs_per_day=1, intensity=1.0)` per timing
+    mode, times `carbon.redundancy_energy_factor` and the same derating
+    — so the device total ``emb + ((kwh * I) * life_days) * freq``
+    retraces the numpy oracle `selection.total_grid` op for op. At the
+    default `("none",)` / rate-0 axes every factor is exactly 1.0 and
+    the tables are bitwise the redundancy-free ones.
     """
-    emb: np.ndarray            # (W, C)
-    kwh: np.ndarray            # (T, W, C)
+    emb: np.ndarray            # (FR, W, C*R)
+    kwh: np.ndarray            # (T, FR, W, C*R)
     kind: np.ndarray           # (D, K) int32
     p1: np.ndarray             # (D, K)
     p2: np.ndarray             # (D, K)
@@ -269,18 +308,33 @@ def build_tables(spec: SweepSpec, n_hist: int = 64,
                  n_pareto: int = 32) -> SweepTables:
     spec.validate()
     W, C = len(spec.workloads), len(spec.cores)
-    T = len(spec.timing)
-    emb = np.empty((W, C))
-    kwh = np.empty((T, W, C))
+    T, FR, R = len(spec.timing), len(spec.fault_rates), \
+        len(spec.redundancies)
+    emb = np.empty((FR, W, C * R))
+    kwh = np.empty((T, FR, W, C * R))
     for wi, prof in enumerate(spec.profiles):
+        n_instr = prof.n_one_stage + prof.n_two_stage
         for ci, core in enumerate(spec.cores):
-            emb[wi, ci] = soc_embodied_kg(core, prof)
+            base = np.empty(T)
             for ti, mode in enumerate(spec.timing):
-                kwh[ti, wi, ci] = _mode_kwh(
+                base[ti] = _mode_kwh(
                     mode, core, prof, spec.clock_hz,
                     spec.wcet_cycles[wi][ci] if spec.wcet_cycles else None,
                     spec.measured_cycles[wi][ci]
                     if spec.measured_cycles else None)
+            for ri, red in enumerate(spec.redundancies):
+                j = ri * C + ci
+                remb = redundant_embodied_kg(core, prof, red)
+                for fri, rate in enumerate(spec.fault_rates):
+                    rfac = redundancy_energy_factor(
+                        red, fault_rate=rate, n_instr=n_instr,
+                        width=core.width)
+                    derate = sdc_derating(red, fault_rate=rate,
+                                          n_instr=n_instr,
+                                          width=core.width)
+                    # host float64 multiplies; 1.0 is exact identity
+                    emb[fri, wi, j] = remb * derate
+                    kwh[:, fri, wi, j] = base * rfac * derate
 
     K = max(len(d.comps) for d in spec.dists)
     D = len(spec.dists)
@@ -355,7 +409,7 @@ def _sweep_step(spec: SweepSpec, tile_cells: int, path: str,
     same spec skip retracing. Returns (jitted step, tables)."""
     tables = build_tables(spec, n_hist, n_pareto)
     dtype = jnp.dtype(dtype_str)
-    D, F, I, V, W, T = spec.axis_sizes
+    D, F, I, V, W, T, FR = spec.axis_sizes
     n_cells = spec.n_cells
     draws = spec.draws
     emb_d = jnp.asarray(tables.emb, dtype)
@@ -375,6 +429,8 @@ def _sweep_step(spec: SweepSpec, tile_cells: int, path: str,
         cell = start + jnp.arange(tile_cells, dtype=I32)
         valid = cell < n_cells
         c = jnp.where(valid, cell, n_cells - 1)
+        fri = c % FR
+        c = c // FR
         ti = c % T
         r = c // T
         wi = r % W
@@ -394,7 +450,8 @@ def _sweep_step(spec: SweepSpec, tile_cells: int, path: str,
         life_days = life / lax.optimization_barrier(
             jnp.asarray(DAY_S, dtype))
         out, acc = csk.sweep_tile(
-            emb_d[wi], kwh_d[ti, wi], inten_d[ii], freq_d[fi], life_days,
+            emb_d[fri, wi], kwh_d[ti, fri, wi], inten_d[ii], freq_d[fi],
+            life_days,
             valid, cell, acc, hist_lo=tables.hist_lo,
             hist_inv=tables.hist_inv, par_lo=tables.par_lo,
             par_inv=tables.par_inv, path=path, interpret=interpret)
@@ -446,7 +503,8 @@ def _merge_pareto_host(a: Optional[Dict[str, np.ndarray]],
 @dataclasses.dataclass
 class SweepResult:
     """Streamed sweep summaries. Per-cell arrays have the spec's
-    (D, F, I, V, W, T) axis shape; `counts` appends the core axis."""
+    (D, F, I, V, W, T, FR) axis shape; `counts` appends the joint
+    core x redundancy candidate axis."""
     spec: SweepSpec
     path: str
     mean: np.ndarray
@@ -458,7 +516,7 @@ class SweepResult:
     mean_emb: np.ndarray
     mean_op: np.ndarray
     fleet_mean: np.ndarray
-    counts: np.ndarray           # (..., C) chosen-core draws per cell
+    counts: np.ndarray           # (..., C*R) chosen-candidate draws/cell
     hist: np.ndarray             # (B,) int64 best-total histogram
     hist_edges: np.ndarray       # (B+1,) kg CO2e bin edges
     pareto: Dict[str, np.ndarray]
@@ -473,8 +531,15 @@ class SweepResult:
 
     @property
     def best_core(self) -> np.ndarray:
-        """Modal chosen core per cell (first max on draw-count ties)."""
-        return np.argmax(self.counts, axis=-1)
+        """Modal chosen core per cell (first max on draw-count ties);
+        with a redundancy axis, the core half of the joint winner."""
+        return np.argmax(self.counts, axis=-1) % len(self.spec.cores)
+
+    @property
+    def best_redundancy(self) -> np.ndarray:
+        """Redundancy half of the modal joint (core, redundancy) winner
+        — index into `spec.redundancies` (all 0 for default specs)."""
+        return np.argmax(self.counts, axis=-1) // len(self.spec.cores)
 
     def quantile(self, q: float) -> float:
         """Whole-sweep best-total quantile from the streamed histogram
@@ -495,19 +560,23 @@ class SweepResult:
                 continue                      # dominated by a smaller-emb bin
             best_op = op
             cell = int(self.pareto["cell"][j])
-            di, fi, ii, vi, wi, ti = self.spec.decode_cell(cell)
+            di, fi, ii, vi, wi, ti, fri = self.spec.decode_cell(cell)
+            cand = int(self.pareto["core"][j])
+            n_cores = len(self.spec.cores)
             rows.append({
                 "embodied_kg": float(self.pareto["emb"][j]),
                 "operational_kg": op,
                 "total_kg": float(self.pareto["emb"][j] + op),
                 "lifetime_s": float(self.pareto["life"][j] * DAY_S),
-                "core": self.spec.cores[int(self.pareto["core"][j])].name,
+                "core": self.spec.cores[cand % n_cores].name,
+                "redundancy": self.spec.redundancies[cand // n_cores],
                 "workload": self.spec.workloads[wi],
                 "dist": self.spec.dists[di].name,
                 "execs_per_day": self.spec.execs_per_day[fi],
                 "intensity": self.spec.intensities[ii],
                 "volume": self.spec.volumes[vi],
                 "timing": self.spec.timing[ti],
+                "fault_rate": self.spec.fault_rates[fri],
                 "cell": cell,
                 "draw": int(self.pareto["draw"][j]),
             })
@@ -538,7 +607,7 @@ def run_sweep(spec: SweepSpec, *, path: str = "jnp",
     tile = max(1, min(tile_cells, n_cells))
     step, tables = _sweep_step(spec, tile, path, dtype.name, n_hist,
                                n_pareto, interpret)
-    C = len(spec.cores)
+    C = spec.n_candidates
     fields = ("mean", "p50", "p90", "p99", "min", "max", "mean_emb",
               "mean_op", "fleet_mean")
     host = {f: np.empty(n_cells, dtype) for f in fields}
@@ -584,6 +653,8 @@ def workload_spec(keys: Optional[Sequence[str]] = None, *,
                   volumes: Sequence[float] = (1.0,),
                   cores: Optional[Sequence[Core]] = None,
                   timing: Sequence[str] = ("base",),
+                  fault_rates: Sequence[float] = (0.0,),
+                  redundancies: Sequence[str] = ("none",),
                   draws: int = 64, seed: int = 0, n_profile: int = 3,
                   measured_cycles: Optional[Mapping[str, Mapping[
                       str, float]]] = None) -> SweepSpec:
@@ -642,7 +713,10 @@ def workload_spec(keys: Optional[Sequence[str]] = None, *,
         execs_per_day=tuple(float(f) for f in execs_per_day),
         intensities=tuple(float(i) for i in intensities),
         volumes=tuple(float(v) for v in volumes), cores=cores,
-        timing=timing, draws=draws, seed=seed,
+        timing=timing,
+        fault_rates=tuple(float(f) for f in fault_rates),
+        redundancies=tuple(redundancies),
+        draws=draws, seed=seed,
         wcet_cycles=tuple(wcet_rows) if wcet_rows else None,
         measured_cycles=meas)
 

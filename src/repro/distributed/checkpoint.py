@@ -1,7 +1,15 @@
 """Fault-tolerant checkpointing: atomic write-temp-then-rename, keep-N,
 auto-resume. Pytrees are flattened to named .npy entries inside an .npz;
 restore reshards onto whatever mesh/shardings the restart supplies (the
-elastic path — see elastic.py and tests/test_fault_tolerance.py)."""
+elastic path — see elastic.py and tests/test_fault_tolerance.py).
+
+Integrity (DESIGN.md §9.14): every leaf's bytes are CRC32-summed at save
+time into meta.json; restore verifies each leaf and raises
+`CheckpointCorrupt` naming the file and leaf on any mismatch (npz members
+are STORED uncompressed, so a silent bit-flip loads cleanly — only the
+checksum catches it). Auto-resume (`step=None`) walks checkpoints newest
+first and restores the newest *intact* one, so one torn or flipped write
+never strands a resumable stream."""
 from __future__ import annotations
 
 import json
@@ -9,12 +17,28 @@ import os
 import re
 import shutil
 import tempfile
+import zlib
 from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed integrity verification: truncated archive,
+    unreadable metadata, or a leaf whose bytes no longer match the CRC32
+    recorded at save time. Carries the offending `path` and, for
+    leaf-level damage, the flattened `leaf` key."""
+
+    def __init__(self, path: str, leaf: Optional[str] = None,
+                 detail: str = ""):
+        self.path = path
+        self.leaf = leaf
+        where = path + (f", leaf {leaf!r}" if leaf else "")
+        super().__init__(f"corrupt checkpoint: {where}"
+                         + (f" ({detail})" if detail else ""))
 
 
 import ml_dtypes
@@ -59,12 +83,14 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten(tree)
     arrays, dtypes = _encode(flat)
+    crcs = {k: zlib.crc32(np.ascontiguousarray(v).tobytes())
+            for k, v in arrays.items()}
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
     try:
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump({"step": step, "n_arrays": len(flat),
-                       "ext_dtypes": dtypes}, f)
+                       "ext_dtypes": dtypes, "crc32": crcs}, f)
         final = os.path.join(ckpt_dir, f"step_{step}")
         if os.path.exists(final):
             shutil.rmtree(final)
@@ -99,22 +125,76 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def verify(ckpt_dir: str, step: int) -> Tuple[dict, dict]:
+    """Load one checkpoint fully into memory and verify every leaf's
+    CRC32 against meta.json. Returns `(arrays, ext_dtypes)`; raises
+    `CheckpointCorrupt` (naming file + leaf) on truncation, unreadable
+    metadata, a missing leaf, or a byte-level mismatch. Checkpoints
+    written before the checksum field restore unverified."""
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    meta_path = os.path.join(d, "meta.json")
+    npz_path = os.path.join(d, "arrays.npz")
+    try:
+        with open(meta_path) as f:
+            meta = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorrupt(meta_path, detail=str(e)) from None
+    try:
+        data = np.load(npz_path)
+    except Exception as e:       # zipfile/np errors on torn writes
+        raise CheckpointCorrupt(npz_path, detail=str(e)) from None
+    arrays = {}
+    try:
+        for k in list(data.files):
+            try:                 # member-wise: zip-level CRC failures
+                arrays[k] = data[k]     # get attributed to their leaf
+            except Exception as e:
+                raise CheckpointCorrupt(npz_path, leaf=k,
+                                        detail=str(e)) from None
+    finally:
+        data.close()
+    for key, want in meta.get("crc32", {}).items():
+        if key not in arrays:
+            raise CheckpointCorrupt(npz_path, leaf=key,
+                                    detail="leaf missing from archive")
+        got = zlib.crc32(np.ascontiguousarray(arrays[key]).tobytes())
+        if got != want:
+            raise CheckpointCorrupt(
+                npz_path, leaf=key,
+                detail=f"crc32 {got:#010x} != recorded {want:#010x}")
+    return arrays, meta.get("ext_dtypes", {})
+
+
 def restore(ckpt_dir: str, tree_like: Any, *, step: Optional[int] = None,
             shardings: Any = None) -> Tuple[Any, int]:
     """Restore into the structure of `tree_like`. With `shardings`
     (a matching pytree of NamedSharding), arrays are placed sharded —
-    this is how an elastic restart reshards onto a different mesh."""
+    this is how an elastic restart reshards onto a different mesh.
+
+    With `step=None` (auto-resume) the newest *intact* checkpoint wins:
+    corrupt ones (failed `verify`) are skipped newest-first, and the
+    last `CheckpointCorrupt` is re-raised only when every step is
+    damaged. An explicit `step` never falls back — damage raises."""
     if step is None:
-        step = latest_step(ckpt_dir)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
-    data = np.load(os.path.join(ckpt_dir, f"step_{step}", "arrays.npz"))
-    with open(os.path.join(ckpt_dir, f"step_{step}", "meta.json")) as f:
-        dtypes = json.load(f).get("ext_dtypes", {})
+        steps = sorted(all_steps(ckpt_dir), reverse=True)
+        if not steps:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+        last_err: Optional[CheckpointCorrupt] = None
+        for s in steps:
+            try:
+                data, dtypes = verify(ckpt_dir, s)
+                step = s
+                break
+            except CheckpointCorrupt as e:
+                last_err = e
+        else:
+            raise last_err
+    else:
+        data, dtypes = verify(ckpt_dir, step)
     flat_keys = list(_flatten(tree_like))
-    assert set(flat_keys) == set(data.files), (
+    assert set(flat_keys) == set(data), (
         "checkpoint/tree structure mismatch:",
-        set(flat_keys) ^ set(data.files))
+        set(flat_keys) ^ set(data))
     leaves_paths = jax.tree_util.tree_flatten_with_path(tree_like)
     treedef = leaves_paths[1]
     sh_leaves = (jax.tree.leaves(shardings) if shardings is not None

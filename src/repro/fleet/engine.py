@@ -64,12 +64,15 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.distributed import checkpoint as dckpt
 from repro.distributed import sharding as dsharding
 from repro.flexibench.base import Workload
+from repro.flexibits import faults as flexifault
 from repro.flexibits import iss
 from repro.flexibits.cycles import N_COST
 from repro.kernels import iss_stepper
 
 STEPPERS = ("branchless", "pallas", "switch")
 REFILLS = ("device", "host")   # resident on-device refill (§9.9) vs A/B
+REDUNDANCY = ("none", "dmr")   # executed redundancy modes (§9.14; the
+                               # carbon planner additionally PRICES tmr)
 
 # resident-runtime safety bounds (see run_packed): past either, the
 # engine falls back to the host-refill loop rather than risking int32
@@ -161,6 +164,9 @@ class _Prefetcher:
         self._buf: Optional[np.ndarray] = None
         self._off = 0
         self._fut = None
+        self._fut_span = (0, 0)   # [start, start+count) of the fetch
+        self._err: Optional[BaseException] = None
+        self._closed = False
         self._ex = concurrent.futures.ThreadPoolExecutor(max_workers=1) \
             if background else None
         if self._ex is not None:
@@ -171,9 +177,24 @@ class _Prefetcher:
         if count > 0:
             start = self._cursor
             self._cursor += count
+            self._fut_span = (start, count)
             self._fut = self._ex.submit(self._source, start, count)
         else:
             self._fut = None
+
+    def _fetch_failed(self, exc: BaseException, start: int,
+                      count: int) -> RuntimeError:
+        """Wrap a source exception with the stream context the bare
+        traceback lacks (which source, which item span, where the
+        engine's cursor was) and latch it: the background worker's
+        error must surface on the *next* take(), never vanish with
+        the future, and every later take() must keep failing."""
+        self._err = exc
+        self._fut = None
+        return RuntimeError(
+            f"prefetch source {self._source!r} raised while fetching "
+            f"items [{start}:{start + count}) of {self._n} (stream "
+            f"cursor {self._taken}): {exc!r}")
 
     def take(self, count: int) -> np.ndarray:
         """Next `count` item memories, in stream order.
@@ -182,6 +203,15 @@ class _Prefetcher:
         full cursor state — "exhausted" alone is undebuggable when a
         plan/group/source disagrees with the engine about `n_items`.
         """
+        if self._closed:
+            raise RuntimeError("prefetcher is closed: take() after "
+                               "close() at stream cursor "
+                               f"{self._taken}, n_items={self._n}")
+        if self._err is not None:
+            raise RuntimeError(
+                f"prefetch source {self._source!r} already failed "
+                f"(stream cursor {self._taken}, n_items={self._n}); "
+                f"the stream cannot continue") from self._err
         if self._taken + count > self._n:
             raise RuntimeError(
                 f"source stream exhausted: requested {count} item(s) at "
@@ -192,7 +222,10 @@ class _Prefetcher:
         if self._ex is None:
             start = self._cursor
             self._cursor += count
-            return np.asarray(self._source(start, count), np.int32)
+            try:
+                return np.asarray(self._source(start, count), np.int32)
+            except Exception as e:
+                raise self._fetch_failed(e, start, count) from e
         parts = []
         while count > 0:
             if self._buf is None or self._off >= len(self._buf):
@@ -201,7 +234,10 @@ class _Prefetcher:
                         f"source stream exhausted: no fetch in flight at "
                         f"stream cursor {self._taken}, request cursor "
                         f"{self._cursor}, n_items={self._n}")
-                self._buf = np.asarray(self._fut.result(), np.int32)
+                try:
+                    self._buf = np.asarray(self._fut.result(), np.int32)
+                except Exception as e:
+                    raise self._fetch_failed(e, *self._fut_span) from e
                 self._off = 0
                 self._submit()          # refill the second buffer now
             k = min(count, len(self._buf) - self._off)
@@ -212,6 +248,8 @@ class _Prefetcher:
 
     def close(self):
         """Cancel/drain the in-flight fetch and join the worker.
+        Idempotent — the engine closes on every exit path (including
+        unwinding from an exception that may itself have closed).
 
         `shutdown(wait=False)` would leave a running background fetch
         alive past close — a leaked non-daemon thread still calling the
@@ -219,6 +257,9 @@ class _Prefetcher:
         future if it has not started; if it is already running, drain it
         (`wait=True`) so the source is never invoked after close().
         """
+        if self._closed:
+            return
+        self._closed = True
         if self._ex is not None:
             self._ex.shutdown(wait=True, cancel_futures=True)
             self._fut = None
@@ -307,7 +348,10 @@ def run_stream(code: np.ndarray, source: Source, *, n_items: int,
                subset: Optional[frozenset] = None,
                prefetch: bool = True, refill: str = "device",
                adaptive: bool = False,
-               cost: Optional[np.ndarray] = None) -> FleetResult:
+               cost: Optional[np.ndarray] = None,
+               faults: Optional[flexifault.FaultSpec] = None,
+               redundancy: str = "none",
+               max_retries: int = 2) -> FleetResult:
     """Stream `n_items` memory images from `source` through `chunk` lanes.
 
     Returns per-item scalars in item order. With `keep_state=True` the
@@ -349,7 +393,8 @@ def run_stream(code: np.ndarray, source: Source, *, n_items: int,
                      out_addr=out_addr, cost=cost)],
         chunk=chunk, seg_steps=seg_steps, keep_state=keep_state,
         mesh=mesh, stepper=stepper, subset=subset, prefetch=prefetch,
-        refill=refill, adaptive=adaptive)
+        refill=refill, adaptive=adaptive, faults=faults,
+        redundancy=redundancy, max_retries=max_retries)
     return dataclasses.replace(
         results[0], lane_steps=stats.lane_steps,
         n_segments=stats.n_segments, chunk=stats.chunk,
@@ -434,6 +479,17 @@ class PackedStats:
     n_shards: int = 1             # lane-pool shards (§9.12)
     shard_retired: tuple = ()     # items retired per shard (resident)
     shard_lane_steps: tuple = ()  # lane-step slots per shard (resident)
+    # resilience counters (§9.14) — populated by fault-injection / DMR
+    # runs. `sdc` (silent data corruption) is structurally zero here:
+    # only a golden fault-free cross-check can count corruptions the
+    # detector missed (that measurement lives in
+    # `flexibits.faults.measure_rates`); the field exists so callers
+    # that DO hold a golden run can fill in one complete record.
+    redundancy: str = "none"
+    detected: int = 0             # DMR digest mismatches observed
+    corrected: int = 0            # pair rollbacks that re-executed
+    quarantined: int = 0          # pairs permanently retired from pool
+    sdc: int = 0
 
 
 class _SyncClock:
@@ -584,7 +640,9 @@ def _packed_state_specs(mesh: Mesh, mem_words: int):
 @functools.lru_cache(maxsize=None)
 def _packed_segment_runner(stepper: str, chunk: int, seg_steps: int,
                            mem_words: int, n_progs: int, bank_width: int,
-                           mesh: Optional[Mesh], subset, timing: bool):
+                           mesh: Optional[Mesh], subset, timing: bool,
+                           faults: Optional[flexifault.FaultSpec] = None,
+                           donate_state: bool = True):
     """Compiled packed segment runner, cached per engine configuration.
 
     The bank, per-program code lengths, per-program memory bounds, and
@@ -595,31 +653,66 @@ def _packed_segment_runner(stepper: str, chunk: int, seg_steps: int,
     cache key at all — one compiled runner serves every heterogeneous
     budget mix. `timing` is static: with it off the cost operand is a
     dead argument and the compiled segment is the cycles-off graph.
+    `faults` (§9.14) is static too — with it None the runner keeps the
+    pre-FlexiFault signature and graph; with a schedule on, the runner
+    takes the per-lane `lane_key`/`epoch` arrays as two extra traced
+    inputs ahead of the donated state.
     """
-    def seg(bank, code_len, mem_len, cost, state):
+    def seg_body(bank, code_len, mem_len, cost, state,
+                 lane_key=None, epoch=None):
         cr = cost if timing else None
         if stepper == "switch":
-            lanes = jax.vmap(
-                lambda p, m, l: iss.run_segment_banked(
-                    bank, code_len, p, m, l, seg_steps, mem_len, cr)
-            )(state.prog_id, state.max_steps, state.lanes)
+            if faults is None:
+                lanes = jax.vmap(
+                    lambda p, m, l: iss.run_segment_banked(
+                        bank, code_len, p, m, l, seg_steps, mem_len, cr)
+                )(state.prog_id, state.max_steps, state.lanes)
+            else:
+                lanes = jax.vmap(
+                    lambda p, m, k, e, l: iss.run_segment_banked(
+                        bank, code_len, p, m, l, seg_steps, mem_len, cr,
+                        faults=faults, lane_key=k, epoch=e)
+                )(state.prog_id, state.max_steps, lane_key, epoch,
+                  state.lanes)
             return iss.PackedState(lanes=lanes, prog_id=state.prog_id,
                                    max_steps=state.max_steps)
         if stepper == "pallas":
             return iss_stepper.iss_segment_banked(
                 bank, code_len, state, seg_steps=seg_steps, subset=subset,
-                mem_len=mem_len, cost=cr)
+                mem_len=mem_len, cost=cr, faults=faults,
+                lane_key=lane_key, epoch=epoch)
         return iss.run_segment_lanes_banked(bank, code_len, state,
                                             seg_steps, subset, mem_len,
-                                            cr)
+                                            cr, faults=faults,
+                                            lane_key=lane_key,
+                                            epoch=epoch)
+
+    if faults is None:
+        def seg(bank, code_len, mem_len, cost, state):
+            return seg_body(bank, code_len, mem_len, cost, state)
+        donate = (4,)
+        extra_specs = ()
+    else:
+        def seg(bank, code_len, mem_len, cost, lane_key, epoch, state):
+            return seg_body(bank, code_len, mem_len, cost, state,
+                            lane_key=lane_key, epoch=epoch)
+        donate = (6,)
+        extra_specs = None  # filled below (needs the mesh axes)
+    if not donate_state:
+        # DMR holds the boundary state as its rollback snapshot while
+        # the segment runs — the input pool must survive the call
+        donate = ()
 
     if mesh is None:
-        return jax.jit(seg, donate_argnums=(4,))
+        return jax.jit(seg, donate_argnums=donate)
     specs = _packed_state_specs(mesh, mem_words)
     bspecs = dsharding.bank_specs(mesh, (0, 0, 0, 0))
-    fn = shard_map(seg, mesh=mesh, in_specs=(*bspecs, specs),
+    if faults is not None:
+        lane = P(tuple(mesh.axis_names))
+        extra_specs = (lane, lane)
+    fn = shard_map(seg, mesh=mesh, in_specs=(*bspecs, *extra_specs, specs),
                    out_specs=specs, check_rep=False)
-    return jax.jit(fn, donate_argnums=(4,))
+    return jax.jit(fn, donate_argnums=donate)
 
 
 class ResidentAcc(NamedTuple):
@@ -767,7 +860,8 @@ def _abstract_acc(keep_state: bool) -> ResidentAcc:
 @functools.lru_cache(maxsize=None)
 def _resident_refill_runner(mesh: Optional[Mesh], mem_words: int,
                             n_groups: int, keep_state: bool,
-                            use_pallas: bool):
+                            use_pallas: bool, faults_on: bool = False,
+                            dmr: bool = False, max_retries: int = 0):
     """Compiled retire+refill op, shard-local end to end (§9.9/§9.12).
 
     One donated op replaces the host path's demux->rebuild->device_put
@@ -797,19 +891,10 @@ def _resident_refill_runner(mesh: Optional[Mesh], mem_words: int,
     reads per segment, fetched asynchronously while the next segment
     executes.
     """
-    def refill(state, item_slot, acc, staged_mems, staged_prog,
-               staged_ms, staged_slot, n_staged, out_addr):
+    def scatter_retired(state, item_slot, acc, out_addr, retired):
+        """Scatter finished lanes' tallies at their (shard-local) item
+        rows (shared by all three loop variants)."""
         lanes = state.lanes
-        active = item_slot >= 0
-        retired = iss.retire_mask(state, item_slot)
-
-        # ---- accounting of the segment that just ran (host-free)
-        delta = jnp.max(lanes.n_instr - acc.prev_instr, initial=0)
-        act_g = jnp.zeros((n_groups,), iss.I32).at[state.prog_id].add(
-            active.astype(iss.I32))
-
-        # ---- retire: scatter finished lanes' tallies at their
-        # (shard-local) item rows
         cap = acc.n_instr.shape[0]
         slot = jnp.where(retired, item_slot, cap)   # OOB rows drop
 
@@ -822,7 +907,7 @@ def _resident_refill_runner(mesh: Optional[Mesh], mem_words: int,
             lanes.mem, jnp.clip(col, 0, lanes.mem.shape[1] - 1)[:, None],
             axis=1)[:, 0]
         out_val = jnp.where(col >= 0, out_val, 0)
-        acc = acc._replace(
+        return acc._replace(
             n_instr=put(acc.n_instr, lanes.n_instr),
             n_two=put(acc.n_two, lanes.n_two_stage),
             n_cycles=put(acc.n_cycles, lanes.n_cycles),
@@ -834,6 +919,19 @@ def _resident_refill_runner(mesh: Optional[Mesh], mem_words: int,
             regs=put(acc.regs, lanes.regs),
             pc=put(acc.pc, lanes.pc),
             mix_items=put(acc.mix_items, lanes.mix))
+
+    def refill(state, item_slot, acc, staged_mems, staged_prog,
+               staged_ms, staged_slot, n_staged, out_addr):
+        lanes = state.lanes
+        active = item_slot >= 0
+        retired = iss.retire_mask(state, item_slot)
+
+        # ---- accounting of the segment that just ran (host-free)
+        delta = jnp.max(lanes.n_instr - acc.prev_instr, initial=0)
+        act_g = jnp.zeros((n_groups,), iss.I32).at[state.prog_id].add(
+            active.astype(iss.I32))
+
+        acc = scatter_retired(state, item_slot, acc, out_addr, retired)
 
         # ---- refill freed lanes from this shard's staged batch, in
         # lane-rank order
@@ -851,20 +949,157 @@ def _resident_refill_runner(mesh: Optional[Mesh], mem_words: int,
                        delta.astype(iss.I32)]), act_g])[None]
         return new_state, new_slot, acc, stats
 
+    def refill_faults(state, item_slot, epoch, acc, staged_mems,
+                      staged_prog, staged_ms, staged_slot, n_staged,
+                      out_addr):
+        """The base loop plus the per-lane fault `epoch` (§9.14): a
+        lane taking a fresh item bumps its epoch so the new item draws
+        a fresh schedule instead of replaying the last item's (draws
+        key on (lane, epoch, n_instr) and n_instr restarts at 0)."""
+        new_state, new_slot, acc, stats = refill(
+            state, item_slot, acc, staged_mems, staged_prog, staged_ms,
+            staged_slot, n_staged, out_addr)
+        took = (new_slot != item_slot) & (new_slot >= 0)
+        new_epoch = jnp.where(took, epoch + jnp.asarray(1, iss.I32),
+                              epoch)
+        return new_state, new_slot, new_epoch, acc, stats
+
+    def refill_dmr(state, item_slot, epoch, retries, quar, snap, acc,
+                   staged_mems, staged_prog, staged_ms, staged_slot,
+                   n_staged, out_addr):
+        """DMR shadow-lane retire/refill (§9.14).
+
+        Lanes pair up as (2p primary, 2p+1 shadow); both run the SAME
+        item image but draw independent fault schedules (different
+        physical lane keys). At every refill boundary the pair's
+        architectural digests are compared: a mismatch means at least
+        one lane was hit since the last boundary, so the pair rolls
+        back to `snap` (its state at the previous boundary — the exact
+        segment re-executes) with a bumped epoch (fresh draws; a
+        transient won't recur, a stuck-at/dead defect will). A pair
+        that mismatches `max_retries` times in a row is quarantined —
+        parked forever, its item handed back to the host for
+        re-admission on healthy lanes — at most one pair per shard per
+        boundary, so the host's re-admission bookkeeping is one scalar
+        per shard. Pairs whose digests agree retire/refill exactly as
+        the base loop, at pair granularity (the shadow carries item
+        row -1 and never scatters). The next boundary's snapshot is the
+        op's OUTPUT state (for rolled-back pairs that IS the old snap)
+        — the host keeps that reference while the segment executes,
+        which is why the DMR segment runner does not donate its state.
+        """
+        lanes = state.lanes
+        one = jnp.asarray(1, iss.I32)
+        active = item_slot >= 0        # primaries only (shadows: -1)
+
+        # ---- pair views: chunk % (2 * n_shards) == 0 (validated in
+        # run_packed), so a pair never straddles a shard boundary
+        d = flexifault.arch_digest(lanes.regs, lanes.pc, lanes.mem,
+                                   lanes.halted, lanes.n_instr)
+        d2 = d.reshape(-1, 2)
+        pair_active = active.reshape(-1, 2)[:, 0]
+        mismatch = pair_active & (d2[:, 0] != d2[:, 1])
+        done_l = lanes.halted | (lanes.n_instr >= state.max_steps)
+        pair_retire = (pair_active & done_l.reshape(-1, 2)[:, 0]
+                       & ~mismatch)
+
+        wants_q = mismatch & (retries >= max_retries)
+        new_q = wants_q & (jnp.cumsum(wants_q.astype(iss.I32)) == 1)
+        rollback = mismatch & ~new_q
+        q_slot = jnp.max(jnp.where(
+            new_q, item_slot.reshape(-1, 2)[:, 0], -1))
+
+        # ---- accounting of the segment that just ran
+        delta = jnp.max(lanes.n_instr - acc.prev_instr, initial=0)
+        act_g = jnp.zeros((n_groups,), iss.I32).at[state.prog_id].add(
+            active.astype(iss.I32))
+
+        # ---- retire matching finished pairs (primary rows scatter)
+        retired = iss.retire_mask(state, item_slot) \
+            & jnp.repeat(pair_retire, 2)
+        acc = scatter_retired(state, item_slot, acc, out_addr, retired)
+
+        # ---- roll mismatching pairs back to the last good boundary,
+        # park the quarantined pair
+        rb_l = jnp.repeat(rollback, 2)
+        q_l = jnp.repeat(new_q, 2)
+
+        def rb(a, b):
+            m = rb_l.reshape(rb_l.shape + (1,) * (b.ndim - 1))
+            return jnp.where(m, a, b)
+
+        lanes2 = jax.tree.map(rb, snap, lanes)
+        lanes2 = lanes2._replace(
+            halted=jnp.where(q_l, True, lanes2.halted))
+        state = iss.PackedState(lanes=lanes2, prog_id=state.prog_id,
+                                max_steps=state.max_steps)
+
+        # ---- refill freed pairs; both lanes get the item image, only
+        # the primary carries the accumulator row
+        free_p = (pair_retire | ~pair_active) & ~(quar | new_q)
+        take_p, src_p = iss.refill_take(free_p, n_staged[0])
+        take_l = jnp.repeat(take_p, 2)
+        src_l = jnp.repeat(src_p, 2)
+        new_state = iss.refill_lanes(state, take_l, src_l,
+                                     staged_mems[0], staged_prog[0],
+                                     staged_ms[0])
+        is_primary = (jnp.arange(item_slot.shape[0]) % 2) == 0
+        new_slot = jnp.where(
+            take_l & is_primary, staged_slot[0][src_l],
+            jnp.where(retired | q_l, -1, item_slot))
+        new_epoch = jnp.where(take_l | rb_l, epoch + one, epoch)
+        # consecutive-mismatch counter: any clean boundary resets it
+        # (a long-lived item accrues many independent transients over
+        # its lifetime; only an unrecoverable streak should quarantine)
+        new_retries = jnp.where(rollback, retries + one,
+                                jnp.where(new_q, retries,
+                                          jnp.zeros_like(retries)))
+        acc = acc._replace(prev_instr=jnp.where(
+            take_l, 0, new_state.lanes.n_instr))
+        stats = jnp.concatenate([
+            jnp.stack([pair_retire.sum().astype(iss.I32),
+                       take_p.sum().astype(iss.I32),
+                       delta.astype(iss.I32),
+                       mismatch.sum().astype(iss.I32),
+                       rollback.sum().astype(iss.I32),
+                       q_slot.astype(iss.I32)]), act_g])[None]
+        return (new_state, new_slot, new_epoch, new_retries,
+                quar | new_q, acc, stats)
+
+    if dmr:
+        # snap (arg 5) is NOT donated: the new-state output already
+        # reuses the state input's buffers, so snap's would go unused
+        # (it is freed by refcount when the host drops the reference)
+        fn, donate = refill_dmr, (0, 1, 2, 3, 4, 6)
+    elif faults_on:
+        fn, donate = refill_faults, (0, 1, 2, 3)
+    else:
+        fn, donate = refill, (0, 1, 2)
     if mesh is None:
-        return jax.jit(refill, donate_argnums=(0, 1, 2))
+        return jax.jit(fn, donate_argnums=donate)
     axes = tuple(mesh.axis_names)
     lane = P(axes)
     state_specs = _packed_state_specs(mesh, mem_words)
     acc_specs = dsharding.lane_specs(mesh, _abstract_acc(keep_state))
     st_specs = (P(axes, None, None), P(axes, None), P(axes, None),
                 P(axes, None))
+    if dmr:
+        snap_specs = state_specs.lanes
+        carry_in = (state_specs, lane, lane, lane, lane, snap_specs,
+                    acc_specs)
+        carry_out = (state_specs, lane, lane, lane, lane, acc_specs)
+    elif faults_on:
+        carry_in = (state_specs, lane, lane, acc_specs)
+        carry_out = (state_specs, lane, lane, acc_specs)
+    else:
+        carry_in = (state_specs, lane, acc_specs)
+        carry_out = (state_specs, lane, acc_specs)
     fn = shard_map(
-        refill, mesh=mesh,
-        in_specs=(state_specs, lane, acc_specs, *st_specs, lane, P()),
-        out_specs=(state_specs, lane, acc_specs, P(axes, None)),
+        fn, mesh=mesh,
+        in_specs=(*carry_in, *st_specs, lane, P()),
+        out_specs=(*carry_out, P(axes, None)),
         check_rep=False)
-    return jax.jit(fn, donate_argnums=(0, 1, 2))
+    return jax.jit(fn, donate_argnums=donate)
 
 
 def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
@@ -875,6 +1110,8 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
                adaptive: bool = False,
                checkpoint_dir: Optional[str] = None,
                checkpoint_every: int = 0,
+               faults: Optional[flexifault.FaultSpec] = None,
+               redundancy: str = "none", max_retries: int = 2,
                _crash_after_segments: Optional[int] = None):
     """Execute every `PackedGroup` through ONE packed stream.
 
@@ -926,6 +1163,21 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
     `_crash_after_segments` is the fault-injection knob used by
     tests/test_fault_tolerance.py: raise `InjectedFault` once that many
     segments have retired.
+
+    `faults` (a `flexibits.faults.FaultSpec`, DESIGN.md §9.14) turns on
+    deterministic fault injection: every lane applies the post-commit
+    fault transform under its own `fold_in`-derived key, bit-identically
+    across all three steppers. `redundancy="dmr"` pairs lanes as
+    primary+shadow running the same item under independent schedules,
+    compares architectural digests at every segment boundary, rolls
+    mismatching pairs back to the boundary's snapshot (re-executing the
+    segment under fresh draws), and after `max_retries` consecutive
+    mismatches quarantines the pair — parking the defective lanes and
+    re-admitting the item on healthy ones. Both require the resident
+    loop (`refill="device"`) and are incompatible with `checkpoint_dir`
+    (the rollback snapshots are not part of the durable snapshot
+    schema); `faults=None` with `redundancy="none"` is bit-exact with
+    the pre-FlexiFault engine (pinned by tests/test_faults.py).
     """
     groups = list(groups)
     if not groups:
@@ -938,6 +1190,24 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
         raise ValueError(f"stepper must be one of {STEPPERS}")
     if refill not in REFILLS:
         raise ValueError(f"refill must be one of {REFILLS}")
+    if redundancy not in REDUNDANCY:
+        raise ValueError(f"redundancy must be one of {REDUNDANCY} "
+                         f"(tmr is priced by the carbon planner but "
+                         f"not executed), got {redundancy!r}")
+    if faults is not None and faults.off:
+        faults = None              # rate 0 IS the fault-free graph
+    resilient = faults is not None or redundancy == "dmr"
+    if resilient:
+        if refill != "device":
+            raise ValueError(
+                "fault injection / DMR needs the resident loop: the "
+                "fault epoch and rollback snapshots live on device "
+                "(pass refill='device')")
+        if checkpoint_dir is not None:
+            raise ValueError(
+                "fault injection / DMR is incompatible with "
+                "checkpoint_dir: epoch/retry/snapshot state is not "
+                "part of the durable checkpoint schema")
 
     n_groups = len(groups)
     counts = np.array([g.n_items for g in groups], np.int64)
@@ -959,6 +1229,13 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
                 + len(iss.MIX_CLASSES))
         if mix_bound > _RESIDENT_MIX_LIMIT \
                 or ks_words > _RESIDENT_KEEP_STATE_WORDS:
+            if resilient:
+                raise ValueError(
+                    "plan exceeds the resident-runtime safety bounds "
+                    "(int32 mix counters / keep_state device rows) and "
+                    "fault injection / DMR cannot fall back to the "
+                    "host-refill loop — shrink the plan or drop the "
+                    "fault/redundancy knobs")
             refill = "host"
     if checkpoint_dir is not None and refill != "device":
         raise ValueError(
@@ -1003,16 +1280,19 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
             cost_np[i] = np.asarray(g.cost, np.int32)
     cost = jnp.asarray(cost_np)
 
-    chunk = min(chunk, max(total_items, 1))
+    dmr = redundancy == "dmr"
+    # a DMR pair occupies two lanes per item, and a pair must never
+    # straddle a shard: the pool rounds to 2 x n_dev
+    chunk = min(chunk, max(total_items * (2 if dmr else 1), 1))
     n_dev = 1
     if mesh is not None:
         n_dev = int(np.prod(list(mesh.shape.values())))
-    round_to = n_dev
+    round_to = 2 * n_dev if dmr else n_dev
     if stepper == "pallas" and chunk > 128:
         # same wide-lane-tile rule as run_stream: pad the pool to a
-        # 128-multiple (lcm'd with the mesh) instead of tiling at a
-        # prime-ish chunk's largest small divisor
-        round_to = int(128 * n_dev // np.gcd(128, n_dev))
+        # 128-multiple (lcm'd with the mesh/pair alignment) instead of
+        # tiling at a prime-ish chunk's largest small divisor
+        round_to = int(np.lcm(128, round_to))
     if round_to > 1:
         chunk = -(-chunk // round_to) * round_to
 
@@ -1028,6 +1308,8 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
             subset, mem_words, controller, clock,
             checkpoint_dir=checkpoint_dir,
             checkpoint_every=checkpoint_every,
+            faults=faults, redundancy=redundancy,
+            max_retries=max_retries,
             crash_after=_crash_after_segments)
     else:
         prefs = [_Prefetcher(g.source, g.n_items,
@@ -1077,7 +1359,11 @@ def run_packed(groups, *, chunk: int = 256, seg_steps: int = 4096,
         shard_retired=tuple(int(x)
                             for x in out.get("shard_retired", ())),
         shard_lane_steps=tuple(int(x)
-                               for x in out.get("shard_lane_steps", ())))
+                               for x in out.get("shard_lane_steps", ())),
+        redundancy=redundancy,
+        detected=int(out.get("detected", 0)),
+        corrected=int(out.get("corrected", 0)),
+        quarantined=int(out.get("quarantined", 0)))
     return results, stats
 
 
@@ -1273,7 +1559,9 @@ def _stream_resident(groups, prefetch, counts, ms_of, bank, code_len,
                      mesh, stepper, subset, mem_words,
                      controller: _SuperstepController,
                      clock: _SyncClock, checkpoint_dir=None,
-                     checkpoint_every: int = 0, crash_after=None):
+                     checkpoint_every: int = 0, faults=None,
+                     redundancy: str = "none", max_retries: int = 2,
+                     crash_after=None):
     """The resident stream loop (DESIGN.md §9.9, shard-local §9.12,
     `refill="device"`).
 
@@ -1306,9 +1594,11 @@ def _stream_resident(groups, prefetch, counts, ms_of, bank, code_len,
     out_addr_np = np.asarray(
         [-1 if g.out_addr is None else g.out_addr for g in groups],
         np.int32)
+    dmr = redundancy == "dmr"
     # the banked Pallas swap is the single-device fused-stepper path;
     # under a mesh the (bit-identical) jnp swap partitions per shard
-    use_pallas = stepper == "pallas" and mesh is None
+    # (and the DMR op always uses the jnp swap — pair semantics)
+    use_pallas = stepper == "pallas" and mesh is None and not dmr
     n_shards = 1
     if mesh is not None:
         n_shards = int(np.prod(list(mesh.shape.values())))
@@ -1336,6 +1626,8 @@ def _stream_resident(groups, prefetch, counts, ms_of, bank, code_len,
     lane_steps = 0
     n_segments = 0
     prev_seg = 0
+    detected = corrected = quarantined = 0        # §9.14 counters
+    n_quar = np.zeros(n_shards, np.int64)         # quarantined pairs
 
     # ---- resume? (canonical checkpoint — independent of the mesh and
     # chunk it was written under)
@@ -1433,8 +1725,25 @@ def _stream_resident(groups, prefetch, counts, ms_of, bank, code_len,
         stage_sh = dsharding.stage_shardings(
             mesh, (st_mems, st_prog, st_ms, st_slot))
 
+    # quarantined pairs hand their item back here; restock re-stages it
+    # (same accumulator row — the healthy pair that picks it up scatters
+    # into the row the item always owned) ahead of fresh admissions
+    requeue = [[] for _ in range(n_shards)]
+
     def restock():
         changed = False
+        for s in range(n_shards):
+            while requeue[s] and int(staged_n[s]) < spc:
+                g, local, slot = requeue[s].pop(0)
+                off = int(staged_n[s])
+                st_mems[s, off] = 0
+                st_mems[s, off, :groups[g].mem_words] = \
+                    np.asarray(groups[g].source(local, 1), np.int32)[0]
+                st_prog[s, off] = g
+                st_ms[s, off] = ms_of[g]
+                st_slot[s, off] = slot
+                staged_n[s] = off + 1
+                changed = True
         for s in range(n_shards):
             free = spc - int(staged_n[s])
             remaining = pend_n[:, s] - staged_cursor[:, s]
@@ -1528,6 +1837,17 @@ def _stream_resident(groups, prefetch, counts, ms_of, bank, code_len,
             mix=jnp.asarray(mix_l), n_cycles=jnp.asarray(cyc_l)),
         prog_id=jnp.asarray(prog_l), max_steps=jnp.asarray(ms_l))
     item_slot = jnp.asarray(slot_l, iss.I32)
+    # resilience state (§9.14): per-lane fault keys/epochs, per-pair
+    # retry counters + quarantine flags, and the rollback snapshot
+    lane_key = None
+    if faults is not None:
+        lane_key = jnp.asarray(flexifault.lane_keys(faults.seed, chunk))
+    epoch = jnp.zeros(chunk, iss.I32) if (faults is not None or dmr) \
+        else None
+    retries = jnp.zeros(chunk // 2, iss.I32) if dmr else None
+    quar_d = jnp.zeros(chunk // 2, bool) if dmr else None
+    snap = jax.tree.map(lambda x: jnp.array(x, copy=True),
+                        state.lanes) if dmr else None
     acc = ResidentAcc(
         n_instr=jnp.zeros(n_shards * cap, iss.I32),
         n_two=jnp.zeros(n_shards * cap, iss.I32),
@@ -1550,9 +1870,24 @@ def _stream_resident(groups, prefetch, counts, ms_of, bank, code_len,
             item_slot, dsharding.lane_shardings(mesh, item_slot))
         acc = jax.tree.map(jax.device_put, acc,
                            dsharding.lane_shardings(mesh, acc))
+
+        def _lane_put(x):
+            return None if x is None else jax.device_put(
+                x, dsharding.lane_shardings(mesh, x))
+
+        lane_key = _lane_put(lane_key)
+        epoch = _lane_put(epoch)
+        retries = _lane_put(retries)
+        quar_d = _lane_put(quar_d)
+        if snap is not None:
+            snap = jax.tree.map(jax.device_put, snap,
+                                dsharding.lane_shardings(mesh, snap))
     out_addr_dev = jnp.asarray(out_addr_np)
-    refill_fn = _resident_refill_runner(mesh, mem_words, n_groups,
-                                        keep_state, use_pallas)
+    # positional on purpose: test_shard_local.py wraps this factory
+    # with a *args-only shim to audit the lowered HLO
+    refill_fn = _resident_refill_runner(
+        mesh, mem_words, n_groups, keep_state, use_pallas,
+        faults is not None and not dmr, dmr, max_retries)
 
     def merged_vals(accv):
         """Per-item results: host `base` where done, else the item's
@@ -1643,22 +1978,68 @@ def _stream_resident(groups, prefetch, counts, ms_of, bank, code_len,
                 save_checkpoint()
                 last_saved = n_segments
             upload()
-            state, item_slot, acc, stats = refill_fn(
-                state, item_slot, acc, *staged["dev"],
-                jnp.asarray(staged_n, iss.I32), out_addr_dev)
+            staged_dev_n = jnp.asarray(staged_n, iss.I32)
+            if dmr:
+                (state, item_slot, epoch, retries, quar_d, acc,
+                 stats) = refill_fn(
+                    state, item_slot, epoch, retries, quar_d, snap,
+                    acc, *staged["dev"], staged_dev_n, out_addr_dev)
+                # the refreshed boundary state IS the next rollback
+                # snapshot; holding it here (while the non-donating
+                # segment runs) keeps its buffers alive
+                snap = state.lanes
+            elif faults is not None:
+                state, item_slot, epoch, acc, stats = refill_fn(
+                    state, item_slot, epoch, acc, *staged["dev"],
+                    staged_dev_n, out_addr_dev)
+            else:
+                state, item_slot, acc, stats = refill_fn(
+                    state, item_slot, acc, *staged["dev"],
+                    staged_dev_n, out_addr_dev)
             seg_steps = controller.next_seg()
+            # positional on purpose: test_shard_local.py wraps this
+            # factory with a *args-only shim to audit the lowered HLO
             seg_fn = _packed_segment_runner(stepper, chunk, seg_steps,
                                             mem_words, n_groups,
                                             bank_np.shape[1], mesh,
-                                            subset, timing)
-            state = seg_fn(bank, code_len, mem_len, cost, state)
+                                            subset, timing, faults,
+                                            not dmr)
+            if faults is not None:
+                state = seg_fn(bank, code_len, mem_len, cost,
+                               lane_key, epoch, state)
+            else:
+                state = seg_fn(bank, code_len, mem_len, cost, state)
             if hasattr(stats, "copy_to_host_async"):
                 stats.copy_to_host_async()
             # blocks until refill_i only — seg_i is already running;
             # one (n_shards, 3+G) read regardless of device count
+            # ((n_shards, 6+G) under DMR: +detected/corrected/q_slot)
             sv = np.asarray(clock.fetch(stats), np.int64)
             n_ret = int(sv[:, 0].sum())
-            act_s = sv[:, 3:]
+            if dmr:
+                detected += int(sv[:, 3].sum())
+                corrected += int(sv[:, 4].sum())
+                for s in np.nonzero(sv[:, 5] >= 0)[0]:
+                    # quarantined pair: map the acc row back to the
+                    # item and hand it to restock for re-admission
+                    row = int(s) * cap + int(sv[s, 5])
+                    item = int(row_owner[row])
+                    g = int(np.searchsorted(slot_base, item,
+                                            side="right") - 1)
+                    requeue[int(s)].append(
+                        (g, item - int(slot_base[g]), int(sv[s, 5])))
+                    quarantined += 1
+                    n_quar[int(s)] += 1
+                    if n_quar[int(s)] >= spc // 2:
+                        raise RuntimeError(
+                            f"DMR pool starved: all {spc // 2} lane "
+                            f"pair(s) of shard {int(s)} are "
+                            f"quarantined with items still pending — "
+                            f"raise chunk, raise max_retries, or fix "
+                            f"the fault rate")
+                act_s = sv[:, 6:]
+            else:
+                act_s = sv[:, 3:]
             deltas = sv[:, 2]
             sh_act = act_s.sum(1) > 0
             if sh_act.any():
@@ -1731,7 +2112,9 @@ def _stream_resident(groups, prefetch, counts, ms_of, bank, code_len,
             "lane_steps": lane_steps, "n_segments": n_segments,
             "n_shards": n_shards,
             "shard_retired": shard_retired.tolist(),
-            "shard_lane_steps": shard_steps.tolist()}
+            "shard_lane_steps": shard_steps.tolist(),
+            "detected": detected, "corrected": corrected,
+            "quarantined": quarantined}
 
 
 def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,
@@ -1743,7 +2126,10 @@ def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,
                         prefetch: bool = True, refill: str = "device",
                         adaptive: bool = False,
                         cost: Optional[np.ndarray] = None,
-                        subset: Optional[frozenset] = None) -> FleetResult:
+                        subset: Optional[frozenset] = None,
+                        faults: Optional[flexifault.FaultSpec] = None,
+                        redundancy: str = "none",
+                        max_retries: int = 2) -> FleetResult:
     """Convenience wrapper: stream a FlexiBench workload end to end.
 
     The branchless/pallas steppers' opcode subset is derived from the
@@ -1758,4 +2144,5 @@ def run_workload_stream(w: Workload, n_items: int, *, seed: int = 0,
         chunk=chunk, subset=subset,
         seg_steps=seg_steps, out_addr=w.out_addr, keep_state=keep_state,
         mesh=mesh, stepper=stepper, prefetch=prefetch, refill=refill,
-        adaptive=adaptive, cost=cost)
+        adaptive=adaptive, cost=cost, faults=faults,
+        redundancy=redundancy, max_retries=max_retries)

@@ -27,6 +27,7 @@ from jax.sharding import Mesh
 from repro.flexibench import base as fb
 from repro.flexibits import analyze
 from repro.flexibits.cycles import CORES, TICKS_PER_CYCLE, Core, cost_row
+from repro.flexibits.faults import FaultSpec
 from repro.fleet import engine
 from repro.fleet.report import FleetReport, build_group_report
 
@@ -131,7 +132,18 @@ class FleetPlan:
     reachable-only subset (DESIGN.md §9.11), which can be strictly
     smaller when dead code carries opcode classes the program never
     retires. Results are bit-exact either way (tests/test_flexilint.py
-    pins it)."""
+    pins it).
+
+    `faults`/`redundancy`/`max_retries` turn on the FlexiFault
+    resilience layer (DESIGN.md §9.14): a deterministic counter-based
+    fault schedule injected into every lane, and — with
+    `redundancy="dmr"` — shadow-lane detection with segment-granular
+    re-execution and quarantine. Resilient plans require the resident
+    refill loop; `faults=None` with `redundancy="none"` (the default)
+    keeps the fault-free graphs bit-exact. The report prices each group
+    under the plan's redundancy mode (`carbon.redundant_*`), so DMR
+    plans show the spare-area + re-execution carbon they'd pay in
+    deployment."""
     groups: Sequence[FleetGroup]
     chunk: int = 256
     seg_steps: int = 4096
@@ -145,6 +157,9 @@ class FleetPlan:
     timing: Optional[str] = None          # None | "base" | "dynamic"
     validate_budgets: bool = True         # FlexiLint min-steps gate
     subset_source: str = "text"           # "text" | "static"
+    faults: Optional[FaultSpec] = None    # FlexiFault schedule (§9.14)
+    redundancy: str = "none"              # "none" | "dmr"
+    max_retries: int = 2                  # DMR rollbacks before quarantine
 
     @property
     def n_items(self) -> int:
@@ -231,13 +246,16 @@ def run_plan(plan: FleetPlan, mesh: Optional[Mesh] = None,
             keep_state=keep_state, mesh=mesh, stepper=plan.stepper,
             prefetch=plan.prefetch, refill=plan.refill,
             adaptive=plan.adaptive, checkpoint_dir=checkpoint_dir,
-            checkpoint_every=checkpoint_every)
+            checkpoint_every=checkpoint_every, faults=plan.faults,
+            redundancy=plan.redundancy, max_retries=plan.max_retries)
         group_reports = [
             build_group_report(
                 group=g, workload=w, core=core, result=res,
                 lifetime_s=lifetime_s, execs_per_day=execs_per_day,
                 intensity=plan.intensity, clock_hz=plan.clock_hz,
-                wcet_cycles=wcet_cycles)
+                wcet_cycles=wcet_cycles, redundancy=plan.redundancy,
+                fault_rate=0.0 if plan.faults is None
+                else plan.faults.rate)
             for g, (w, core, lifetime_s, execs_per_day, wcet_cycles), res
             in zip(plan.groups, resolved, results)]
         return FleetReport(groups=group_reports, intensity=plan.intensity,
@@ -253,10 +271,12 @@ def run_plan(plan: FleetPlan, mesh: Optional[Mesh] = None,
             keep_state=keep_state, mesh=mesh, stepper=plan.stepper,
             prefetch=plan.prefetch, refill=plan.refill,
             adaptive=plan.adaptive, cost=_group_cost(plan, core),
-            subset=subset)
+            subset=subset, faults=plan.faults,
+            redundancy=plan.redundancy, max_retries=plan.max_retries)
         group_reports.append(build_group_report(
             group=g, workload=w, core=core, result=res,
             lifetime_s=lifetime_s, execs_per_day=execs_per_day,
             intensity=plan.intensity, clock_hz=plan.clock_hz,
-            wcet_cycles=wcet_cycles))
+            wcet_cycles=wcet_cycles, redundancy=plan.redundancy,
+            fault_rate=0.0 if plan.faults is None else plan.faults.rate))
     return FleetReport(groups=group_reports, intensity=plan.intensity)

@@ -103,6 +103,25 @@ def _def_reg(d: asm.Decoded) -> Optional[int]:
     return rd if rd != 0 else None
 
 
+def read_registers(analysis: "Analysis") -> FrozenSet[int]:
+    """Registers read by at least one CFG-reachable instruction.
+
+    The FlexiLint liveness mask of the FlexiFault measurement layer
+    (DESIGN.md §9.14): a register outside this set is provably dead —
+    no reachable instruction ever sources it — so a bit flip landing
+    there cannot propagate to any architectural output and is not
+    counted as corruption. Callers must treat a degraded analysis as
+    all-registers-live; this helper only reports what the recovered
+    CFG proves.
+    """
+    regs = set()
+    for w in analysis.reachable:
+        d = analysis._dec[w]
+        if d is not None:
+            regs.update(_uses(d))
+    return frozenset(regs)
+
+
 def _worst_ticks(d: asm.Decoded, cost: np.ndarray) -> int:
     """Worst-case ticks one retirement of `d` can cost under a §9.10
     cost row — `iss.classify` + `iss.dynamic_terms` with every dynamic

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.flexibits import faults as flexifault
 from repro.flexibits import isa
 from repro.flexibits.cycles import (MIX_CLASSES, SHIFT_IDX, SUBWORD_IDX,
                                     TAKEN_IDX)
@@ -144,13 +145,17 @@ def _u(v):
 
 def step(code: jax.Array, s: ISSState, *,
          instr: jax.Array = None, mem_len: jax.Array = None,
-         cost: jax.Array = None) -> ISSState:
+         cost: jax.Array = None, faults=None, lane_key: jax.Array = None,
+         epoch: jax.Array = None) -> ISSState:
     # `instr` overrides the fetch (banked runtimes fetch from a program
     # bank via `fetch_banked`); `mem_len` bounds the data-memory ports at
     # the lane's OWN word count, so a lane in a pool padded to a larger
     # memory keeps jax's clamp-on-read / drop-on-write semantics at ITS
     # program's boundary; `cost` (an (N_COST,) cycles.cost_row) turns on
-    # the per-lane timing tally. Everything else is identical.
+    # the per-lane timing tally; `faults` (a faults.FaultSpec, with the
+    # lane's traced uint32 `lane_key` and int32 retry `epoch`) turns on
+    # the post-commit fault transform (DESIGN.md §9.14) — None keeps it
+    # out of the traced graph. Everything else is identical.
     if instr is None:
         instr = code[(_u(s.pc) >> 2).astype(I32)].astype(U32)
     ii = instr.astype(I32)
@@ -299,7 +304,7 @@ def step(code: jax.Array, s: ISSState, *,
         n_cycles = n_cycles + timing_ticks(cost, two_stage, mix_idx,
                                            taken, shamt, subword)
 
-    return ISSState(
+    out = ISSState(
         regs=regs,
         pc=next_pc.astype(I32),
         mem=mem,
@@ -309,6 +314,12 @@ def step(code: jax.Array, s: ISSState, *,
         mix=s.mix.at[mix_idx].add(1),
         n_cycles=n_cycles,
     )
+    if faults is not None:
+        # post-commit fault transform: the switch stepper only runs a
+        # step while live, so the gate is just post-commit ~halted
+        out = flexifault.apply_faults(faults, lane_key, epoch, out,
+                                      mem_len=mem_len)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -634,7 +645,9 @@ def step_branchless(code: jax.Array, s: ISSState,
                     active: jax.Array = None, *,
                     instr: jax.Array = None,
                     mem_len: jax.Array = None,
-                    cost: jax.Array = None) -> ISSState:
+                    cost: jax.Array = None, faults=None,
+                    lane_key: jax.Array = None,
+                    epoch: jax.Array = None) -> ISSState:
     """One branchless step: bit-exact with `step`, no lax.switch/cond.
 
     `subset` (static) keeps only those opcode classes in the traced graph;
@@ -692,7 +705,7 @@ def step_branchless(code: jax.Array, s: ISSState,
     one = live.astype(I32)
     mix_onehot = (jnp.arange(len(MIX_CLASSES), dtype=I32)
                   == mix_idx).astype(I32) * one
-    return ISSState(
+    out = ISSState(
         regs=regs,
         pc=jnp.where(live, next_pc.astype(I32), s.pc),
         mem=mem,
@@ -702,12 +715,23 @@ def step_branchless(code: jax.Array, s: ISSState,
         mix=s.mix + mix_onehot,
         n_cycles=s.n_cycles if ticks is None else s.n_cycles + ticks * one,
     )
+    if faults is not None:
+        # post-commit fault transform (DESIGN.md §9.14): gated on the
+        # lane having retired live AND not halted on this very step —
+        # parked lanes draw nothing, and a flip in the halting cycle is
+        # architecturally unobservable (identical in every stepper and
+        # in the PyISS oracle's post_commit hook)
+        out = flexifault.apply_faults(faults, lane_key, epoch, out,
+                                      live=live, mem_len=mem_len)
+    return out
 
 
 def step_lanes(code: jax.Array, states: ISSState,
                subset: frozenset = None,
                active: jax.Array = None,
-               cost: jax.Array = None) -> ISSState:
+               cost: jax.Array = None, faults=None,
+               lane_key: jax.Array = None,
+               epoch: jax.Array = None) -> ISSState:
     """Branchless step over a batch of lanes (leading lane axis).
 
     Decodes once per lane with pure bit ops; every opcode class commits
@@ -715,7 +739,15 @@ def step_lanes(code: jax.Array, states: ISSState,
     instead of per-branch memory ports. Bit-exact with vmap(step).
     `cost` is one shared (N_COST,) row — homogeneous pools run one
     program on one core, so it closes over the vmap unbatched.
+    `faults` turns on the per-lane post-commit fault transform
+    (`lane_key`/`epoch` are (lanes,) arrays).
     """
+    if faults is not None:
+        act = jnp.ones(states.pc.shape, bool) if active is None else active
+        return jax.vmap(
+            lambda a, k, e, s: step_branchless(
+                code, s, subset, active=a, cost=cost, faults=faults,
+                lane_key=k, epoch=e))(act, lane_key, epoch, states)
     if active is None:
         return jax.vmap(
             lambda s: step_branchless(code, s, subset, cost=cost))(states)
@@ -727,7 +759,9 @@ def step_lanes(code: jax.Array, states: ISSState,
 def run_segment_lanes(code: jax.Array, states: ISSState, seg_steps: int,
                       max_steps: int, subset: frozenset = None,
                       unroll: int = 1,
-                      cost: jax.Array = None) -> ISSState:
+                      cost: jax.Array = None, faults=None,
+                      lane_key: jax.Array = None,
+                      epoch: jax.Array = None) -> ISSState:
     """Lane-parallel segment: up to `seg_steps` branchless steps per lane.
 
     One while_loop over the whole lane pool (not vmap of scalar loops):
@@ -754,7 +788,8 @@ def run_segment_lanes(code: jax.Array, states: ISSState, seg_steps: int,
         k, st = c
         for j in range(unroll):
             act = active_of(st) & (k + j < seg_steps)
-            st = step_lanes(code, st, subset, active=act, cost=cost)
+            st = step_lanes(code, st, subset, active=act, cost=cost,
+                            faults=faults, lane_key=lane_key, epoch=epoch)
         return k + unroll, st
 
     _, out = lax.while_loop(cond, body, (jnp.zeros((), I32), states))
@@ -766,7 +801,9 @@ def step_lanes_banked(bank: jax.Array, code_len: jax.Array,
                       subset: frozenset = None,
                       active: jax.Array = None,
                       mem_len: jax.Array = None,
-                      cost: jax.Array = None) -> ISSState:
+                      cost: jax.Array = None, faults=None,
+                      lane_key: jax.Array = None,
+                      epoch: jax.Array = None) -> ISSState:
     """Branchless step over lanes executing *different* programs.
 
     One batched bank fetch (`fetch_banked`, per-program pc clamp), then
@@ -780,6 +817,16 @@ def step_lanes_banked(bank: jax.Array, code_len: jax.Array,
     """
     instr = fetch_banked(bank, code_len, prog_id, states.pc)
     act = jnp.ones(states.pc.shape, bool) if active is None else active
+    if faults is not None:
+        # per-lane fault keys/epochs batch; mem_len/cost stay optional
+        # (None broadcasts through the vmap as an empty pytree)
+        return jax.vmap(
+            lambda i, a, m, c, k, e, s: step_branchless(
+                bank, s, subset, active=a, instr=i, mem_len=m, cost=c,
+                faults=faults, lane_key=k, epoch=e),
+            in_axes=(0, 0, None if mem_len is None else 0,
+                     None if cost is None else 0, 0, 0, 0),
+        )(instr, act, mem_len, cost, lane_key, epoch, states)
     if mem_len is None and cost is None:
         return jax.vmap(
             lambda i, a, s: step_branchless(bank, s, subset, active=a,
@@ -805,7 +852,9 @@ def run_segment_lanes_banked(bank: jax.Array, code_len: jax.Array,
                              ps: PackedState, seg_steps: int,
                              subset: frozenset = None,
                              mem_len: jax.Array = None,
-                             cost: jax.Array = None) -> PackedState:
+                             cost: jax.Array = None, faults=None,
+                             lane_key: jax.Array = None,
+                             epoch: jax.Array = None) -> PackedState:
     """Packed segment: up to `seg_steps` banked steps for every lane.
 
     The packed-runtime counterpart of `run_segment_lanes`: one
@@ -818,7 +867,10 @@ def run_segment_lanes_banked(bank: jax.Array, code_len: jax.Array,
     counts, like `code_len`) keeps each lane's memory semantics at its
     own program's boundary when the pool memory is padded wider; `cost`
     (per-PROGRAM (n_progs, N_COST) rows, like `mem_len`) prices each
-    lane's retirements on its own program's core.
+    lane's retirements on its own program's core; `faults` (with
+    per-LANE `lane_key`/`epoch` arrays — fault schedules belong to the
+    physical lane, not the program) turns on the post-commit fault
+    transform (DESIGN.md §9.14).
     """
     lane_mlen = None if mem_len is None else mem_len[ps.prog_id]
     lane_cost = None if cost is None else cost[ps.prog_id]
@@ -835,7 +887,8 @@ def run_segment_lanes_banked(bank: jax.Array, code_len: jax.Array,
         return k + 1, step_lanes_banked(bank, code_len, st, ps.prog_id,
                                         subset, active=active_of(st),
                                         mem_len=lane_mlen,
-                                        cost=lane_cost)
+                                        cost=lane_cost, faults=faults,
+                                        lane_key=lane_key, epoch=epoch)
 
     _, out = lax.while_loop(cond, body, (jnp.zeros((), I32), ps.lanes))
     return PackedState(lanes=out, prog_id=ps.prog_id,
@@ -952,13 +1005,17 @@ def run_segment_banked(bank: jax.Array, code_len: jax.Array,
                        prog_id: jax.Array, max_steps: jax.Array,
                        s: ISSState, seg_steps: int,
                        mem_len: jax.Array = None,
-                       cost: jax.Array = None) -> ISSState:
+                       cost: jax.Array = None, faults=None,
+                       lane_key: jax.Array = None,
+                       epoch: jax.Array = None) -> ISSState:
     """Banked `run_segment`: the lax.switch interpreter fetching from a
     program bank (scalar state; the packed engine vmaps it per lane).
     `max_steps` is a traced scalar — each lane brings its own budget;
     `mem_len` (per-program word counts) bounds the lane's memory ports
     at its own program's size; `cost` (per-program rows) prices the
-    lane's retirements on its own program's core.
+    lane's retirements on its own program's core; `faults` (with this
+    lane's scalar `lane_key`/`epoch`) turns on the post-commit fault
+    transform.
     """
     ml = None if mem_len is None else mem_len[prog_id]
     cr = None if cost is None else cost[prog_id]
@@ -970,7 +1027,8 @@ def run_segment_banked(bank: jax.Array, code_len: jax.Array,
     def body(c):
         k, st = c
         instr = fetch_banked(bank, code_len, prog_id, st.pc)
-        return k + 1, step(bank, st, instr=instr, mem_len=ml, cost=cr)
+        return k + 1, step(bank, st, instr=instr, mem_len=ml, cost=cr,
+                           faults=faults, lane_key=lane_key, epoch=epoch)
 
     _, out = lax.while_loop(cond, body, (jnp.zeros((), I32), s))
     return out

@@ -70,6 +70,11 @@ class PyISS:
         self.visited: set = set()
         self._trace_len = int(trace_len)
         self.trace: list = []
+        # FlexiFault oracle hook (DESIGN.md §9.14): called with `self`
+        # after every retired instruction that did not halt the machine
+        # — the exact point the JAX steppers apply their post-commit
+        # fault transform (faults.apply_fault_arrays)
+        self.post_commit = None
 
     def _widx(self, addr: int) -> int:
         # the steppers' word index: uint32 address reinterpreted int32,
@@ -107,8 +112,13 @@ class PyISS:
                          for pc, w in self.trace)
 
     def step(self):
-        self.visited.add(self.pc >> 2)
-        instr = int(self.code[self.pc >> 2])
+        # clamp-on-read fetch, mirroring jax gather semantics in the jnp
+        # steppers (only reachable with a faulted pc — §9.14; fault-free
+        # programs never leave the code image)
+        widx = self.pc >> 2
+        widx = 0 if widx < 0 else min(widx, len(self.code) - 1)
+        self.visited.add(widx)
+        instr = int(self.code[widx])
         if self._trace_len:
             self.trace.append((self.pc, instr))
             if len(self.trace) > self._trace_len:
@@ -257,6 +267,9 @@ class PyISS:
                 ticks += int(self.cost[SUBWORD_IDX])
             # the steppers tally in int32; wrap identically
             self.n_cycles = _s32(self.n_cycles + ticks)
+
+        if self.post_commit is not None and not self.halted:
+            self.post_commit(self)
 
     def ticks(self, cost: np.ndarray) -> int:
         """Total ticks under `cost` from the recorded events (exact,

@@ -57,6 +57,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from repro.flexibits import faults as flexifault
 from repro.flexibits import iss
 from repro.flexibits.cycles import N_COST
 from repro.flexibits.iss import I32, U32, ISSState, PackedState, _u
@@ -73,7 +74,7 @@ def _pick_lane_tile(n_lanes: int, want: Optional[int]) -> int:
 
 def _step_tile(bank_flat, lane_base, lane_len, lane_mlen, lane_cost,
                regs, pc, mem, halted, n_instr, n_two, mix, n_cyc,
-               active, subset):
+               active, subset, faults=None, lane_key=None, epoch=None):
     """One branchless architectural step over a (TL,)-lane tile.
 
     Lane-vectorized port of `iss.step_branchless`: the opcode-gated
@@ -145,22 +146,31 @@ def _step_tile(bank_flat, lane_base, lane_len, lane_mlen, lane_cost,
     one = live.astype(I32)
     mix_onehot = (jnp.arange(len(iss.MIX_CLASSES), dtype=I32)[None, :]
                   == mix_idx[:, None]).astype(I32) * one[:, None]
+    pc = jnp.where(live, next_pc.astype(I32), pc)
+    halted = halted | (halt & live)
+    n_instr = n_instr + one
+    if faults is not None:
+        # post-commit fault transform (DESIGN.md §9.14): the SAME
+        # shape-polymorphic one-hot arithmetic as the XLA steppers
+        # (faults.apply_fault_arrays contains no gather/scatter), gated
+        # exactly like their commits — live this step and not halted by
+        # it. `lane_key`/`epoch` are segment constants per lane.
+        regs, pc, mem = flexifault.apply_fault_arrays(
+            faults, lane_key, epoch, regs, pc, mem, n_instr,
+            live & ~halted, mem_len=lane_mlen)
     return (regs,
-            jnp.where(live, next_pc.astype(I32), pc),
+            pc,
             mem,
-            halted | (halt & live),
-            n_instr + one,
+            halted,
+            n_instr,
             n_two + (two_stage & live).astype(I32),
             mix + mix_onehot,
             n_cyc if ticks is None else n_cyc + ticks * one)
 
 
 def _segment_kernel(bank_ref, clen_ref, mlen_ref, pid_ref, ms_ref,
-                    cost_ref, regs_ref, pc_ref, mem_ref, halt_ref,
-                    ni_ref, n2_ref, mix_ref, ncyc_ref,
-                    oregs_ref, opc_ref, omem_ref, ohalt_ref,
-                    oni_ref, on2_ref, omix_ref, oncyc_ref, *,
-                    seg_steps: int, subset, timing: bool):
+                    cost_ref, *refs,
+                    seg_steps: int, subset, timing: bool, faults=None):
     """Mega-step: all `seg_steps` architectural steps of one lane tile.
 
     State is read from the refs ONCE, carried through the segment loop as
@@ -169,8 +179,19 @@ def _segment_kernel(bank_ref, clen_ref, mlen_ref, pid_ref, ms_ref,
     each lane's flat fetch base/length, memory bound, cost row, and step
     budget are segment constants, hoisted out of the loop. `timing`
     (static) gates the cycle tally: off, the per-program cost bank is a
-    dummy and `n_cycles` passes through untouched.
+    dummy and `n_cycles` passes through untouched. `faults` (static)
+    gates the post-commit fault transform: on, two extra per-lane refs
+    (fault key, epoch) lead the state refs; off, they are not inputs at
+    all and the kernel is byte-identical to the fault-free build.
     """
+    lane_key = epoch = None
+    if faults is not None:
+        lane_key = refs[0][...]
+        epoch = refs[1][...]
+        refs = refs[2:]
+    (regs_ref, pc_ref, mem_ref, halt_ref, ni_ref, n2_ref, mix_ref,
+     ncyc_ref, oregs_ref, opc_ref, omem_ref, ohalt_ref, oni_ref,
+     on2_ref, omix_ref, oncyc_ref) = refs
     bank = bank_ref[...]
     clen = clen_ref[...]
     mlen = mlen_ref[...]
@@ -206,7 +227,8 @@ def _segment_kernel(bank_ref, clen_ref, mlen_ref, pid_ref, ms_ref,
         act = active_of(halted, n_instr)
         regs, pc, mem, halted, n_instr, n2, mix, ncyc = _step_tile(
             bank_flat, lane_base, lane_len, lane_mlen, lane_cost, regs,
-            pc, mem, halted, n_instr, n2, mix, ncyc, act, subset)
+            pc, mem, halted, n_instr, n2, mix, ncyc, act, subset,
+            faults=faults, lane_key=lane_key, epoch=epoch)
         return k + 1, regs, pc, mem, halted, n_instr, n2, mix, ncyc
 
     _, regs, pc, mem, halted, n_instr, n2, mix, ncyc = \
@@ -224,7 +246,9 @@ def _segment_kernel(bank_ref, clen_ref, mlen_ref, pid_ref, ms_ref,
 def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
                        state: PackedState, *, seg_steps: int,
                        subset=None, mem_len: Optional[jax.Array] = None,
-                       cost: Optional[jax.Array] = None,
+                       cost: Optional[jax.Array] = None, faults=None,
+                       lane_key: Optional[jax.Array] = None,
+                       epoch: Optional[jax.Array] = None,
                        lane_tile: Optional[int] = None,
                        interpret: Optional[bool] = None) -> PackedState:
     """Fused packed segment: every lane runs ITS OWN bank program.
@@ -239,7 +263,12 @@ def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
     padded pool width is every program's true size. `cost` (per-program
     (n_progs, N_COST) rows, like `mem_len`) turns on the per-lane cycle
     tally — None keeps the timing layer out of the kernel entirely (a
-    dummy zero bank holds the spec list static). `subset` must cover
+    dummy zero bank holds the spec list static). `faults` (a
+    faults.FaultSpec, with per-LANE `lane_key` uint32 keys and int32
+    retry `epoch`s) turns on the post-commit fault transform
+    (DESIGN.md §9.14) — None adds neither the inputs nor any kernel
+    code, so the fault-free build is byte-identical to the pre-
+    FlexiFault kernel. `subset` must cover
     the union of the bank's opcode subsets — either the text-derived
     `iss.opcode_subset` per program, or FlexiLint's tighter
     reachable-only subsets (`analyze.Analysis.subset`, DESIGN.md §9.11):
@@ -274,9 +303,23 @@ def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
     def whole(i):
         return (0,)
 
+    # fault schedule inputs ride between the segment constants and the
+    # aliased state buffers — only when faults are on, so the fault-free
+    # pallas_call is byte-identical to the pre-FlexiFault build
+    fault_specs = []
+    fault_args = []
+    n_fault = 0
+    if faults is not None and not faults.off:
+        fault_specs = [pl.BlockSpec((tile,), row),
+                       pl.BlockSpec((tile,), row)]
+        fault_args = [lane_key.astype(jnp.uint32), epoch.astype(I32)]
+        n_fault = 2
+    else:
+        faults = None
+
     out = pl.pallas_call(
         functools.partial(_segment_kernel, seg_steps=seg_steps,
-                          subset=sub, timing=timing),
+                          subset=sub, timing=timing, faults=faults),
         grid=(n_lanes // tile,),
         in_specs=[
             pl.BlockSpec((n_progs, bank_width), lambda i: (0, 0)),
@@ -285,6 +328,7 @@ def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
             pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile,), row),
             pl.BlockSpec((n_progs, N_COST), lambda i: (0, 0)),
+        ] + fault_specs + [
             pl.BlockSpec((tile, 16), row2),
             pl.BlockSpec((tile,), row),
             pl.BlockSpec((tile, mem_words), row2),
@@ -315,11 +359,15 @@ def iss_segment_banked(bank: jax.Array, code_len: jax.Array,
             jax.ShapeDtypeStruct((n_lanes,), I32),
         ],
         # state buffers update in place (bank/code_len/mem_len/prog_id/
-        # max_steps/cost, inputs 0-5, are read-only segment constants)
-        input_output_aliases={6: 0, 7: 1, 8: 2, 9: 3, 10: 4, 11: 5,
-                              12: 6, 13: 7},
+        # max_steps/cost, inputs 0-5, plus the optional fault key/epoch
+        # pair, are read-only segment constants)
+        input_output_aliases={6 + n_fault: 0, 7 + n_fault: 1,
+                              8 + n_fault: 2, 9 + n_fault: 3,
+                              10 + n_fault: 4, 11 + n_fault: 5,
+                              12 + n_fault: 6, 13 + n_fault: 7},
         interpret=interpret,
     )(bank, code_len, mem_len, state.prog_id, state.max_steps, cost,
+      *fault_args,
       lanes.regs, lanes.pc, lanes.mem, lanes.halted,
       lanes.n_instr, lanes.n_two_stage, lanes.mix, lanes.n_cycles)
     return PackedState(lanes=ISSState(*out), prog_id=state.prog_id,
@@ -452,7 +500,9 @@ def iss_refill(state: PackedState, take: jax.Array, src: jax.Array,
 
 def iss_segment(code: jax.Array, state: ISSState, *, seg_steps: int,
                 max_steps: int, subset=None,
-                cost: Optional[jax.Array] = None,
+                cost: Optional[jax.Array] = None, faults=None,
+                lane_key: Optional[jax.Array] = None,
+                epoch: Optional[jax.Array] = None,
                 lane_tile: Optional[int] = None,
                 interpret: Optional[bool] = None) -> ISSState:
     """Fused-segment stepper: up to `seg_steps` steps for every lane.
@@ -488,5 +538,6 @@ def iss_segment(code: jax.Array, state: ISSState, *, seg_steps: int,
         code[None, :], jnp.asarray([code.shape[0]], I32), packed,
         seg_steps=seg_steps, subset=subset,
         cost=None if cost is None else cost[None, :],
+        faults=faults, lane_key=lane_key, epoch=epoch,
         lane_tile=lane_tile, interpret=interpret)
     return out.lanes

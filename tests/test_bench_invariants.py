@@ -30,8 +30,8 @@ def bench():
 def test_bench_has_all_studies(bench):
     for key in ("streaming_vs_monolithic", "stepper_ab", "fusion_proof",
                 "packed_vs_sequential", "resident_vs_host_refill",
-                "timing_overhead", "planner_sweep", "flexilint",
-                "device_scaling"):
+                "timing_overhead", "fault_overhead", "planner_sweep",
+                "flexilint", "device_scaling"):
         assert key in bench, f"BENCH_fleet.json lost the {key} study"
 
 
@@ -70,6 +70,25 @@ def test_timing_overhead_invariant(bench):
     assert to["bit_exact"] is True
     assert float(to["overhead_ratio"]) <= 1.5, to["overhead_ratio"]
     assert float(to["mean_cycles_per_item"]) > 0
+
+
+def test_fault_overhead_invariant(bench):
+    """§9.14: a rate-0 fault schedule must be bit-exact with faults-off
+    (injection graph architecturally invisible), DMR must recover the
+    fault-free outputs exactly under a nonzero schedule, and the DMR
+    wall clock must stay within 2.5x of faults-off (two copies per
+    item plus rollback re-execution). The recorded unprotected run must
+    show a nonzero SDC rate — that silent corruption is the carbon
+    model's whole case for pricing redundancy."""
+    fo = bench["fault_overhead"]
+    assert fo["bit_exact"] is True
+    assert fo["dmr_recovered"] is True
+    assert float(fo["dmr_overhead_ratio"]) <= 2.5, (
+        fo["dmr_overhead_ratio"])
+    assert 0.0 < float(fo["sdc_rate"]) <= 1.0, fo["sdc_rate"]
+    assert int(fo["detected"]) > 0
+    assert int(fo["corrected"]) > 0
+    assert int(fo["corrupted_items"]) > 0
 
 
 def test_planner_sweep_invariant(bench):

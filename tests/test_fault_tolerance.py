@@ -39,6 +39,58 @@ def test_checkpoint_keep_n(tmp_path):
     assert sorted(ckpt.all_steps(str(tmp_path))) == [4, 5]
 
 
+def _flip_byte(path, offset):
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        b = f.read(1)
+        f.seek(offset)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+def test_checkpoint_crc_detects_bit_flip(tmp_path):
+    """npz members are STORED (uncompressed): a flipped payload byte
+    loads cleanly and only the per-leaf CRC32 catches it — the error
+    names both the file and the damaged leaf (DESIGN.md §9.14)."""
+    tree = {"a": jnp.arange(1024, dtype=jnp.float32)}
+    ckpt.save(str(tmp_path), 3, tree)
+    npz = str(tmp_path / "step_3" / "arrays.npz")
+    _flip_byte(npz, 300)    # inside the first member's array payload
+    with pytest.raises(ckpt.CheckpointCorrupt) as ei:
+        ckpt.restore(str(tmp_path), tree, step=3)
+    assert ei.value.leaf == "a"
+    assert "arrays.npz" in str(ei.value)
+
+
+def test_checkpoint_truncation_detected(tmp_path):
+    tree = {"a": jnp.arange(256, dtype=jnp.int32)}
+    ckpt.save(str(tmp_path), 1, tree)
+    npz = str(tmp_path / "step_1" / "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 2)
+    with pytest.raises(ckpt.CheckpointCorrupt, match="arrays.npz"):
+        ckpt.restore(str(tmp_path), tree, step=1)
+
+
+def test_auto_resume_falls_back_to_newest_intact(tmp_path):
+    """step=None restores the newest checkpoint that verifies; only
+    when every step is damaged does the corruption surface."""
+    tree1 = {"x": jnp.full(64, 1, jnp.int32)}
+    tree2 = {"x": jnp.full(64, 2, jnp.int32)}
+    ckpt.save(str(tmp_path), 1, tree1)
+    ckpt.save(str(tmp_path), 2, tree2)
+    npz2 = str(tmp_path / "step_2" / "arrays.npz")
+    with open(npz2, "r+b") as f:
+        f.truncate(10)
+    restored, step = ckpt.restore(str(tmp_path), tree1)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["x"]),
+                                  np.asarray(tree1["x"]))
+    npz1 = str(tmp_path / "step_1" / "arrays.npz")
+    _flip_byte(npz1, 250)
+    with pytest.raises(ckpt.CheckpointCorrupt):
+        ckpt.restore(str(tmp_path), tree1)
+
+
 @pytest.mark.slow
 def test_preemption_resume_exact(tmp_path):
     """Train 6 steps straight vs 3 steps -> 'preempt' -> resume 3 more;
@@ -139,6 +191,34 @@ def test_resident_stream_kill_and_resume_bit_exact(tmp_path):
     assert crashed_at is not None and crashed_at <= 10
     res, stats = engine.run_packed(_fleet_groups(), checkpoint_dir=cdir,
                                    checkpoint_every=4, **kw)
+    assert stats.n_segments == ref_stats.n_segments
+    for a, b in zip(ref, res):
+        for f in _FLEET_STATE_FIELDS:
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                          err_msg=f)
+
+
+def test_resident_stream_resume_skips_corrupt_newest(tmp_path):
+    """Kill the stream, then damage its newest on-disk snapshot (bit
+    flip) — auto-resume must fall back to the next-older intact
+    checkpoint and still drain bit-exactly equal to an uninterrupted
+    run (§9.14: one torn write never strands the stream)."""
+    from repro.fleet import engine
+    kw = dict(chunk=16, seg_steps=64, keep_state=True)
+    ref, ref_stats = engine.run_packed(_fleet_groups(), **kw)
+    cdir = str(tmp_path / "fleet-ck")
+    with pytest.raises(engine.InjectedFault):
+        engine.run_packed(_fleet_groups(), checkpoint_dir=cdir,
+                          checkpoint_every=3, _crash_after_segments=10,
+                          **kw)
+    steps = sorted(ckpt.all_steps(cdir))
+    assert len(steps) >= 2      # need an older one to fall back to
+    newest = steps[-1]
+    _flip_byte(os.path.join(cdir, f"step_{newest}", "arrays.npz"), 400)
+    with pytest.raises(ckpt.CheckpointCorrupt):
+        ckpt.verify(cdir, newest)
+    res, stats = engine.run_packed(_fleet_groups(), checkpoint_dir=cdir,
+                                   checkpoint_every=3, **kw)
     assert stats.n_segments == ref_stats.n_segments
     for a, b in zip(ref, res):
         for f in _FLEET_STATE_FIELDS:

@@ -319,6 +319,54 @@ def test_prefetcher_close_drains_inflight_fetch():
     assert len(calls) == n_calls <= 1
 
 
+def test_prefetcher_surfaces_background_exception_with_context():
+    """A source that dies inside the worker thread must fail the NEXT
+    take() (not vanish with the future) with the source, item span, and
+    stream cursor in the message; every later take() keeps failing with
+    the original exception chained — in both background and sync modes."""
+    from repro.fleet.engine import _Prefetcher
+
+    class Boom(ValueError):
+        pass
+
+    def source(start, count):
+        if start >= 4:
+            raise Boom(f"payload for [{start}:{start + count})")
+        return np.zeros((count, 1), np.int32)
+
+    for background in (True, False):
+        pref = _Prefetcher(source, 64, block=4, background=background)
+        pref.take(4)             # first block is healthy
+        with pytest.raises(RuntimeError) as exc:
+            pref.take(4)         # consumes the poisoned fetch
+        msg = str(exc.value)
+        assert "[4:8)" in msg and "cursor" in msg and "source" in msg
+        assert isinstance(exc.value.__cause__, Boom)
+        with pytest.raises(RuntimeError, match="already failed") as exc2:
+            pref.take(1)         # latched: the stream stays dead
+        assert isinstance(exc2.value.__cause__, Boom)
+        pref.close()
+
+
+def test_prefetcher_close_is_idempotent():
+    """close() on every engine exit path means it can run twice (e.g.
+    once in an except block, once in finally) — the second call must be
+    a no-op, and take() after close() must fail loudly, not fall back
+    to a synchronous fetch."""
+    from repro.fleet.engine import _Prefetcher
+
+    def source(start, count):
+        return np.zeros((count, 1), np.int32)
+
+    for background in (True, False):
+        pref = _Prefetcher(source, 16, block=4, background=background)
+        pref.take(2)
+        pref.close()
+        pref.close()             # idempotent
+        with pytest.raises(RuntimeError, match="closed"):
+            pref.take(1)
+
+
 def test_engine_prefetch_off_matches_on():
     from repro.flexibench.base import get
     from repro.fleet import run_workload_stream

@@ -151,7 +151,7 @@ def test_point_mass_equals_total_grid_bitwise():
                          path="jnp", dtype=np.float64)
         resp = run_sweep(spec, path="pallas", tile_cells=12,
                          dtype=np.float64)
-    sq = np.s_[:, :, 0, 0, 0, 0]
+    sq = np.s_[:, :, 0, 0, 0, 0, 0]
     np.testing.assert_array_equal(res.p50[sq], best)
     np.testing.assert_array_equal(res.min[sq], best)
     np.testing.assert_array_equal(res.max[sq], best)
@@ -177,7 +177,7 @@ def test_fleet_mean_scales_with_volume():
     np.testing.assert_array_equal(
         res.fleet_mean,
         (res.mean.astype(np.float64)
-         * v[None, None, None, :, None, None]).astype(np.float32))
+         * v[None, None, None, :, None, None, None]).astype(np.float32))
 
 
 def test_serving_plan_jnp_equals_plan_grid_bitwise():
@@ -215,7 +215,7 @@ def test_timing_axis_orders_base_dynamic_wcet():
         timing=("base", "dynamic", "wcet"), wcet_cycles=wcet,
         draws=4, seed=0)
     res = run_sweep(spec, path="jnp")
-    base, dyn, wc = (res.mean_op[0, 0, 0, 0, 0, t] for t in range(3))
+    base, dyn, wc = (res.mean_op[0, 0, 0, 0, 0, t, 0] for t in range(3))
     assert base < dyn < wc
 
 
@@ -227,6 +227,10 @@ def test_spec_validation_errors():
         run_sweep(dataclasses.replace(spec, draws=0))
     with pytest.raises(ValueError, match="unknown timing"):
         run_sweep(dataclasses.replace(spec, timing=("typical",)))
+    with pytest.raises(ValueError, match="unknown redundancy"):
+        run_sweep(dataclasses.replace(spec, redundancies=("quad",)))
+    with pytest.raises(ValueError, match="fault rates"):
+        run_sweep(dataclasses.replace(spec, fault_rates=(-1.0,)))
     with pytest.raises(ValueError, match="wcet"):
         run_sweep(dataclasses.replace(spec, timing=("wcet",)))
     with pytest.raises(ValueError, match="enable_x64"):
@@ -254,6 +258,36 @@ def test_plan_grid_no_warnings_on_infeasible():
                          lifetimes_days=np.array([365.0]),
                          qps_grid=np.array([100.0, 1e15, np.inf]))
     assert (plan["variant_idx"][0, 1:] == -1).all()
+
+
+# ---------------------------------------------- redundancy axis (§9.14)
+def test_redundancy_rate_zero_reproduces_selection():
+    """At fault rate 0 spare copies only cost, never pay: the joint
+    (core, redundancy) argmin picks 'none' everywhere and its core half
+    IS `selection_map` — the redundancy-aware planner reproduces
+    today's selections exactly."""
+    spec, lifes = _point_spec(draws=4)
+    spec = dataclasses.replace(spec, fault_rates=(0.0, 1e-4),
+                               redundancies=("none", "dmr", "tmr"))
+    smap = selection_map(PROF, np.asarray(lifes),
+                         np.asarray(spec.execs_per_day))
+    with jax.experimental.enable_x64():
+        res = run_sweep(spec, path="jnp", tile_cells=5, dtype=np.float64)
+    sq0 = np.s_[:, :, 0, 0, 0, 0, 0]              # fault-rate-0 slice
+    np.testing.assert_array_equal(res.best_redundancy[sq0], 0)
+    np.testing.assert_array_equal(res.best_core[sq0], smap)
+
+
+def test_redundancy_expanded_paths_bit_exact():
+    """jnp and Pallas reductions stay bit-exact with the candidate axis
+    expanded to core x redundancy and a nonzero fault-rate axis."""
+    spec = dataclasses.replace(_mixture_spec(draws=16),
+                               fault_rates=(0.0, 1e-3),
+                               redundancies=("none", "dmr"))
+    a = run_sweep(spec, path="jnp", tile_cells=13)
+    b = run_sweep(spec, path="pallas", tile_cells=48)
+    _assert_results_equal(a, b)
+    assert a.counts.shape[-1] == spec.n_candidates
 
 
 # ------------------------------------------------ crossover vectorized
@@ -284,9 +318,10 @@ def test_frontier_is_nondominated_and_annotated():
     for r in rows:
         assert r["workload"] in spec.workloads
         assert r["core"] in [c.name for c in spec.cores]
-        di, fi, ii, vi, wi, ti = spec.decode_cell(r["cell"])
+        di, fi, ii, vi, wi, ti, fri = spec.decode_cell(r["cell"])
         assert spec.workloads[wi] == r["workload"]
         assert spec.dists[di].name == r["dist"]
+        assert spec.fault_rates[fri] == r["fault_rate"]
 
 
 def test_mixture_of_points_hits_both_components():
